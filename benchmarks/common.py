@@ -1,0 +1,100 @@
+"""Shared benchmark utilities.
+
+Quality proxy (DESIGN.md §7): the paper scores open answers with a GPT
+judge; offline we ground quality in the model itself —
+  * KL(oracle ‖ policy) over first-output-token logits
+  * top-1 agreement with the full-recompute oracle over a greedy rollout
+  * ``score`` = 10·exp(−KL)  (monotone map to the paper's 0–10 scale)
+TTFT is wall-clock of the policy's prefill path on CPU, second call
+(jit-warm) — relative orderings are the claim, not absolute numbers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import KVLibrary
+from repro.configs import get_smoke_config
+from repro.core import POLICIES, PrefixStore, precompute_media_kv
+from repro.data import SYSTEM_PROMPT, ByteTokenizer, image_embeds
+from repro.models import build_model
+
+
+def build_bench_model(arch: str = "llava-1.6-7b", seed: int = 0):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def populate_library(model, params, dialogues, media_len, spool_dir):
+    lib = KVLibrary(spool_dir=spool_dir)
+    seen = set()
+    for d in dialogues:
+        for mid in d.media_ids:
+            if mid in seen:
+                continue
+            emb = image_embeds(mid, media_len, model.cfg.d_model)
+            k, v = precompute_media_kv(model, params, jnp.asarray(emb))
+            lib.put(d.prompt.user_id, mid, k, v)
+            seen.add(mid)
+    return lib
+
+
+def make_prefix_store(model, params):
+    tok = ByteTokenizer()
+    sys_toks = tok.encode(SYSTEM_PROMPT, bos=True)
+    cache = model.make_cache(1, len(sys_toks) + 1)
+    _, cache = model.prefill(params, jnp.asarray(sys_toks[None]), cache)
+    ps = PrefixStore()
+    ps.put(sys_toks, np.asarray(cache["k"][:, 0, :len(sys_toks)]),
+           np.asarray(cache["v"][:, 0, :len(sys_toks)]))
+    return ps
+
+
+def kl_div(oracle_logits, policy_logits) -> float:
+    p = jax.nn.softmax(jnp.asarray(oracle_logits))
+    q = jax.nn.log_softmax(jnp.asarray(policy_logits))
+    return float(jnp.sum(p * (jnp.log(p + 1e-20) - q)))
+
+
+def score_of(kl: float) -> float:
+    return 10.0 * float(np.exp(-kl))
+
+
+def run_policy_timed(name, model, params, prompt, lib, **kw):
+    """Run twice (same shapes) and report the jit-warm wall time."""
+    POLICIES[name](model, params, prompt, lib, **kw)
+    res = POLICIES[name](model, params, prompt, lib, **kw)
+    return res
+
+
+def evaluate(name, model, params, dialogues, lib, prefix_store=None,
+             **kw) -> Dict[str, float]:
+    ttfts, kls, top1 = [], [], []
+    for d in dialogues:
+        oracle = POLICIES["full_recompute"](model, params, d.prompt)
+        res = run_policy_timed(name, model, params, d.prompt, lib,
+                               prefix_store=prefix_store, **kw)
+        ttfts.append(res.stats["wall_s"])
+        kls.append(kl_div(oracle.first_logits, res.first_logits))
+        top1.append(float(np.argmax(res.first_logits)
+                          == np.argmax(oracle.first_logits)))
+    kl = float(np.mean(kls))
+    return {"policy": res.stats["policy"], "ttft_ms": 1e3 * float(np.mean(ttfts)),
+            "kl": kl, "score": score_of(kl), "top1": float(np.mean(top1)),
+            "n_recomputed": res.stats["n_recomputed"],
+            "engine_steps": res.stats["engine_steps"]}
+
+
+def emit(rows: List[dict], name: str):
+    """Print the ``name,us_per_call,derived`` CSV contract + a table."""
+    for r in rows:
+        us = r.get("ttft_ms", 0.0) * 1e3
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("ttft_ms",))
+        print(f"{name}/{r.get('policy', r.get('label', '?'))},{us:.0f},{derived}")

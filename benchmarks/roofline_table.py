@@ -1,0 +1,38 @@
+"""§Roofline — render the 3-term roofline table from the dry-run JSON."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path="results/dryrun_single.json"):
+    if not os.path.exists(path):
+        return []
+    return json.load(open(path))
+
+
+def main(path="results/dryrun_single.json"):
+    rows = load(path)
+    print(f"{'arch':22s} {'shape':12s} {'step':13s} "
+          f"{'Tc(ms)':>9s} {'Tm(ms)':>9s} {'Tcoll(ms)':>9s} "
+          f"{'bottleneck':>11s} {'useful':>7s}")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:22s} {r['shape']:12s} {'skip':13s} "
+                  f"{'—':>9s} {'—':>9s} {'—':>9s} {'—':>11s} {'—':>7s}")
+            continue
+        if r.get("status") != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} ERROR {r.get('error','')[:40]}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['step']:13s} "
+              f"{r['t_compute_s']*1e3:9.2f} {r['t_memory_s']*1e3:9.2f} "
+              f"{r['t_collective_s']*1e3:9.2f} {r['bottleneck']:>11s} "
+              f"{r['useful_flops_ratio']:7.2f}")
+        print(f"{r['arch']}/{r['shape']},"
+              f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.0f},"
+              f"bottleneck={r['bottleneck']};useful={r['useful_flops_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

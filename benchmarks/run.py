@@ -1,0 +1,40 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables).
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig9]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark (e.g. fig9)")
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_mpic_k, fig3_prefix_vs_fullreuse,
+                            fig4_attention_sparsity, fig6_parallel_transfer,
+                            fig8_kv_distance, fig9_main_comparison,
+                            fig10_sensitivity, roofline_table)
+    suite = {
+        "fig3": fig3_prefix_vs_fullreuse.main,
+        "fig4": fig4_attention_sparsity.main,
+        "fig6": fig6_parallel_transfer.main,
+        "fig8": fig8_kv_distance.main,
+        "fig9": fig9_main_comparison.main,
+        "fig10": fig10_sensitivity.main,
+        "ablation_mpic_k": ablation_mpic_k.main,
+        "roofline": roofline_table.main,
+    }
+    names = [args.only] if args.only else list(suite)
+    for name in names:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        suite[name]()
+        print(f"[{name} done in {time.time() - t0:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

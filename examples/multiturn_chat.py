@@ -1,0 +1,72 @@
+"""The paper's Fig. 1 dialogue, end to end: a multi-turn travel chat where
+turn 2 reuses turn-1's images at DIFFERENT positions, and an MRAG step
+links externally retrieved images mid-conversation.
+
+    PYTHONPATH=src python examples/multiturn_chat.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_smoke_config
+from repro.data import ByteTokenizer, image_embeds
+from repro.core import Prompt, media_segment, text_segment
+from repro.models import build_model
+from repro.serving import EngineConfig, MPICEngine, Request
+
+cfg = get_smoke_config("llava-1.6-7b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+tok = ByteTokenizer()
+eng = MPICEngine(model, params, EngineConfig(max_seq_len=512, decode_slots=2))
+
+# user uploads two vacation photos (workflow ①)
+for mid in ("EIFFEL2025", "LOUVRE2025"):
+    eng.upload("alice", mid, image_embeds(mid, 32, cfg.d_model))
+# the operator's dynamic library holds hotel photos (for MRAG, step ④)
+for mid in ("HOTEL01", "HOTEL02"):
+    eng.upload("*", mid, image_embeds(mid, 24, cfg.d_model), dynamic=True)
+
+
+def seg(text):
+    return text_segment(tok.encode(text))
+
+
+def img(mid, ln=32):
+    return media_segment(mid, image_embeds(mid, ln, cfg.d_model))
+
+
+# ── turn 1: interleaved text + images ──────────────────────────────────────
+turn1 = Prompt([
+    seg("Look at these pictures from our trip! "),
+    img("EIFFEL2025"),
+    seg(" and the museum "),
+    img("LOUVRE2025"),
+    seg(" — can you describe them?"),
+], user_id="alice")
+r1 = eng.submit(Request(prompt=turn1, max_new_tokens=6, policy="mpic",
+                        policy_kwargs={"k": 8}))
+
+# ── turn 2: SAME images, different opening words & positions — the case
+# that invalidates every prefix-based cache ─────────────────────────────────
+turn2 = Prompt([
+    seg("We're planning to go back next year. Between "),
+    img("EIFFEL2025"),
+    img("LOUVRE2025"),
+    seg(" which should we revisit first? Also find hotels nearby."),
+], user_id="alice")
+r2 = Request(prompt=turn2, max_new_tokens=6, policy="mpic",
+             policy_kwargs={"k": 8})
+# the hotel question triggers retrieval from the dynamic library
+r2.retrieval_query = image_embeds("HOTEL01", 24, cfg.d_model).mean(0)
+r2.retrieval_top_k = 2
+eng.submit(r2)
+
+eng.run()
+for name, r in (("turn 1", r1), ("turn 2", r2)):
+    st = r.prefill_stats
+    print(f"{name}: policy={st['policy']} reused={st['n_reused']} "
+          f"recomputed={st['n_recomputed']} steps={st['engine_steps']} "
+          f"linked={r.linked_media}")
+print("\nposition independence: turn 2 reused the SAME stored image KV at "
+      "shifted offsets (RoPE-relinked), plus MRAG-linked hotel KV — zero "
+      "media recompute across the whole conversation.")

@@ -1,0 +1,49 @@
+"""Quickstart: position-independent multimodal KV reuse in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Uploads two "images" (stub ViT embeddings), then serves two prompts whose
+OPENING WORDS DIFFER — the case that breaks prefix caching — and shows
+MPIC reusing the image KV at different offsets with near-oracle quality.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.cache import KVLibrary
+from repro.configs import get_smoke_config
+from repro.core import (POLICIES, Prompt, media_segment,
+                        precompute_media_kv, text_segment)
+from repro.data import ByteTokenizer, image_embeds
+from repro.models import build_model
+
+cfg = get_smoke_config("llava-1.6-7b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+tok = ByteTokenizer()
+lib = KVLibrary(spool_dir="/tmp/mpic_quickstart")
+
+# workflow ①: upload files -> precompute KV once -> store in the library
+for mid in ("EIFFEL2025", "LOUVRE2025"):
+    emb = image_embeds(mid, 32, cfg.d_model)
+    k, v = precompute_media_kv(model, params, jnp.asarray(emb))
+    lib.put("alice", mid, k, v)
+    print(f"uploaded {mid}: KV {k.nbytes * 2 / 1e6:.1f} MB -> library")
+
+# two queries with different openings referencing the same images
+for opening in ("We took these photos in Paris.",
+                "We're planning to visit these landmarks."):
+    prompt = Prompt([
+        text_segment(tok.encode(opening, bos=True)),
+        media_segment("EIFFEL2025", image_embeds("EIFFEL2025", 32, cfg.d_model)),
+        media_segment("LOUVRE2025", image_embeds("LOUVRE2025", 32, cfg.d_model)),
+        text_segment(tok.encode(" Compare the two landmarks.")),
+    ], user_id="alice")
+
+    oracle = POLICIES["full_recompute"](model, params, prompt)
+    res = POLICIES["mpic"](model, params, prompt, lib, k=8)
+    agree = np.argmax(res.first_logits) == np.argmax(oracle.first_logits)
+    print(f"\nopening={opening!r}")
+    print(f"  mpic-8: reused {res.stats['n_reused']}/{prompt.total_len} "
+          f"tokens, single step, wall={res.stats['wall_s'] * 1e3:.0f} ms")
+    print(f"  first-token agreement with full recompute: {bool(agree)}")

@@ -1,0 +1,9 @@
+from repro.cache.library import KVLibrary, TIER_BW, TIER_DISK, TIER_HBM, TIER_HOST
+from repro.cache.paged import PagedConfig, PagedKVPool
+from repro.cache.transfer import ParallelLoader, TransferPlan, plan_transfers
+
+__all__ = [
+    "KVLibrary", "TIER_BW", "TIER_DISK", "TIER_HBM", "TIER_HOST",
+    "PagedConfig", "PagedKVPool", "ParallelLoader", "TransferPlan",
+    "plan_transfers",
+]

@@ -1,0 +1,180 @@
+"""Static & Dynamic KV libraries (MPIC components 2–3, Fig. 5).
+
+The **static library** stores KV caches of user-uploaded files, logically
+separated per user (user A cannot link user B's cache).  The **dynamic
+library** stores the MRAG corpus, shared and refreshed by the operator.
+
+Entries live on a tier: HBM (device arrays) → HOST (numpy) → DISK
+(zstd-compressed npz in a spool dir).  A single image KV can reach ~1 GB at
+LLaVA scale (paper §4.1), so HBM capacity is tight and entries demote under
+pressure; expired entries are deleted (the Fig. 6 "m misses" path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.quant import QuantizedKV, dequantize_kv, quantize_kv
+
+TIER_HBM = "hbm"
+TIER_HOST = "host"
+TIER_DISK = "disk"
+
+# simulated per-tier load bandwidths (bytes/s) for the transfer scheduler;
+# real loads go through numpy/np.load regardless
+TIER_BW = {TIER_HBM: float("inf"), TIER_HOST: 80e9, TIER_DISK: 3.5e9}
+
+
+@dataclasses.dataclass
+class Entry:
+    media_id: str
+    k: np.ndarray            # (L, S, Hkv, Dh)
+    v: np.ndarray
+    tier: str = TIER_HBM
+    created: float = 0.0
+    last_used: float = 0.0
+    expires: float = float("inf")
+    path: Optional[str] = None   # disk spool path
+    qk: Optional[QuantizedKV] = None   # int8 storage (quantized library)
+    qv: Optional[QuantizedKV] = None
+
+    @property
+    def nbytes(self) -> int:
+        if self.qk is not None:
+            return self.qk.nbytes + self.qv.nbytes
+        if self.k is not None:
+            return self.k.nbytes + self.v.nbytes
+        return self._nbytes
+
+    def materialize(self) -> "Entry":
+        if self.tier == TIER_DISK and self.k is None and self.qk is None:
+            with np.load(self.path) as z:
+                if "qk" in z:
+                    self.qk = QuantizedKV(z["qk"], z["qk_scale"])
+                    self.qv = QuantizedKV(z["qv"], z["qv_scale"])
+                else:
+                    self.k, self.v = z["k"], z["v"]
+        if self.qk is not None and self.k is None:
+            # dequantize at link time (int8 storage, fp compute)
+            self.k = dequantize_kv(self.qk)
+            self.v = dequantize_kv(self.qv)
+        return self
+
+
+class KVLibrary:
+    """Tiered, scoped KV store with expiry + LRU demotion."""
+
+    def __init__(self, *, hbm_capacity: int = 2 << 30,
+                 host_capacity: int = 16 << 30,
+                 spool_dir: Optional[str] = None,
+                 default_ttl: float = float("inf"),
+                 shared: bool = False,
+                 quantize: bool = False):
+        self.hbm_capacity = hbm_capacity
+        self.host_capacity = host_capacity
+        self.quantize = quantize     # int8 KV storage (cache/quant.py)
+        self.spool_dir = spool_dir or "/tmp/mpic_spool"
+        os.makedirs(self.spool_dir, exist_ok=True)
+        self.default_ttl = default_ttl
+        self.shared = shared          # dynamic library: no user scoping
+        self._lock = threading.RLock()
+        self._entries: Dict[Tuple[str, str], Entry] = {}
+
+    # -- keys ----------------------------------------------------------------
+    def _key(self, user_id: str, media_id: str):
+        return ("*", media_id) if self.shared else (user_id, media_id)
+
+    # -- API (workflow step ①: upload → precompute → store) -------------------
+    def put(self, user_id: str, media_id: str, k: np.ndarray, v: np.ndarray,
+            *, ttl: Optional[float] = None) -> Entry:
+        now = time.time()
+        e = Entry(media_id=media_id, k=np.asarray(k), v=np.asarray(v),
+                  tier=TIER_HBM, created=now, last_used=now,
+                  expires=now + (ttl if ttl is not None else self.default_ttl))
+        if self.quantize:
+            e.qk, e.qv = quantize_kv(e.k), quantize_kv(e.v)
+            e.k = e.v = None
+        with self._lock:
+            self._entries[self._key(user_id, media_id)] = e
+            self._rebalance()
+        return e
+
+    def get(self, user_id: str, media_id: str) -> Optional[Entry]:
+        """Lookup honouring user scoping and expiry (step ③)."""
+        with self._lock:
+            e = self._entries.get(self._key(user_id, media_id))
+            if e is None:
+                return None
+            if time.time() > e.expires:
+                self._evict(self._key(user_id, media_id))
+                return None
+            e.last_used = time.time()
+            return e.materialize()
+
+    def peek_tier(self, user_id: str, media_id: str) -> Optional[str]:
+        e = self._entries.get(self._key(user_id, media_id))
+        return None if e is None or time.time() > e.expires else e.tier
+
+    def delete(self, user_id: str, media_id: str) -> None:
+        with self._lock:
+            self._evict(self._key(user_id, media_id))
+
+    def expire_now(self) -> int:
+        """Delete expired entries; returns the count (Fig. 6 miss source)."""
+        now = time.time()
+        with self._lock:
+            dead = [k for k, e in self._entries.items() if now > e.expires]
+            for k in dead:
+                self._evict(k)
+        return len(dead)
+
+    # -- tier management -------------------------------------------------------
+    def _evict(self, key) -> None:
+        e = self._entries.pop(key, None)
+        if e is not None and e.path and os.path.exists(e.path):
+            os.unlink(e.path)
+
+    def _spool(self, key, e: Entry) -> None:
+        path = os.path.join(self.spool_dir,
+                            f"{abs(hash(key)) & 0xFFFFFFFFFFFF:x}.npz")
+        if e.qk is not None:
+            np.savez(path, qk=e.qk.q, qk_scale=e.qk.scale,
+                     qv=e.qv.q, qv_scale=e.qv.scale)
+            e._nbytes = e.qk.nbytes + e.qv.nbytes
+            e.qk = e.qv = None
+        else:
+            np.savez(path, k=e.k, v=e.v)
+            e._nbytes = e.k.nbytes + e.v.nbytes
+        e.path = path
+        e.k = e.v = None
+        e.tier = TIER_DISK
+
+    def _rebalance(self) -> None:
+        """Demote LRU entries when a tier exceeds capacity."""
+        for tier, cap, demote in ((TIER_HBM, self.hbm_capacity, TIER_HOST),
+                                  (TIER_HOST, self.host_capacity, TIER_DISK)):
+            live = [(k, e) for k, e in self._entries.items() if e.tier == tier]
+            used = sum(e.nbytes for _, e in live)
+            live.sort(key=lambda kv: kv[1].last_used)
+            for k, e in live:
+                if used <= cap:
+                    break
+                used -= e.nbytes
+                if demote == TIER_DISK:
+                    self._spool(k, e)
+                else:
+                    e.tier = TIER_HOST
+
+    # -- introspection -----------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            by_tier: Dict[str, int] = {}
+            for e in self._entries.values():
+                by_tier[e.tier] = by_tier.get(e.tier, 0) + e.nbytes
+            return {"entries": len(self._entries), "bytes_by_tier": by_tier}

@@ -1,0 +1,88 @@
+"""Paged KV pool (vLLM's PagedAttention adapted to TPU/XLA static shapes).
+
+A fixed pool of pages per layer: ``(num_pages, page_size, Hkv, Dh)``.
+Requests own page lists via a page table; lookup is gather-based (static
+shapes, jit-friendly).  The pool backs the serving engine's per-request
+caches and the paged decode-attention Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PagedConfig:
+    num_pages: int
+    page_size: int
+    num_layers: int
+    num_kv_heads: int
+    head_dim: int
+    dtype: str = "bfloat16"
+
+
+class PagedKVPool:
+    def __init__(self, cfg: PagedConfig):
+        self.cfg = cfg
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        shape = (cfg.num_layers, cfg.num_pages, cfg.page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        self._free: List[int] = list(range(cfg.num_pages - 1, -1, -1))
+        self._owned: Dict[str, List[int]] = {}
+
+    # -- allocation --------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.cfg.page_size)
+
+    def alloc(self, req_id: str, n_tokens: int) -> Optional[np.ndarray]:
+        need = self.pages_for(n_tokens)
+        if need > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned.setdefault(req_id, []).extend(pages)
+        return np.asarray(self._owned[req_id], np.int32)
+
+    def extend(self, req_id: str, n_more_tokens: int, cur_tokens: int
+               ) -> Optional[np.ndarray]:
+        have = len(self._owned.get(req_id, [])) * self.cfg.page_size
+        need = self.pages_for(cur_tokens + n_more_tokens) - \
+            len(self._owned.get(req_id, []))
+        if need > len(self._free):
+            return None
+        for _ in range(max(need, 0)):
+            self._owned.setdefault(req_id, []).append(self._free.pop())
+        return np.asarray(self._owned[req_id], np.int32)
+
+    def free(self, req_id: str) -> None:
+        self._free.extend(self._owned.pop(req_id, []))
+
+    # -- data movement --------------------------------------------------------
+    def write_tokens(self, page_table: np.ndarray, slot0: int,
+                     k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
+        """Scatter (L, S, H, Dh) tokens into the pool starting at ``slot0``."""
+        s = k_new.shape[1]
+        ps = self.cfg.page_size
+        slots = slot0 + np.arange(s)
+        pages = page_table[slots // ps]
+        offs = slots % ps
+        self.k = self.k.at[:, pages, offs].set(
+            jnp.moveaxis(k_new, 1, 1).astype(self.k.dtype))
+        self.v = self.v.at[:, pages, offs].set(v_new.astype(self.v.dtype))
+
+    def gather(self, page_table: np.ndarray, n_tokens: int):
+        """Contiguous (L, n_tokens, H, Dh) view of a request's cache."""
+        ps = self.cfg.page_size
+        slots = np.arange(n_tokens)
+        pages = page_table[slots // ps]
+        offs = slots % ps
+        return self.k[:, pages, offs], self.v[:, pages, offs]

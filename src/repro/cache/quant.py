@@ -1,0 +1,38 @@
+"""Int8 KV-cache quantization (composable compression tier).
+
+The paper treats KV compression (CacheGen, Liu et al. 2024c) as orthogonal
+to MPIC; here it composes directly: the library stores media KV int8
+(per-(layer, head, channel) symmetric scales — 2× smaller than bf16, 4×
+smaller than fp32 disk spools), and the Linker dequantizes at link time.
+Reuse quality impact is bounded by the same selective-recompute mechanism
+that absorbs the position/context error (tested in
+tests/test_quant.py::test_mpic_quality_with_quantized_library).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QuantizedKV:
+    q: np.ndarray        # int8, same shape as the source
+    scale: np.ndarray    # fp32, shape (L, 1, H, Dh) — per layer/head/channel
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.nbytes + self.scale.nbytes
+
+
+def quantize_kv(x: np.ndarray) -> QuantizedKV:
+    """x (L, S, H, Dh) fp -> int8 with per-(L,H,Dh) symmetric scales."""
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=1, keepdims=True)          # (L,1,H,Dh)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return QuantizedKV(q=q, scale=scale)
+
+
+def dequantize_kv(qkv: QuantizedKV) -> np.ndarray:
+    return qkv.q.astype(np.float32) * qkv.scale

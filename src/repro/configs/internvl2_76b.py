@@ -1,0 +1,24 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 backbone [arXiv:2404.16821].
+
+Backbone-only per the carve-out: the ViT/projector frontend is a stub;
+``input_specs()`` supplies precomputed patch embeddings of the right shape.
+"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    arch_type="vlm",
+    source="arXiv:2404.16821",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=1_000_000.0,
+    is_multimodal=True,
+    media_token_len=256,
+    sliding_window=8192,  # long_500k decode uses the sliding-window path
+)
+
+SMOKE_CONFIG = reduced(CONFIG)

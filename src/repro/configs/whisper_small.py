@@ -1,0 +1,30 @@
+"""whisper-small [audio] — encoder-decoder [arXiv:2212.04356].
+
+Backbone-only per the carve-out: the mel-spectrogram + conv frontend is a
+stub; ``input_specs()`` supplies precomputed frame embeddings (B, 1500, d).
+Decoder self-attn KV is request-specific; the MPIC-cacheable artifact for
+this family is the decoder *cross-attention* KV over cached audio segments
+(position-free on the encoder side).  long_500k is skipped (enc-dec decoder
+context is architecturally small) — noted in DESIGN.md.
+"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    arch_type="audio",
+    source="arXiv:2212.04356",
+    num_layers=12,            # decoder layers
+    encoder_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_seq=1500,
+    learned_pos_emb=True,
+    max_position_embeddings=32768,
+)
+
+SMOKE_CONFIG = reduced(CONFIG)

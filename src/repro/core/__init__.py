@@ -1,0 +1,21 @@
+"""MPIC core — the paper's primary contribution.
+
+Position-independent multimodal context caching: prompt segments,
+token-selection strategies (MPIC-k / CacheBlend-r), the Linker (RoPE
+relocation + dummy cache), and the four context-caching policies.
+"""
+from repro.core.linker import LinkResult, link_prompt, precompute_media_kv
+from repro.core.policies import POLICIES, PolicyResult, PrefixStore
+from repro.core.segments import Prompt, Segment, media_segment, text_segment
+from repro.core.select import (
+    cacheblend_selection,
+    full_reuse_selection,
+    mpic_selection,
+)
+
+__all__ = [
+    "LinkResult", "link_prompt", "precompute_media_kv",
+    "POLICIES", "PolicyResult", "PrefixStore",
+    "Prompt", "Segment", "media_segment", "text_segment",
+    "cacheblend_selection", "full_reuse_selection", "mpic_selection",
+]

@@ -1,0 +1,115 @@
+"""The MPIC **Linker** — blends library KV caches into a per-request cache.
+
+Analogous to a linker for position-independent code: stored segment caches
+are "compiled" at canonical position 0; at link time each is *relocated* to
+its offset in the prompt (exact RoPE delta rotation) and placed into the
+request's KV cache.  Selected (to-be-recomputed) slots get the **dummy
+cache** (zeros) — their real K/V are scattered in during the single-step
+selective-attention prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.segments import Prompt
+from repro.core.select import selection_indices
+from repro.models.layers import INVALID_POS, rope_relink
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class LinkResult:
+    cache: dict                 # blended KV cache (batch=1)
+    sel_idx: np.ndarray         # (S_sel,) positions of recomputed tokens
+    sel_tokens: np.ndarray      # (S_sel,) token ids (media slots: pad 0)
+    sel_media_embeds: np.ndarray  # (S_sel, D)
+    sel_media_mask: np.ndarray    # (S_sel,)
+    n_reused: int
+    n_recomputed: int
+    misses: list                # media ids absent from the library
+
+
+def precompute_media_kv(model: Model, params, embeds: jnp.ndarray):
+    """KV of a media segment standalone (canonical position 0).
+
+    embeds (length, D) -> (k, v) each (L, length, Hkv, Dh).  This is what
+    the library stores when a user uploads a file (workflow step ①).
+    """
+    cfg = model.cfg
+    length = embeds.shape[0]
+    cache = model.make_cache(1, length)
+    tokens = jnp.zeros((1, length), jnp.int32)
+    mask = jnp.ones((1, length), bool)
+    _, cache = model.prefill(params, tokens, cache,
+                             media_embeds=embeds[None], media_mask=mask)
+    return np.asarray(cache["k"][:, 0]), np.asarray(cache["v"][:, 0])
+
+
+def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
+                *, kv_len: Optional[int] = None) -> LinkResult:
+    """Build the blended cache for one request (workflow step ⑤)."""
+    cfg = model.cfg
+    total = prompt.total_len
+    kv_len = kv_len or total + 1          # +1 scratch slot for pad scatter
+    assert kv_len >= total + 1
+
+    sel = selection.copy()
+    misses = []
+    placed = []                            # (offset, k_np, v_np, length)
+    for off, seg in prompt.media_segments():
+        entry = library.get(prompt.user_id, seg.media_id) if library else None
+        if entry is None:
+            # expired/missing: recompute the whole segment (paper Fig. 6, m misses)
+            sel[off:off + seg.length] = True
+            misses.append(seg.media_id)
+        else:
+            placed.append((off, entry.k, entry.v, seg.length))
+
+    L, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    k_buf = np.zeros((L, kv_len, Hkv, Dh), np.float32)
+    v_buf = np.zeros((L, kv_len, Hkv, Dh), np.float32)
+    pos = np.full((kv_len,), INVALID_POS, np.int64)
+
+    for off, k_seg, v_seg, length in placed:
+        k_linked = k_seg
+        if cfg.rope_theta and not cfg.learned_pos_emb:
+            # exact position relocation: K(p+Δ) = R(Δ)·K(p)
+            delta = jnp.full((length,), off, jnp.int32)
+            k_linked = np.asarray(
+                rope_relink(jnp.asarray(k_seg), delta, cfg.rope_theta))
+        k_buf[:, off:off + length] = k_linked
+        v_buf[:, off:off + length] = v_seg
+        pos[off:off + length] = np.arange(off, off + length)
+
+    # dummy cache: selected slots stay zero and INVALID until the selective
+    # prefill scatters the recomputed K/V into them (single-step property)
+    sel_idx = selection_indices(sel)
+    pos[sel_idx] = INVALID_POS
+    k_buf[:, sel_idx] = 0.0
+    v_buf[:, sel_idx] = 0.0
+
+    dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    cache = {
+        "k": jnp.asarray(k_buf[:, None], dt).reshape(L, 1, kv_len, Hkv, Dh),
+        "v": jnp.asarray(v_buf[:, None], dt).reshape(L, 1, kv_len, Hkv, Dh),
+        "pos": jnp.asarray(pos[None], jnp.int32),
+    }
+
+    flat_tokens = prompt.flat_tokens()
+    media_mask = prompt.media_mask()
+    media_embeds = prompt.flat_media_embeds(cfg.d_model)
+    return LinkResult(
+        cache=cache,
+        sel_idx=sel_idx,
+        sel_tokens=flat_tokens[sel_idx],
+        sel_media_embeds=media_embeds[sel_idx],
+        sel_media_mask=media_mask[sel_idx],
+        n_reused=int(total - sel.sum()),
+        n_recomputed=int(sel.sum()),
+        misses=misses,
+    )

@@ -1,0 +1,66 @@
+"""Token-selection strategies for partial reuse.
+
+MPIC-k (the paper's): recompute *all text tokens* plus the *first k tokens
+of every media segment* — justified by Insights 1–3 (attention sparsity,
+attention sinks at segment starts, largest KV deviation at segment starts).
+
+CacheBlend-r: recompute the top r% of tokens by KV deviation (requires a
+probe forward to *measure* deviation — the two-step cost MPIC avoids).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.segments import Prompt
+
+
+def mpic_selection(prompt: Prompt, k: int) -> np.ndarray:
+    """Boolean mask (total_len,) — True = recompute (selected)."""
+    sel = np.zeros((prompt.total_len,), bool)
+    for off, seg in zip(prompt.offsets(), prompt.segments):
+        if seg.is_media:
+            sel[off:off + min(k, seg.length)] = True
+        else:
+            sel[off:off + seg.length] = True
+    return sel
+
+
+def full_reuse_selection(prompt: Prompt) -> np.ndarray:
+    """Only text is recomputed (k = 0); media KV fully reused."""
+    return mpic_selection(prompt, k=0)
+
+
+def cacheblend_selection(prompt: Prompt, deviation: np.ndarray,
+                         r: float) -> np.ndarray:
+    """Top r% of *media* tokens by measured KV deviation, plus all text.
+
+    deviation: (total_len,) per-token deviation score (text entries ignored).
+    """
+    sel = full_reuse_selection(prompt)
+    media = prompt.media_mask()
+    n_media = int(media.sum())
+    n_pick = int(round(r * n_media))
+    if n_pick > 0:
+        dev = np.where(media, deviation, -np.inf)
+        picks = np.argpartition(dev, -n_pick)[-n_pick:]
+        sel[picks] = True
+    return sel
+
+
+def selection_indices(sel: np.ndarray) -> np.ndarray:
+    return np.nonzero(sel)[0].astype(np.int32)
+
+
+def pad_selection(idx: np.ndarray, to_len: int, pad_slot: int) -> np.ndarray:
+    """Pad selected-index list to a static length (jit-friendly batching).
+
+    Padding entries point at ``pad_slot`` (a scratch slot past the real
+    prompt) so scattered K/V from pad tokens never collide with real slots.
+    """
+    if len(idx) > to_len:
+        raise ValueError(f"selection {len(idx)} exceeds static budget {to_len}")
+    out = np.full((to_len,), pad_slot, np.int32)
+    out[:len(idx)] = idx
+    return out

@@ -1,0 +1,11 @@
+from repro.data.datasets import (
+    DialogueSample,
+    SYSTEM_PROMPT,
+    image_embeds,
+    make_dialogues,
+    train_batches,
+)
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["DialogueSample", "SYSTEM_PROMPT", "image_embeds",
+           "make_dialogues", "train_batches", "ByteTokenizer"]

@@ -1,0 +1,5 @@
+from repro.kernels.paged_attn.ops import paged_attention
+from repro.kernels.selective_attn.ops import selective_attention
+from repro.kernels.ssd_chunk.ops import ssd_chunk
+
+__all__ = ["paged_attention", "selective_attention", "ssd_chunk"]

@@ -1,0 +1,18 @@
+"""jit'd wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attn.paged_attn import paged_attention_pallas
+from repro.kernels.paged_attn.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
+                    interpret: bool = True, use_ref: bool = False):
+    if use_ref:
+        return paged_attention_ref(q, k_pool, v_pool, page_table, lengths)
+    return paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
+                                  interpret=interpret)

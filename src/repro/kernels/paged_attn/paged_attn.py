@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: paged decode attention (vLLM PagedAttention → TPU).
+
+TPU adaptation: the page table and lengths ride in SMEM via
+``PrefetchScalarGridSpec`` so each grid step's BlockSpec ``index_map`` can
+*dynamically* pick the page to DMA into VMEM — a gather expressed through
+the grid rather than CUDA warp-level pointer chasing.  Online softmax
+accumulates per (batch, kv-head) across the page axis in VMEM scratch; the
+GQA query group (Hq/Hkv queries per kv head) rides the sublane dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(page_table_ref, lengths_ref,    # scalar prefetch (SMEM)
+                       q_ref, k_ref, v_ref,            # VMEM blocks
+                       o_ref,
+                       m_ref, l_ref, acc_ref,          # VMEM scratch
+                       *, page_size: int, max_pages: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, Dh) query group
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (page_size, Dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    token_idx = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = token_idx < length                         # (1, page_size)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == max_pages - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths, *,
+                           interpret: bool = False):
+    """q (B,Hq,Dh); pools (P,page_size,Hkv,Dh); page_table (B,max_pages)."""
+    b, hq, dh = q.shape
+    p, page_size, hkv, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    group = hq // hkv
+    q_g = q.reshape(b, hkv, group, dh)
+
+    grid = (b, hkv, max_pages)
+    kernel = functools.partial(_paged_attn_kernel, page_size=page_size,
+                               max_pages=max_pages, scale=1.0 / (dh ** 0.5))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # page_table, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh), lambda b_, h, j, pt, ln: (b_, h, 0, 0)),
+            # the dynamic page gather: page index comes from the SMEM table
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b_, h, j, pt, ln: (pt[b_, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b_, h, j, pt, ln: (pt[b_, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh),
+                               lambda b_, h, j, pt, ln: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q_g, k_pool, v_pool)
+    return out.reshape(b, hq, dh)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention.
+
+q          (B, Hq, Dh)              one new token per sequence
+k/v pool   (P, page_size, Hkv, Dh)  shared page pool
+page_table (B, max_pages) int32     pages owned by each sequence
+lengths    (B,) int32               tokens currently cached per sequence
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths):
+    b, hq, dh = q.shape
+    p, ps, hkv, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    rep = hq // hkv
+
+    k = k_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    v = v_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    idx = jnp.arange(max_pages * ps)[None, :]
+    mask = idx < lengths[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", probs, v.astype(jnp.float32)).astype(q.dtype)

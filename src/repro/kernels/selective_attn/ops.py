@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the selective-attention kernel.
+
+Accepts the model's (B, S, H, Dh) layout, pads sequences to block
+multiples (padding KV slots get INVALID_POS so they are masked out;
+padding query rows are discarded after the call), transposes to the
+kernel's (B, H, S, Dh) layout, and dispatches to Pallas — interpret mode
+on CPU (this container), compiled Mosaic on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_attn.ref import selective_attention_ref
+from repro.kernels.selective_attn.selective_attn import (
+    INVALID_POS,
+    selective_attention_pallas,
+)
+
+
+def _pad_to(x, axis, mult, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret", "use_ref"))
+def selective_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True, use_ref: bool = False):
+    """q (B,Sq,Hq,Dh), k/v (B,Skv,Hkv,Dh), q_pos (B,Sq), kv_pos (B,Skv).
+
+    Returns (B, Sq, Hq, Dh).  ``interpret=True`` runs the kernel body in
+    Python on CPU (correctness path for this container); on TPU pass
+    ``interpret=False``.
+    """
+    b, sq, hq, dh = q.shape
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if use_ref:
+        out = selective_attention_ref(qt, kt, vt, q_pos, kv_pos, window=window)
+        return jnp.moveaxis(out, 1, 2)
+
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, kt.shape[2]))
+    qt = _pad_to(qt, 2, bq)
+    kt = _pad_to(kt, 2, bk)
+    vt = _pad_to(vt, 2, bk)
+    q_pos_p = _pad_to(q_pos, 1, bq, value=0)
+    kv_pos_p = _pad_to(kv_pos, 1, bk, value=INVALID_POS)
+
+    out = selective_attention_pallas(
+        qt, kt, vt, q_pos_p, kv_pos_p, window=window,
+        block_q=bq, block_k=bk, interpret=interpret)
+    return jnp.moveaxis(out[:, :, :sq, :], 1, 2)

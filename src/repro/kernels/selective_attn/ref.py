@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the selective-attention kernel.
+
+Layout matches the kernel: q (B, Hq, Sq, Dh), k/v (B, Hkv, Skv, Dh),
+q_pos (B, Sq), kv_pos (B, Skv).  Masking is purely position-driven:
+  * kv_pos == INVALID_POS          -> masked (empty / dummy slots)
+  * kv_pos >  q_pos                -> masked (causal by ORIGINAL position)
+  * window > 0 and too far behind  -> masked (sliding window)
+This is exactly the semantics MPIC's blended-cache prefill needs — queries
+are the selected (recomputed) tokens, keys span the full linked cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INVALID_POS = jnp.iinfo(jnp.int32).max
+
+
+def selective_attention_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = kv_pos[:, None, None, :] != INVALID_POS
+    causal = kv_pos[:, None, None, :] <= q_pos[:, None, :, None]
+    mask = valid & causal
+    if window > 0:
+        mask &= kv_pos[:, None, None, :] > q_pos[:, None, :, None] - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (padding queries) -> zeros, not NaN
+    any_valid = jnp.any(mask, axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: selective-attention prefill (flash-style, blended KV).
+
+The MPIC hot spot: queries are only the *selected* (recomputed) tokens,
+keys/values span the full linked cache (reused segments + freshly scattered
+dummy slots).  Masking is by original token position, so the kernel is
+oblivious to where segments were linked — position independence lives in
+the ``q_pos``/``kv_pos`` operands, not in the loop structure.
+
+TPU mapping (DESIGN.md §3):
+  grid = (B, Hq, Sq/BQ, Skv/BK) — the KV axis is the innermost (sequential)
+  grid dim; online-softmax running stats (m, l, acc) live in VMEM scratch
+  and survive across KV steps.  Block shapes are MXU-aligned (BQ, BK, Dh
+  multiples of the 128 lane width at full scale; Dh=64 archs use the 64-lane
+  half-tile which Mosaic supports).  K is loaded as (BK, Dh) and contracted
+  with dot_general — no transposes materialize in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INVALID_POS = jnp.iinfo(jnp.int32).max
+NEG_INF = -1e30
+
+
+def _sel_attn_kernel(q_pos_ref, kv_pos_ref,        # prefetch-ish operands
+                     q_ref, k_ref, v_ref,          # blocks
+                     o_ref,                        # output block
+                     m_ref, l_ref, acc_ref,        # VMEM scratch
+                     *, window: int, n_kv_blocks: int, scale: float):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (BQ, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BK, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)            # (BK, Dh)
+    qp = q_pos_ref[0]                              # (BQ,)
+    kp = kv_pos_ref[0]                             # (BK,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    valid = (kp[None, :] != INVALID_POS) & (kp[None, :] <= qp[:, None])
+    if window > 0:
+        valid &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (BQ, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)                   # NEG_INF-NEG_INF guard
+
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0, ...] = (acc_ref[...] /
+                            jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def selective_attention_pallas(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                               block_q: int = 128, block_k: int = 128,
+                               interpret: bool = False):
+    """q (B,Hq,Sq,Dh), k/v (B,Hkv,Skv,Dh), q_pos (B,Sq), kv_pos (B,Skv).
+
+    Sq % block_q == 0 and Skv % block_k == 0 (ops.py pads; padding KV slots
+    carry INVALID_POS so they are masked; padding query rows produce zeros).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert sq % block_q == 0 and skv % block_k == 0
+    group = hq // hkv
+    n_kv = skv // block_k
+    grid = (b, hq, sq // block_q, n_kv)
+
+    kernel = functools.partial(
+        _sel_attn_kernel, window=window, n_kv_blocks=n_kv,
+        scale=1.0 / (dh ** 0.5))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b_, h, i, j: (b_, i)),          # q_pos
+            pl.BlockSpec((1, block_k), lambda b_, h, i, j: (b_, j)),          # kv_pos
+            pl.BlockSpec((1, 1, block_q, dh), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l (running sum)
+            pltpu.VMEM((block_q, dh), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, q, k, v)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel.
+
+Per (batch, chunk, head): given chunk inputs
+  x   (Q, hd)   conv'd inputs
+  bm  (Q, ds)   input projection (shared over heads upstream)
+  cm  (Q, ds)   output projection
+  la  (Q,)      log decay  (negative)
+  dt  (Q,)      discretization step
+produce
+  y_intra (Q, hd)  = (L ∘ C Bᵀ) · (dt · X)        intra-chunk output
+  s_c     (ds, hd) = Σ_q exp(total − cum_q)·dt_q·B_q ⊗ X_q   chunk state
+  a_c     ()       = exp(total)                    chunk decay
+The inter-chunk composition (associative scan) stays in jnp — the kernel
+covers the quadratic, MXU-dense part.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, bm, cm, la, dt):
+    """Batched oracle. x (B,NC,H,Q,hd), bm/cm (B,NC,Q,ds), la/dt (B,NC,H,Q).
+
+    Returns y_intra (B,NC,H,Q,hd), s_c (B,NC,H,ds,hd), a_c (B,NC,H)."""
+    q = x.shape[-2]
+    cum = jnp.cumsum(la, axis=-1)                        # (B,NC,H,Q)
+    cb = jnp.einsum("bnqs,bnks->bnqk", cm, bm)           # (B,NC,Q,Q)
+    decay = jnp.exp(cum[..., :, None] - cum[..., None, :])   # (B,NC,H,Q,Q)
+    tril = jnp.tril(jnp.ones((q, q), jnp.float32))
+    scores = cb[:, :, None] * decay * dt[..., None, :] * tril
+    y_intra = jnp.einsum("bnhqk,bnhkd->bnhqd", scores, x)
+    total = cum[..., -1]                                 # (B,NC,H)
+    wgt = jnp.exp(total[..., None] - cum) * dt           # (B,NC,H,Q)
+    s_c = jnp.einsum("bnqs,bnhq,bnhqd->bnhsd", bm, wgt, x)
+    return y_intra, s_c, jnp.exp(total)

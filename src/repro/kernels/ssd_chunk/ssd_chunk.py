@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: SSD intra-chunk block (mamba2 / hymba hot spot).
+
+TPU mapping: one grid step per (batch, chunk, head). The whole chunk
+working set — x (Q,hd), B/C (Q,ds), decays (Q,) — fits VMEM at Q ≤ 128,
+and both heavy contractions (C·Bᵀ (Q,Q,ds-contraction) and scores·X
+(Q,Q→Q,hd)) are single MXU dot_generals; the (Q,Q) decay/score tile never
+touches HBM — exactly the fusion XLA refused to do in the §Perf profile.
+The O(T/Q) inter-chunk state composition stays outside (associative scan
+in jnp): it is tiny and latency-bound, not MXU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(x_ref, bm_ref, cm_ref, la_ref, dt_ref,
+                      y_ref, s_ref, a_ref):
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # (Q, hd)
+    bm = bm_ref[0, 0].astype(jnp.float32)         # (Q, ds)
+    cm = cm_ref[0, 0].astype(jnp.float32)         # (Q, ds)
+    la = la_ref[0, 0, 0].astype(jnp.float32)      # (Q,)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)      # (Q,)
+    q = x.shape[0]
+
+    cum = jnp.cumsum(la)                           # (Q,)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    scores = jnp.where(col <= row, cb * decay * dt[None, :], 0.0)
+    y_ref[0, 0, 0] = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    total = cum[-1]
+    wgt = jnp.exp(total - cum) * dt                # (Q,)
+    s_ref[0, 0, 0] = jax.lax.dot_general(
+        bm * wgt[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(s_ref.dtype)   # (ds, hd)
+    a_ref[0, 0, 0] = jnp.exp(total)
+
+
+def ssd_chunk_pallas(x, bm, cm, la, dt, *, interpret: bool = False):
+    """x (B,NC,H,Q,hd), bm/cm (B,NC,Q,ds), la/dt (B,NC,H,Q).
+
+    Returns (y_intra (B,NC,H,Q,hd), s_c (B,NC,H,ds,hd), a_c (B,NC,H))."""
+    b, nc, h, q, hd = x.shape
+    ds = bm.shape[-1]
+    grid = (b, nc, h)
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, hd), lambda b_, n, h_: (b_, n, h_, 0, 0)),
+            pl.BlockSpec((1, 1, q, ds), lambda b_, n, h_: (b_, n, 0, 0)),
+            pl.BlockSpec((1, 1, q, ds), lambda b_, n, h_: (b_, n, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda b_, n, h_: (b_, n, h_, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda b_, n, h_: (b_, n, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, hd), lambda b_, n, h_: (b_, n, h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, ds, hd), lambda b_, n, h_: (b_, n, h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b_, n, h_: (b_, n, h_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, h, q, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, ds, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, bm, cm, la, dt)

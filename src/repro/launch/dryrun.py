@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape) this lowers AND compiles the
+appropriate step function (train / prefill / decode / mpic_prefill) under
+the production mesh — 16×16 single-pod and 2×16×16 multi-pod — proving the
+sharding config is coherent, and extracts memory / cost / collective data
+for the roofline table.
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks on
+first init); it lives ONLY here — smoke tests and benches see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import activation_rules, make_production_mesh
+from repro.launch.pspec import use_policy
+from repro.roofline.analysis import Roofline, collective_bytes, model_flops
+
+
+def _lower_compile(cfg, shape, kind, mesh, multi_pod):
+    """Lower + compile one step fn; returns (compiled, lower_s, compile_s)."""
+    t0 = time.time()
+    model, opt, fn = S.make_step_fn(cfg, kind, shape)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    fsdp = kind == "train"
+    rep_ssm = ((cfg.arch_type == "ssm" or cfg.hybrid)
+               and cfg.ssm_num_heads % mesh.devices.shape[-1] != 0)
+    psh = S.to_shardings(S.param_pspecs(params_shapes, mesh, fsdp=fsdp,
+                                        replicate_ssm=rep_ssm), mesh)
+    args, in_sh = S.input_specs(cfg, shape, kind, mesh)
+    if kind == "train":
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_sh = type(opt_shapes)(NamedSharding(mesh, P()), psh, psh)
+        all_args = (params_shapes, opt_shapes) + args
+        all_sh = (psh, opt_sh) + in_sh
+    else:
+        all_args = (params_shapes,) + args
+        all_sh = (psh,) + in_sh
+    batch_spec, kv_seq_spec, _ = S._dims(cfg, shape, mesh)
+    rules = activation_rules(multi_pod=multi_pod,
+                             shard_kv_seq=kv_seq_spec is not None)
+    if batch_spec is None:
+        rules["batch"] = None
+    # heads that cannot shard on the model axis (40 % 16, 25 % 16): use
+    # context parallelism — kv_seq on 'model' (see layers.attend)
+    model_size = mesh.devices.shape[-1]
+    if (not cfg.attn_free and cfg.num_heads % model_size != 0
+            and rules.get("kv_seq") is None):
+        rules["kv_seq"] = "model"
+    # decode reads a seq-sharded cache; if the KV heads cannot shard, head-
+    # sharded attention would all-gather the whole cache per layer — keep
+    # the cache seq-sharded through attention instead (§Perf pair D)
+    if (kind == "decode" and not cfg.attn_free
+            and cfg.num_kv_heads % model_size != 0
+            and rules.get("kv_seq") is None):
+        rules["kv_seq"] = "model"
+        rules["heads"] = rules["kv_heads"] = None
+    with use_policy(mesh, rules):
+        lowered = jax.jit(fn, in_shardings=all_sh).lower(*all_args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0 - t_lower
+
+
+def _extrapolated_cost(cfg, shape, kind, mesh, multi_pod):
+    """HLO FLOPs/bytes per device with the layer-scan trip count applied.
+
+    ``cost_analysis()`` counts a while-loop body ONCE, so we compile the
+    same step at L=1 and L=2 (full width/batch/seq) and extrapolate:
+        F(L) = F(1) + (L-1) · (F(2) - F(1)).
+    Exact as long as every layer contributes identically (true for our
+    homogeneous stacks, incl. the whisper encoder which scales with its
+    own 1→2 replacement below).
+    """
+    import dataclasses as dc
+    costs = []
+    for ell in (1, 2):
+        c = dc.replace(cfg, num_layers=ell,
+                       encoder_layers=min(cfg.encoder_layers, ell),
+                       scan_layers=False)
+        compiled, _, _ = _lower_compile(c, shape, kind, mesh, multi_pod)
+        ca = compiled.cost_analysis() or {}
+        costs.append((float(ca.get("flops", 0.0)),
+                      float(ca.get("bytes accessed", 0.0))))
+    (f1, b1), (f2, b2) = costs
+    L = cfg.num_layers
+    return f1 + (L - 1) * (f2 - f1), b1 + (L - 1) * (b2 - b1)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            step_override: str | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    kind = step_override or S.step_kind(cfg, shape)
+    if kind is None:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "no sub-quadratic decode path (see DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+
+    compiled, t_lower, t_compile = _lower_compile(cfg, shape, kind, mesh,
+                                                  multi_pod)
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo, [cfg.num_layers])
+
+    if multi_pod:
+        # multi-pod pass proves the 'pod' axis shards; roofline terms are
+        # reported from the single-pod table
+        ca = compiled.cost_analysis() or {}
+        flops_pd = float(ca.get("flops", 0.0))
+        bytes_pd = float(ca.get("bytes accessed", 0.0))
+    else:
+        flops_pd, bytes_pd = _extrapolated_cost(cfg, shape, kind, mesh,
+                                                multi_pod)
+
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, step=kind,
+        flops_per_device=flops_pd,
+        bytes_per_device=bytes_pd,
+        coll_bytes_per_device=colls.total_bytes,
+        model_flops_global=model_flops(cfg, shape, kind),
+        chips=chips,
+        coll_by_kind=colls.by_kind,
+        memory_per_device={
+            "arguments": ma.argument_size_in_bytes,
+            "outputs": ma.output_size_in_bytes,
+            "temps": ma.temp_size_in_bytes,
+            "code": ma.generated_code_size_in_bytes,
+        },
+    )
+    out = rl.to_dict()
+    out.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), coll_ops=colls.op_count)
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] step={kind} "
+              f"compile={t_compile:.0f}s "
+              f"Tc={rl.t_compute * 1e3:.2f}ms Tm={rl.t_memory * 1e3:.2f}ms "
+              f"Tcoll={rl.t_collective * 1e3:.2f}ms -> {rl.bottleneck} "
+              f"useful={rl.useful_flops_ratio:.2f}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--step", default=None,
+                    help="override step kind (e.g. mpic_prefill)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+
+    def done_key(r):
+        return (r["arch"], r["shape"], r.get("mesh", ""), r.get("step", ""))
+
+    have = {done_key(r) for r in results} if args.skip_existing else set()
+
+    if args.all:
+        combos = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+    else:
+        combos = [(args.arch, args.shape)]
+
+    for arch, shape_name in combos:
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        cfg = get_config(arch)
+        kind = args.step or S.step_kind(cfg, INPUT_SHAPES[shape_name])
+        if (arch, shape_name, mesh_name, kind or "skip") in have:
+            continue
+        try:
+            r = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                        step_override=args.step)
+        except Exception as e:
+            traceback.print_exc()
+            r = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "status": "error", "error": f"{type(e).__name__}: {e}"}
+        if r.get("status") == "skipped":
+            r["mesh"] = mesh_name
+            r["step"] = "skip"
+        results.append(r)
+        if args.out:
+            os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                        exist_ok=True)
+            json.dump(results, open(args.out, "w"), indent=1)
+
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    err = sum(1 for r in results if r.get("status") == "error")
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {err} errors")
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

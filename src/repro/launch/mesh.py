@@ -1,0 +1,46 @@
+"""Production mesh + logical-axis rules.
+
+TPU v5e target: 256 chips/pod (16×16), optionally 2 pods = 512 chips.
+Functions, not module constants — importing this module never touches jax
+device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def activation_rules(*, multi_pod: bool = False, shard_kv_seq: bool = False,
+                     seq_parallel: bool = False) -> dict:
+    """Logical-name -> mesh-axis rules for `repro.launch.pspec.shard`.
+
+    shard_kv_seq: long-context decode (B=1) — KV sequence dim on 'data'
+    (flash-decoding-style partial softmax; XLA inserts the reductions).
+    seq_parallel: shard the *activation* seq dim on 'data' as well.
+    """
+    ba = batch_axes(multi_pod)
+    return {
+        "batch": ba,
+        "seq": "data" if seq_parallel else None,
+        "kv_seq": "data" if shard_kv_seq else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "vocab": "model",
+    }
+
+
+# hardware constants (TPU v5e) for the roofline terms
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,66 @@
+"""Logical-axis sharding policy (MaxText-style logical axis rules).
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", None)``); a run-scoped policy maps logical
+names to mesh axes.  With no policy active (unit tests, CPU smoke runs)
+``shard`` is the identity, so the model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_policy():
+    return getattr(_state, "policy", None)
+
+
+def set_policy(mesh, rules: dict) -> None:
+    _state.policy = (mesh, dict(rules))
+
+
+def clear_policy() -> None:
+    _state.policy = None
+
+
+@contextlib.contextmanager
+def use_policy(mesh, rules: dict):
+    prev = current_policy()
+    set_policy(mesh, rules)
+    try:
+        yield
+    finally:
+        _state.policy = prev
+
+
+def resolve(*logical_axes) -> P:
+    pol = current_policy()
+    rules = pol[1] if pol else {}
+    return P(*(rules.get(a) if a is not None else None for a in logical_axes))
+
+
+def shard(x, *logical_axes):
+    pol = current_policy()
+    if pol is None:
+        return x
+    mesh, rules = pol
+    spec = [rules.get(a) if a is not None else None for a in logical_axes]
+    # drop mappings that do not divide the dimension (e.g. 4 kv heads on a
+    # 16-way model axis) — XLA requires even divisibility
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for i, s in enumerate(spec):
+        if s is None:
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for n in names:
+            total *= axis_sizes[n]
+        if x.shape[i] % total != 0:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,342 @@
+"""Dry-run machinery: step functions, ShapeDtypeStruct input specs, and
+parameter/activation PartitionSpecs for the production meshes.
+
+Nothing here allocates device memory — params come from ``jax.eval_shape``
+and inputs are ``ShapeDtypeStruct`` stand-ins, so the 76B configs lower on
+a CPU-only container.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import pspec as pspec_mod
+from repro.launch.mesh import activation_rules, batch_axes
+from repro.models.layers import INVALID_POS, _dtype
+from repro.models.model import Model, build_model
+from repro.training.optimizer import AdamW
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs (by param-tree path)
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "bc_proj", "dt_proj",
+        "router"}
+_ROW = {"wo", "w_down", "out_proj"}
+
+
+def _leaf_spec(path: str, ndim: int, *, fsdp: bool,
+               replicate_ssm: bool = False) -> P:
+    """Map one param leaf to a PartitionSpec (logical: tp on 'model',
+    optional fsdp on 'data' over the complementary matmul dim).
+
+    replicate_ssm: when the SSD head count cannot shard on the model axis
+    (25 heads on a 16-way axis), column-sharded SSM projections force a
+    per-layer activation all-gather; the projections are small, so full
+    replication + redundant compute is cheaper (§Perf, hymba iteration).
+    """
+    name = path.split("/")[-1]
+    stacked = "/layers/" in path or "/enc_layers/" in path
+    spec = [None] * ndim
+    if replicate_ssm and "/ssm/" in path:
+        return P(*spec)
+
+    def dim(i):  # negative-index helper respecting the stacked layer axis
+        return ndim + i
+
+    if name == "embed":
+        spec[0] = "model"                     # vocab
+        if fsdp:
+            spec[1] = "data"
+    elif name == "lm_head":
+        spec[dim(-1)] = "model"
+        if fsdp:
+            spec[dim(-2)] = "data"
+    elif name == "pos_embed" or name == "enc_pos_embed":
+        if fsdp and ndim >= 2:
+            spec[dim(-2)] = "data"
+    elif name in _COL and ndim >= 2:
+        if name in ("w_gate", "w_up") and ndim >= 3 and stacked is False:
+            pass
+        spec[dim(-1)] = "model"
+        if fsdp:
+            spec[dim(-2)] = "data"
+    elif name in _ROW and ndim >= 2:
+        spec[dim(-2)] = "model"
+        if fsdp:
+            spec[dim(-1)] = "data"
+    elif name == "conv_w" and ndim >= 2:
+        spec[dim(-1)] = "model"
+    # MoE expert-stacked weights: experts dim on 'model'
+    if "/moe/" in path and name in ("w_gate", "w_up", "w_down") and \
+            "/shared/" not in path:
+        spec = [None] * ndim
+        spec[1 if stacked else 0] = "model"   # (L, E, D, F) -> E
+        if fsdp:
+            spec[dim(-1) if name == "w_down" else dim(-2)] = "data"
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    return "/" + "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _guard(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that do not evenly divide the dim (e.g. 49155 vocab)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        out.append(s if shape[i] % total == 0 else None)
+    return P(*out)
+
+
+def param_pspecs(param_shapes, mesh, *, fsdp: bool = False,
+                 replicate_ssm: bool = False):
+    def f(path, leaf):
+        return _guard(_leaf_spec(_path_str(path), leaf.ndim, fsdp=fsdp,
+                                 replicate_ssm=replicate_ssm),
+                      leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(f, param_shapes)
+
+
+def to_shardings(pspecs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation / input partition specs
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig, shape: InputShape, mesh):
+    multi_pod = "pod" in mesh.axis_names
+    ba = batch_axes(multi_pod)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bsz = 1
+    for a in ba:
+        bsz *= sizes[a]
+    batch_spec = ba if shape.global_batch % bsz == 0 else (
+        ("data",) if shape.global_batch % sizes["data"] == 0 else None)
+    # long-context decode (B=1): KV seq on 'data' instead
+    kv_seq_spec = "data" if batch_spec is None else None
+    return batch_spec, kv_seq_spec, multi_pod
+
+
+def _kv_head_axis(cfg: ModelConfig, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return "model" if (cfg.num_kv_heads and
+                       cfg.num_kv_heads % sizes["model"] == 0) else None
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, batch_spec, kv_seq_spec):
+    """PartitionSpecs for the serve cache pytree."""
+    kh = _kv_head_axis(cfg, mesh)
+    # if kv heads can't shard 16-way, put the seq dim on 'model' instead
+    seq_model = None if kh else "model"
+    out = {}
+    if not cfg.attn_free:
+        kv = P(None, batch_spec, kv_seq_spec or seq_model, kh, None)
+        out["k"] = out["v"] = kv
+        out["pos"] = P(batch_spec, kv_seq_spec or seq_model)
+    if cfg.arch_type in ("ssm",) or cfg.hybrid:
+        out["ssm_h"] = P(None, batch_spec, None, None, None)
+        out["ssm_conv"] = P(None, batch_spec, None, "model"
+                            if cfg.ssm_inner % mesh.devices.shape[-1] == 0
+                            else None)
+    if cfg.is_encoder_decoder:
+        out["cross_k"] = out["cross_v"] = P(None, batch_spec, None,
+                                            _kv_head_axis(cfg, mesh), None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions (what gets lowered)
+# ---------------------------------------------------------------------------
+
+def make_step_fn(cfg: ModelConfig, kind: str, shape: InputShape,
+                 *, mpic_sel_frac: float = 0.125):
+    """Returns (fn, example_inputs_fn(mesh) -> (args, in_shardings))."""
+    model = build_model(cfg)
+    opt = AdamW()
+
+    if kind == "train":
+        def fn(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            from repro.training.optimizer import apply_updates
+            params = apply_updates(params, updates)
+            return params, opt_state, loss
+        return model, opt, fn
+
+    if kind == "prefill":
+        def fn(params, batch):
+            cache = model.make_cache(shape.global_batch, shape.seq_len)
+            return model.prefill(
+                params, batch["tokens"], cache,
+                media_embeds=batch.get("media_embeds"),
+                media_mask=batch.get("media_mask"),
+                audio_embeds=batch.get("audio_embeds"))
+        return model, opt, fn
+
+    if kind == "mpic_prefill":
+        def fn(params, batch, cache):
+            return model.selective_prefill(
+                params, batch["sel_tokens"], batch["sel_pos"], cache,
+                batch["sel_pos"],
+                media_embeds=batch.get("media_embeds"),
+                media_mask=batch.get("media_mask"))
+        return model, opt, fn
+
+    if kind == "decode":
+        def fn(params, cache, token, position):
+            window = cfg.sliding_window
+            if shape.seq_len > 32768 and window:
+                wi = position % window          # ring-buffer slot
+            else:
+                wi = position
+            x = model.embed(params, token, positions=position)
+            from repro.models import transformer as tf
+            logits, cache, _ = tf.forward_with_cache(
+                params, cfg, x, position, cache, wi)
+            return logits[:, -1, :], cache
+        return model, opt, fn
+
+    raise ValueError(kind)
+
+
+def decode_kv_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Cache length a decode shape actually needs (sliding window for
+    long-context dense — the sub-quadratic path)."""
+    if shape.seq_len > 32768 and cfg.sliding_window:
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, kind: str, mesh,
+                *, mpic_sel_frac: float = 0.125):
+    """ShapeDtypeStructs + NamedShardings for every model input."""
+    batch_spec, kv_seq_spec, multi_pod = _dims(cfg, shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    cd = _dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    if kind == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        shardings = {"tokens": ns(P(batch_spec, None)),
+                     "labels": ns(P(batch_spec, None))}
+        if cfg.is_multimodal:
+            batch["media_embeds"] = sds((B, S, cfg.d_model), cd)
+            batch["media_mask"] = sds((B, S), jnp.bool_)
+            shardings["media_embeds"] = ns(P(batch_spec, None, None))
+            shardings["media_mask"] = ns(P(batch_spec, None))
+        if cfg.is_encoder_decoder:
+            batch["audio_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), cd)
+            shardings["audio_embeds"] = ns(P(batch_spec, None, None))
+        return (batch,), (shardings,)
+
+    if kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        shardings = {"tokens": ns(P(batch_spec, None))}
+        if cfg.is_multimodal:
+            batch["media_embeds"] = sds((B, S, cfg.d_model), cd)
+            batch["media_mask"] = sds((B, S), jnp.bool_)
+            shardings["media_embeds"] = ns(P(batch_spec, None, None))
+            shardings["media_mask"] = ns(P(batch_spec, None))
+        if cfg.is_encoder_decoder:
+            batch["audio_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), cd)
+            shardings["audio_embeds"] = ns(P(batch_spec, None, None))
+        return (batch,), (shardings,)
+
+    if kind == "mpic_prefill":
+        s_sel = max(int(S * mpic_sel_frac), 1)
+        batch = {"sel_tokens": sds((B, s_sel), i32),
+                 "sel_pos": sds((B, s_sel), i32)}
+        shardings = {"sel_tokens": ns(P(batch_spec, None)),
+                     "sel_pos": ns(P(batch_spec, None))}
+        if cfg.is_multimodal:
+            batch["media_embeds"] = sds((B, s_sel, cfg.d_model), cd)
+            batch["media_mask"] = sds((B, s_sel), jnp.bool_)
+            shardings["media_embeds"] = ns(P(batch_spec, None, None))
+            shardings["media_mask"] = ns(P(batch_spec, None))
+        cache, cache_sh = _cache_specs(cfg, mesh, B, S, batch_spec,
+                                       kv_seq_spec)
+        return (batch, cache), (shardings, cache_sh)
+
+    if kind == "decode":
+        kv_len = decode_kv_len(cfg, shape)
+        cache, cache_sh = _cache_specs(cfg, mesh, B, kv_len, batch_spec,
+                                       kv_seq_spec)
+        token = sds((B, 1), i32)
+        pos = sds((B, 1), i32)
+        tsh = NamedSharding(mesh, P(batch_spec, None))
+        return (cache, token, pos), (cache_sh, tsh, tsh)
+
+    raise ValueError(kind)
+
+
+def _cache_specs(cfg, mesh, batch, kv_len, batch_spec, kv_seq_spec):
+    cd = _dtype(cfg.compute_dtype)
+    L = cfg.num_layers
+    specs = cache_pspecs(cfg, mesh, batch_spec, kv_seq_spec)
+    cache, sh = {}, {}
+
+    def add(name, shp, dt):
+        cache[name] = jax.ShapeDtypeStruct(shp, dt)
+        sh[name] = NamedSharding(mesh, specs[name])
+
+    if not cfg.attn_free:
+        add("k", (L, batch, kv_len, cfg.num_kv_heads, cfg.head_dim), cd)
+        add("v", (L, batch, kv_len, cfg.num_kv_heads, cfg.head_dim), cd)
+        add("pos", (batch, kv_len), jnp.int32)
+    if cfg.arch_type == "ssm" or cfg.hybrid:
+        add("ssm_h", (L, batch, cfg.ssm_num_heads, cfg.ssm_state,
+                      cfg.ssm_head_dim), jnp.float32)
+        add("ssm_conv", (L, batch, cfg.ssm_conv_width - 1, cfg.ssm_inner), cd)
+    if cfg.is_encoder_decoder:
+        add("cross_k", (L, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                        cfg.head_dim), cd)
+        add("cross_v", (L, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                        cfg.head_dim), cd)
+    return cache, sh
+
+
+# ---------------------------------------------------------------------------
+# which (arch, shape, kind) combinations are valid
+# ---------------------------------------------------------------------------
+
+def step_kind(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """Step function a shape lowers for this arch; None = skipped (with the
+    reason documented in DESIGN.md)."""
+    if shape.kind == "train":
+        return "train"
+    if shape.kind == "prefill":
+        return "prefill"
+    # decode shapes
+    if shape.seq_len > 32768:
+        if cfg.is_encoder_decoder:
+            return None        # whisper: decoder context architecturally small
+        if cfg.arch_type == "ssm" or cfg.hybrid or cfg.sliding_window:
+            return "decode"    # sub-quadratic path exists
+        return None
+    return "decode"

@@ -1,0 +1,45 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs the REDUCED (smoke) config by default; pass
+``--full`` on a real TPU slice to train the assigned config under the
+production mesh (pjit with the same param pspecs the dry-run verifies).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import train_batches
+from repro.models import build_model
+from repro.training import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full assigned config (TPU slice)")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n / 1e6:.1f}M devices={jax.device_count()}")
+
+    data = train_batches(batch=args.batch, seq=args.seq,
+                         vocab=cfg.vocab_size, d_model=cfg.d_model)
+    tc = TrainConfig(steps=args.steps, log_every=max(args.steps // 10, 1),
+                     ckpt_every=args.steps if args.ckpt else 0,
+                     ckpt_path=args.ckpt or "/tmp/ckpt.msgpack")
+    train(model, params, data, tc)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN (GShard-style capacity dispatch, TPU-native).
+
+Experts are stacked on a leading axis so they shard on the ``model`` mesh
+axis (expert parallelism); dispatch/combine are einsums, which the XLA SPMD
+partitioner lowers to the all-to-all-like collective schedule.  Capacity
+dispatch keeps shapes static (a jit/TPU requirement); overflow tokens fall
+back to the shared experts (deepseek) or the residual path (granite).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.pspec import shard
+from repro.models.layers import _dtype, dense_init
+
+
+def init_moe(key, cfg) -> dict:
+    dt = _dtype(cfg.param_dtype)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # fp32 routing
+        "w_gate": dense_init(ks[1], (e, d, f), dt),
+        "w_up": dense_init(ks[2], (e, d, f), dt),
+        "w_down": dense_init(ks[3], (e, f, d), dt),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks2[0], (d, fs), dt),
+            "w_up": dense_init(ks2[1], (d, fs), dt),
+            "w_down": dense_init(ks2[2], (fs, d), dt),
+        }
+    return p
+
+
+def moe_ffn(params: dict, cfg, x: jnp.ndarray, *, capacity_factor: float = 1.25):
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = xt.astype(jnp.float32) @ params["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # small token counts (decode steps, smoke tests): capacity = T makes
+    # dropping impossible (worst case: every token routes to one expert);
+    # at scale the usual capacity-factor bound applies
+    if t <= 64:
+        capacity = t
+    else:
+        capacity = max(1, int(capacity_factor * k * t / e))
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)       # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)              # (T, k)
+    keep = pos < capacity
+
+    # gather-based dispatch (dropless-style): no (T,E,C) one-hot einsums —
+    # dispatch/combine are pure data movement, so compiled FLOPs stay equal
+    # to the *active-expert* FLOPs (roofline-honest; see DESIGN.md §3)
+    slot = jnp.where(keep, pos, capacity)                        # C = drop bin
+    src = jnp.full((e, capacity + 1), 0, jnp.int32)
+    src = src.at[gate_idx.reshape(-1), slot.reshape(-1)].set(
+        jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None],
+                         (t, k)).reshape(-1), mode="drop")
+    filled = jnp.zeros((e, capacity + 1), jnp.bool_).at[
+        gate_idx.reshape(-1), slot.reshape(-1)].set(True, mode="drop")
+
+    cd = _dtype(cfg.compute_dtype)
+    xe = xt.astype(cd)[src[:, :capacity]]                        # (E, C, D)
+    xe = xe * filled[:, :capacity, None].astype(cd)
+    xe = shard(xe, "experts", None, None)    # expert-parallel (all-to-all)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])         # (E, C, D)
+    ye = shard(ye, "experts", None, None)
+
+    # combine: token-side gather of its k expert outputs
+    gathered = ye[gate_idx.reshape(-1), slot.reshape(-1)].reshape(t, k, d)
+    out = jnp.sum(gathered * (gate_vals * keep).astype(cd)[..., None], axis=1)
+
+    if cfg.num_shared_experts:
+        sp = params["shared"]
+        out = out + (jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])) @ sp["w_down"]
+
+    return out.reshape(b, s, d).astype(x.dtype), aux

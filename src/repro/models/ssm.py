@@ -1,0 +1,199 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+TPU adaptation (see DESIGN.md §3): instead of the CUDA per-timestep scan we
+use the *chunked* SSD algorithm — intra-chunk terms are dense matmuls
+(MXU-friendly, chunk length a multiple of the 128 lane width at full scale)
+and only the O(T/chunk) inter-chunk state pass is a `lax.scan`.  B/C are
+shared across heads (the SSD "multi-value" layout).
+
+State caches (decode): per layer
+  ssd state  (B, H, ds, hd)   — the recurrent summary
+  conv state (B, W-1, di)     — causal-conv tail
+MPIC does not apply here (the state is prefix-dependent); see DESIGN.md
+§Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dtype, dense_init, init_rmsnorm, rmsnorm
+
+
+def init_ssm(key, cfg) -> dict:
+    dt = _dtype(cfg.param_dtype)
+    d, di, ds = cfg.d_model, cfg.ssm_inner, cfg.ssm_state
+    nh, w = cfg.ssm_num_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dt),          # x, z
+        "bc_proj": dense_init(ks[1], (d, 2 * ds), dt),          # B, C
+        "dt_proj": dense_init(ks[2], (d, nh), dt),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),          # softplus ~ 0.01
+        "conv_w": dense_init(ks[3], (w, di), dt, scale=0.5),
+        "conv_b": jnp.zeros((di,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_norm": init_rmsnorm(di, dt),
+        "out_proj": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv. x (B,T,di), w (W,di); tail (B,W-1,di) or zeros."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)     # (B, T+W-1, di)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, bm, cm, log_a, dtv, h0):
+    """Chunked SSD core, fp32 — fully parallel over chunks.
+
+    TPU-native structure: every per-chunk quantity (intra-chunk quadratic
+    term, chunk-final state contribution) is a batched einsum over the NC
+    axis — dense MXU work, no sequential loop.  The only recurrence left is
+    the tiny per-chunk state composition
+        H_c = A_c · H_{c-1} + S_c
+    which is associative, so it runs as a log-depth
+    ``jax.lax.associative_scan`` instead of a ``lax.scan`` while-loop
+    (also keeps compiled FLOPs visible to cost analysis — see DESIGN.md).
+
+    x     (B, NC, Q, H, hd)   inputs (already conv'd + activated)
+    bm/cm (B, NC, Q, ds)      input/output projections (shared over heads)
+    log_a (B, NC, Q, H)       per-step log decay (negative)
+    dtv   (B, NC, Q, H)       discretization step
+    h0    (B, H, ds, hd)      incoming state
+    returns y (B, NC, Q, H, hd), h_final
+    """
+    q = x.shape[2]
+    cum = jnp.cumsum(log_a, axis=2)                      # (B, NC, Q, H)
+
+    # intra-chunk: (L ∘ C Bᵀ) · (dt·X)
+    cb = jnp.einsum("bnqs,bnks->bnqk", cm, bm)           # (B, NC, Q, Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tril = jnp.tril(jnp.ones((q, q), jnp.float32))
+    scores = (cb[..., None] * decay * dtv[:, :, None, :, :]
+              * tril[None, None, :, :, None])            # (B, NC, Q, K, H)
+    y_intra = jnp.einsum("bnqkh,bnkhd->bnqhd", scores, x)
+
+    # chunk-final state contributions
+    total = cum[:, :, -1, :]                             # (B, NC, H)
+    wgt = jnp.exp(total[:, :, None, :] - cum) * dtv      # (B, NC, Q, H)
+    s_c = jnp.einsum("bnqs,bnqh,bnqhd->bnhsd", bm, wgt, x)  # (B, NC, H, ds, hd)
+    a_c = jnp.exp(total)                                 # (B, NC, H)
+
+    # prepend the incoming state as a pseudo-chunk, then parallel prefix:
+    # (A1,S1) ∘ (A2,S2) = (A1·A2, A2·S1 + S2)
+    a_all = jnp.concatenate([jnp.ones_like(a_c[:, :1]), a_c], axis=1)
+    s_all = jnp.concatenate([h0[:, None], s_c], axis=1)
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    a_pre, h_pre = jax.lax.associative_scan(combine, (a_all, s_all), axis=1)
+    h_in = h_pre[:, :-1]                                 # state entering chunk c
+    h_final = h_pre[:, -1]
+
+    y_inter = jnp.einsum("bnqs,bnhsd->bnqhd", cm, h_in) \
+        * jnp.exp(cum)[..., None]
+    return y_intra + y_inter, h_final
+
+
+def ssm_forward(params: dict, cfg, x: jnp.ndarray,
+                state: dict | None = None,
+                dt_mask: jnp.ndarray | None = None,
+                tail_start: jnp.ndarray | None = None):
+    """Full-sequence (train / prefill) SSD pass.
+
+    x (B, T, D) with T divisible by ``cfg.ssm_chunk`` (caller pads).
+    dt_mask (B, T): 0 on padding steps — forces dt=0 there, i.e. the state
+    neither decays nor absorbs input (a true no-op step), so right-padded
+    prompts leave the recurrent state exactly as the unpadded prompt would.
+    tail_start (B,): per-row start of the last (W-1) *real* inputs for the
+    decode conv state (defaults to T-(W-1)).
+    Returns (out (B, T, D), new_state {"h", "conv"}).
+    """
+    b, t, _ = x.shape
+    di, ds = cfg.ssm_inner, cfg.ssm_state
+    nh, hd, q = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_chunk
+    assert t % q == 0, f"seq {t} not divisible by ssm_chunk {q}"
+    nc = t // q
+
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    if dt_mask is not None:
+        xin = xin * dt_mask[..., None].astype(xin.dtype)
+    conv_tail = None if state is None else state["conv"]
+    xc = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_tail)
+
+    bc = (x @ params["bc_proj"]).astype(jnp.float32)
+    bm, cm = jnp.split(bc, 2, axis=-1)                    # (B, T, ds) each
+    dt_raw = (x @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"]
+    dtv = jax.nn.softplus(dt_raw)                          # (B, T, nh)
+    if dt_mask is not None:
+        dtv = dtv * dt_mask[..., None]
+    log_a = -jnp.exp(params["A_log"]) * dtv                # (B, T, nh)
+
+    xh = xc.astype(jnp.float32).reshape(b, nc, q, nh, hd)
+    y, h_final = ssd_chunked(
+        xh, bm.reshape(b, nc, q, ds), cm.reshape(b, nc, q, ds),
+        log_a.reshape(b, nc, q, nh), dtv.reshape(b, nc, q, nh),
+        jnp.zeros((b, nh, ds, hd), jnp.float32) if state is None
+        else state["h"].astype(jnp.float32))
+    y = y + params["D"][None, None, None, :, None] * xh
+    y = y.reshape(b, t, di).astype(x.dtype)
+
+    y = rmsnorm(params["out_norm"], y) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    w1 = cfg.ssm_conv_width - 1
+    if tail_start is None:
+        conv_state = xin[:, t - w1:, :]
+    else:
+        conv_state = jax.vmap(
+            lambda xb, s: jax.lax.dynamic_slice_in_dim(xb, s, w1))(
+                xin, jnp.maximum(tail_start, 0))
+    new_state = {"h": h_final, "conv": conv_state}
+    return out, new_state
+
+
+def ssm_decode(params: dict, cfg, x: jnp.ndarray, state: dict):
+    """Single-token decode. x (B, 1, D); state {"h","conv"} -> (out, state)."""
+    b = x.shape[0]
+    di, ds = cfg.ssm_inner, cfg.ssm_state
+    nh, hd, w = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_conv_width
+
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                     # (B, 1, di)
+    buf = jnp.concatenate([state["conv"].astype(xin.dtype), xin], axis=1)  # (B, W, di)
+    xc = jax.nn.silu(jnp.einsum("bwd,wd->bd", buf, params["conv_w"])
+                     + params["conv_b"])[:, None, :]       # (B, 1, di)
+
+    bc = (x @ params["bc_proj"]).astype(jnp.float32)[:, 0]
+    bm, cm = jnp.split(bc, 2, axis=-1)                     # (B, ds)
+    dtv = jax.nn.softplus((x @ params["dt_proj"]).astype(jnp.float32)[:, 0]
+                          + params["dt_bias"])             # (B, nh)
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dtv)           # (B, nh)
+
+    xh = xc.astype(jnp.float32).reshape(b, nh, hd)
+    h = state["h"].astype(jnp.float32)
+    h = a[:, :, None, None] * h + jnp.einsum("bs,bh,bhd->bhsd", bm, dtv, xh)
+    y = jnp.einsum("bs,bhsd->bhd", cm, h) + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+
+    y = rmsnorm(params["out_norm"], y) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"h": h, "conv": buf[:, 1:, :]}
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.ssm_inner), dtype),
+    }

@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    CollectiveStats,
+    Roofline,
+    collective_bytes,
+    model_flops,
+)
+
+__all__ = ["CollectiveStats", "Roofline", "collective_bytes", "model_flops"]

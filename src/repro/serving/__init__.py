@@ -1,0 +1,5 @@
+from repro.serving.engine import EngineConfig, MPICEngine
+from repro.serving.request import Request, State
+from repro.serving.retriever import Retriever
+
+__all__ = ["EngineConfig", "MPICEngine", "Request", "State", "Retriever"]

@@ -1,0 +1,244 @@
+"""MPIC serving engine — Fig. 5 workflow, continuous batching.
+
+Components wired here:
+  ① ``upload``       user file → precompute KV → **static library** (+ spool)
+  ② ``submit``       query with media references
+  ③ library lookup   per-user scoping, expiry (the Linker pulls entries)
+  ④ ``Retriever``    MRAG over the **dynamic library**
+  ⑤ Linker + selective attention (policy = mpic / baselines)
+  ⑥ decode loop      continuous batching over fixed slots
+
+Continuous batching under XLA static shapes: a fixed number of decode
+*slots*; each slot owns a kv-region of ``max_seq_len`` in the stacked batch
+cache.  Admission runs prefill (per request, via its CC policy) and splices
+the resulting cache into the slot; every engine step then advances ALL
+running slots by one token with a single jit'd decode step.  Position
+arrays (INVALID_POS for empty) make padding slots inert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.library import KVLibrary
+from repro.cache.transfer import ParallelLoader, plan_transfers
+from repro.core.linker import precompute_media_kv
+from repro.core.policies import POLICIES, PrefixStore
+from repro.core.segments import Prompt
+from repro.models.layers import INVALID_POS
+from repro.models.model import Model
+from repro.serving.request import Request, State
+from repro.serving.retriever import Retriever
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_seq_len: int = 512          # kv region per slot (incl. scratch slot)
+    decode_slots: int = 4           # continuous-batching capacity
+    max_prefills_per_step: int = 1
+    greedy: bool = True
+
+
+class MPICEngine:
+    def __init__(self, model: Model, params, engine_cfg: EngineConfig = None,
+                 *, static_library: Optional[KVLibrary] = None,
+                 dynamic_library: Optional[KVLibrary] = None):
+        self.model = model
+        self.params = params
+        self.cfg = engine_cfg or EngineConfig()
+        self.static_lib = static_library or KVLibrary()
+        self.dynamic_lib = dynamic_library or KVLibrary(shared=True)
+        self.retriever = Retriever()
+        self.prefix_store = PrefixStore()
+        self.loader = ParallelLoader(self.static_lib)
+
+        self.waiting: deque[Request] = deque()
+        self.running: List[Optional[Request]] = [None] * self.cfg.decode_slots
+        self.finished: List[Request] = []
+
+        self._batch_cache = model.make_cache(self.cfg.decode_slots,
+                                             self.cfg.max_seq_len)
+        self._decode_jit = jax.jit(self._decode_step_fn)
+
+    # ------------------------------------------------------------------
+    # workflow ①: upload → precompute KV → store
+    # ------------------------------------------------------------------
+    def upload(self, user_id: str, media_id: str, embeds: np.ndarray, *,
+               ttl: float = float("inf"), dynamic: bool = False) -> None:
+        k, v = precompute_media_kv(self.model, self.params,
+                                   jnp.asarray(embeds))
+        lib = self.dynamic_lib if dynamic else self.static_lib
+        lib.put(user_id, media_id, k, v, ttl=ttl)
+        if dynamic:
+            self.retriever.add(media_id, embeds)
+
+    # ------------------------------------------------------------------
+    # workflow ②: submit a query
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> Request:
+        assert request.prompt.total_len + 1 < self.cfg.max_seq_len, \
+            "prompt exceeds slot kv region"
+        self.waiting.append(request)
+        return request
+
+    # ------------------------------------------------------------------
+    # engine step: admit (prefill) then decode all running slots
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        self._admit()
+        self._decode()
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.waiting or any(self.running)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> int:
+        for i, r in enumerate(self.running):
+            if r is None:
+                return i
+        return -1
+
+    def _admit(self) -> None:
+        admitted = 0
+        while (self.waiting and admitted < self.cfg.max_prefills_per_step):
+            slot = self._free_slot()
+            if slot < 0:
+                return
+            req = self.waiting.popleft()
+            self._prefill_into_slot(req, slot)
+            admitted += 1
+
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        model, cfg = self.model, self.model.cfg
+        policy_name = req.policy
+        # PIC needs attention KV — prefix-only semantics for SSM/hybrid
+        # (DESIGN.md §Arch-applicability)
+        if cfg.arch_type in ("ssm", "hybrid") and policy_name in (
+                "mpic", "cacheblend", "full_reuse"):
+            policy_name = "full_recompute"
+
+        # parallel transfer: prefetch hit caches while the policy computes
+        media_ids = [seg.media_id for _, seg in req.prompt.media_segments()]
+        futures = self.loader.prefetch(req.prompt.user_id, media_ids)
+        self.loader.gather(futures)   # entries now hot (host tier)
+
+        result = POLICIES[policy_name](
+            model, self.params, req.prompt, self.static_lib,
+            kv_len=self.cfg.max_seq_len,
+            prefix_store=self.prefix_store, **req.policy_kwargs)
+        req.prefill_stats = result.stats
+        req.linked_media = media_ids
+
+        first_tok = int(np.argmax(result.first_logits))
+        req.output_tokens.append(first_tok)
+        req.t_first_token = time.perf_counter()
+        req.cur_len = req.prompt.total_len
+        req.slot = slot
+        req.state = State.RUNNING
+        self.running[slot] = req
+
+        # splice the request cache into the batch cache at `slot`
+        bc, rc = self._batch_cache, result.cache
+        for key in bc:
+            if key == "pos":
+                self._batch_cache["pos"] = bc["pos"].at[slot].set(rc["pos"][0])
+            elif key in ("ssm_h", "ssm_conv", "cross_k", "cross_v"):
+                self._batch_cache[key] = bc[key].at[:, slot].set(
+                    rc[key][:, 0].astype(bc[key].dtype))
+            else:
+                self._batch_cache[key] = bc[key].at[:, slot].set(
+                    rc[key][:, 0].astype(bc[key].dtype))
+
+        # workflow ④: MRAG — link retrieved KV position-independently,
+        # with NO recompute of the existing cache (PIC's payoff)
+        if req.retrieval_query is not None:
+            self._mrag_link(req)
+
+    def _mrag_link(self, req: Request) -> None:
+        hits = self.retriever.query(req.retrieval_query, req.retrieval_top_k)
+        cfg = self.model.cfg
+        for media_id, score in hits:
+            entry = self.dynamic_lib.get(req.prompt.user_id, media_id)
+            if entry is None:
+                continue
+            length = entry.k.shape[1]
+            off = req.cur_len
+            if off + length + 1 >= self.cfg.max_seq_len:
+                break
+            from repro.models.layers import rope_relink
+            k_linked = entry.k
+            if not cfg.learned_pos_emb:
+                k_linked = np.asarray(rope_relink(
+                    jnp.asarray(entry.k),
+                    jnp.full((length,), off, jnp.int32), cfg.rope_theta))
+            sl = slice(off, off + length)
+            bc = self._batch_cache
+            bc["k"] = bc["k"].at[:, req.slot, sl].set(
+                jnp.asarray(k_linked).astype(bc["k"].dtype))
+            bc["v"] = bc["v"].at[:, req.slot, sl].set(
+                jnp.asarray(entry.v).astype(bc["v"].dtype))
+            bc["pos"] = bc["pos"].at[req.slot, sl].set(
+                jnp.arange(off, off + length, dtype=jnp.int32))
+            req.cur_len += length
+            req.linked_media.append(media_id)
+
+    # ------------------------------------------------------------------
+    def _decode_step_fn(self, params, cache, tokens, positions):
+        logits, cache = self.model.decode_step(
+            params, tokens, positions, cache, positions)
+        return logits, cache
+
+    def _decode(self) -> None:
+        live = [r for r in self.running if r is not None]
+        if not live:
+            return
+        B = self.cfg.decode_slots
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.full((B, 1), self.cfg.max_seq_len - 1, np.int32)
+        for r in live:
+            tokens[r.slot, 0] = r.output_tokens[-1]
+            positions[r.slot, 0] = r.cur_len
+        logits, self._batch_cache = self._decode_jit(
+            self.params, self._batch_cache, jnp.asarray(tokens),
+            jnp.asarray(positions))
+        logits = np.asarray(logits, np.float32)
+        for r in live:
+            nxt = int(np.argmax(logits[r.slot]))
+            r.output_tokens.append(nxt)
+            r.cur_len += 1
+            if len(r.output_tokens) >= r.max_new_tokens or \
+                    r.cur_len + 1 >= self.cfg.max_seq_len:
+                r.state = State.DONE
+                r.t_done = time.perf_counter()
+                self.finished.append(r)
+                self.running[r.slot] = None
+                self._clear_slot(r.slot)
+
+    def _clear_slot(self, slot: int) -> None:
+        bc = self._batch_cache
+        if "pos" in bc:
+            bc["pos"] = bc["pos"].at[slot].set(INVALID_POS)
+
+    # ------------------------------------------------------------------
+    def report(self) -> dict:
+        done = self.finished
+        if not done:
+            return {}
+        ttfts = [r.ttft for r in done]
+        return {
+            "requests": len(done),
+            "mean_ttft_s": float(np.mean(ttfts)),
+            "p90_ttft_s": float(np.percentile(ttfts, 90)),
+            "total_tokens": sum(len(r.output_tokens) for r in done),
+            "library": self.static_lib.stats(),
+        }

@@ -1,0 +1,6 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamW, apply_updates, cosine_warmup
+from repro.training.train_loop import TrainConfig, make_train_step, train
+
+__all__ = ["AdamW", "apply_updates", "cosine_warmup", "TrainConfig",
+           "make_train_step", "train", "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,55 @@
+"""Msgpack checkpointing for arbitrary pytrees of jnp/np arrays."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack(obj: Any):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        a = np.asarray(obj)
+        if a.dtype == jnp.bfloat16:
+            return {"__nd__": True, "dtype": "bfloat16",
+                    "shape": list(a.shape),
+                    "data": a.astype(np.float32).tobytes()}
+        return {"__nd__": True, "dtype": str(a.dtype), "shape": list(a.shape),
+                "data": a.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return {"__seq__": type(obj).__name__, "items": [_pack(v) for v in obj]}
+    return obj
+
+
+def _unpack(obj: Any):
+    if isinstance(obj, dict):
+        if obj.get("__nd__"):
+            if obj["dtype"] == "bfloat16":
+                a = np.frombuffer(obj["data"], np.float32).reshape(obj["shape"])
+                return jnp.asarray(a, jnp.bfloat16)
+            a = np.frombuffer(obj["data"], np.dtype(obj["dtype"]))
+            return jnp.asarray(a.reshape(obj["shape"]))
+        if obj.get("__seq__"):
+            items = [_unpack(v) for v in obj["items"]]
+            return tuple(items) if obj["__seq__"] == "tuple" else items
+        return {k: _unpack(v) for k, v in obj.items()}
+    return obj
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))

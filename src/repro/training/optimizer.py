@@ -1,0 +1,85 @@
+"""AdamW + LR schedules (own implementation; optax is not available).
+
+Functional optax-like API: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; updates are added.
+Moments are fp32 regardless of param dtype (mixed-precision training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip
+        if self.grad_clip > 0:
+            leaves = jax.tree_util.tree_leaves(grads)
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in leaves))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) * scale, grads)
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda n, g: self.b2 * n + (1 - self.b2) * g * g, state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, n):
+            u = -(lr * (m / bc1) / (jnp.sqrt(n / bc2) + self.eps))
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                u = u - lr * self.weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, params, mu, nu)
+        return updates, AdamWState(step, mu, nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return sched

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For every assigned architecture: instantiate the REDUCED variant of the
+same family (≤2 layers, d_model ≤ 512, ≤4 experts) and run one forward AND
+one train step on CPU, asserting output shapes and no NaNs.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
+from repro.data import train_batches
+from repro.models import build_model
+from repro.training import AdamW, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    toks = rng.integers(0, min(cfg.vocab_size, 256), (B, S)).astype(np.int32)
+    labels = np.concatenate(
+        [toks[:, 1:], np.full((B, 1), -1, np.int32)], axis=1)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+    if cfg.is_multimodal:
+        mask = np.zeros((B, S), bool)
+        mask[:, 4:12] = True
+        batch["media_mask"] = jnp.asarray(mask)
+        batch["media_embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)).astype(np.float32) * 0.02)
+    if cfg.is_encoder_decoder:
+        batch["audio_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model))
+            .astype(np.float32) * 0.02)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward(arch, rng):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    logits = model.forward(
+        params, batch["tokens"],
+        media_embeds=batch.get("media_embeds"),
+        media_mask=batch.get("media_mask"),
+        audio_embeds=batch.get("audio_embeds"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch, rng):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    params2, opt_state, loss = step(params, opt_state, _batch(cfg, rng))
+    assert jnp.isfinite(loss), f"{arch} loss not finite"
+    # params actually moved
+    moved = jax.tree_util.tree_reduce(
+        lambda a, kv: a + float(jnp.sum(jnp.abs(
+            kv[0].astype(jnp.float32) - kv[1].astype(jnp.float32)))),
+        jax.tree_util.tree_map(lambda a, b: (a, b), params, params2),
+        0.0)
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    spec = {
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, f"{arch}: {got} != {spec}"
+    if arch == "granite-moe-1b-a400m":
+        assert (cfg.num_experts, cfg.experts_per_token) == (32, 8)
+    if arch == "deepseek-moe-16b":
+        assert (cfg.num_experts, cfg.experts_per_token,
+                cfg.num_shared_experts) == (64, 6, 2)
+    if arch in ("mamba2-130m",):
+        assert cfg.ssm_state == 128
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16 and cfg.hybrid
+    if arch == "qwen2.5-14b":
+        assert cfg.qkv_bias
+    if arch == "whisper-small":
+        assert cfg.is_encoder_decoder and cfg.encoder_layers == 12

@@ -1,0 +1,62 @@
+"""Serving-engine edge cases: slot recycling, expiry-driven misses,
+oversized prompts."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cache import KVLibrary
+from repro.configs import get_smoke_config
+from repro.core import Prompt, media_segment, text_segment
+from repro.data import image_embeds
+from repro.models import build_model
+from repro.serving import EngineConfig, MPICEngine, Request
+
+
+@pytest.fixture(scope="module")
+def eng():
+    cfg = get_smoke_config("llava-1.6-7b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, MPICEngine(m, params,
+                           EngineConfig(max_seq_len=128, decode_slots=1))
+
+
+def _prompt(cfg, seed, media_id=None, n_txt=8):
+    r = np.random.default_rng(seed)
+    segs = [text_segment(r.integers(8, 200, n_txt))]
+    if media_id:
+        segs.append(media_segment(media_id,
+                                  image_embeds(media_id, 12, cfg.d_model)))
+    return Prompt(segs, user_id="u1")
+
+
+def test_slot_recycling_serializes_requests(eng):
+    cfg, e = eng
+    reqs = [e.submit(Request(prompt=_prompt(cfg, i), max_new_tokens=2,
+                             policy="full_recompute")) for i in range(3)]
+    e.run()
+    assert all(len(r.output_tokens) == 2 for r in reqs)
+    assert all(r.done for r in reqs)
+    assert e.running == [None]            # slot returned
+
+
+def test_expired_media_becomes_miss_and_recomputes(eng):
+    cfg, e = eng
+    e.upload("u1", "EPH", image_embeds("EPH", 12, cfg.d_model), ttl=0.05)
+    time.sleep(0.1)
+    req = e.submit(Request(prompt=_prompt(cfg, 42, media_id="EPH"),
+                           max_new_tokens=2, policy="mpic",
+                           policy_kwargs={"k": 4}))
+    e.run()
+    assert req.prefill_stats.get("misses") == ["EPH"]   # Fig. 6 miss path
+    assert len(req.output_tokens) == 2                  # still served
+
+
+def test_oversized_prompt_rejected(eng):
+    cfg, e = eng
+    r = np.random.default_rng(0)
+    big = Prompt([text_segment(r.integers(8, 200, 500))], user_id="u1")
+    with pytest.raises(AssertionError):
+        e.submit(Request(prompt=big, max_new_tokens=1))

@@ -1,0 +1,167 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.paged_attn.ops import paged_attention
+from repro.kernels.paged_attn.ref import paged_attention_ref
+from repro.kernels.selective_attn.ops import selective_attention
+from repro.kernels.selective_attn.ref import (
+    INVALID_POS,
+    selective_attention_ref,
+)
+
+
+def _mk(rng, b, sq, skv, hq, hkv, dh, dtype, invalid_tail=0):
+    q = jnp.asarray(rng.normal(size=(b, sq, hq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, skv, hkv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, skv, hkv, dh)), dtype)
+    kv_pos = np.tile(rng.permutation(skv).astype(np.int32), (b, 1))
+    if invalid_tail:
+        kv_pos[:, -invalid_tail:] = INVALID_POS
+    qp = np.sort(rng.choice(skv, size=(sq,), replace=False)).astype(np.int32)
+    q_pos = np.tile(qp, (b, 1))
+    return q, k, v, jnp.asarray(q_pos), jnp.asarray(kv_pos)
+
+
+def _ref(q, k, v, q_pos, kv_pos, window=0):
+    out = selective_attention_ref(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        q_pos, kv_pos, window=window)
+    return jnp.moveaxis(out, 1, 2)
+
+
+# -- shape/dtype sweep --------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,hq,hkv,dh", [
+    (1, 8, 16, 2, 2, 64),      # MHA
+    (2, 16, 64, 4, 2, 64),     # GQA 2:1
+    (1, 24, 48, 8, 1, 128),    # MQA, Dh=128
+    (2, 8, 128, 4, 4, 32),     # long kv
+])
+def test_selective_attn_sweep(b, sq, skv, hq, hkv, dh, dtype):
+    rng = np.random.default_rng(0)
+    q, k, v, q_pos, kv_pos = _mk(rng, b, sq, skv, hq, hkv, dh, dtype,
+                                 invalid_tail=skv // 4)
+    out = selective_attention(q, k, v, q_pos, kv_pos, block_q=8, block_k=16,
+                              interpret=True)
+    ref = _ref(q, k, v, q_pos, kv_pos)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol,
+                               rtol=atol)
+
+
+@pytest.mark.parametrize("window", [4, 16, 64])
+def test_selective_attn_window(window):
+    rng = np.random.default_rng(1)
+    q, k, v, q_pos, kv_pos = _mk(rng, 2, 16, 64, 4, 2, 64, jnp.float32)
+    out = selective_attention(q, k, v, q_pos, kv_pos, window=window,
+                              block_q=8, block_k=16, interpret=True)
+    ref = _ref(q, k, v, q_pos, kv_pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_selective_attn_non_multiple_shapes():
+    """Padding path: Sq/Skv not multiples of the block sizes."""
+    rng = np.random.default_rng(2)
+    q, k, v, q_pos, kv_pos = _mk(rng, 1, 13, 37, 2, 2, 64, jnp.float32)
+    out = selective_attention(q, k, v, q_pos, kv_pos, block_q=8, block_k=16,
+                              interpret=True)
+    ref = _ref(q, k, v, q_pos, kv_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+# -- hypothesis property tests ------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sq=st.integers(1, 12),
+    skv=st.integers(4, 40),
+    hq=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_selective_attn_property(sq, skv, hq, group, seed):
+    if hq % group:
+        group = 1
+    rng = np.random.default_rng(seed)
+    q, k, v, q_pos, kv_pos = _mk(rng, 1, min(sq, skv), skv, hq, hq // group,
+                                 64, jnp.float32)
+    out = selective_attention(q, k, v, q_pos, kv_pos, block_q=8, block_k=8,
+                              interpret=True)
+    ref = _ref(q, k, v, q_pos, kv_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_selective_attn_kv_permutation_invariance(seed):
+    """Position independence: permuting KV slots together with their pos
+    array must not change the output — the kernel's masking is purely
+    positional (the paper's PIC property, stated as an invariant)."""
+    rng = np.random.default_rng(seed)
+    q, k, v, q_pos, kv_pos = _mk(rng, 1, 8, 32, 2, 2, 64, jnp.float32)
+    out1 = selective_attention(q, k, v, q_pos, kv_pos, block_q=8, block_k=8,
+                               interpret=True)
+    perm = rng.permutation(32)
+    out2 = selective_attention(q, k[:, perm], v[:, perm], q_pos,
+                               kv_pos[:, perm], block_q=8, block_k=8,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-4,
+                               rtol=1e-4)
+
+
+# -- paged decode attention ---------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,dh,pages,ps,mp", [
+    (2, 4, 2, 64, 8, 8, 3),
+    (3, 8, 2, 64, 16, 8, 4),
+    (1, 4, 4, 128, 8, 16, 2),
+])
+def test_paged_attn_sweep(b, hq, hkv, dh, pages, ps, mp, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, hq, dh)), dtype)
+    kp = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), dtype)
+    vp = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), dtype)
+    pt = jnp.asarray(np.stack([rng.choice(pages, mp, replace=False)
+                               for _ in range(b)]).astype(np.int32))
+    lengths = jnp.asarray(rng.integers(1, mp * ps, b).astype(np.int32))
+    out = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, pt, lengths)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol,
+                               rtol=atol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), length=st.integers(1, 31))
+def test_paged_attn_length_property(seed, length):
+    """Tokens beyond `length` never contribute."""
+    rng = np.random.default_rng(seed)
+    b, hq, hkv, dh, pages, ps, mp = 1, 2, 2, 64, 8, 8, 4
+    q = jnp.asarray(rng.normal(size=(b, hq, dh)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), jnp.float32)
+    pt = jnp.asarray(rng.choice(pages, (b, mp), replace=False).astype(np.int32))
+    lengths = jnp.asarray([length], jnp.int32)
+    out1 = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+    # poison everything past `length`
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    for t in range(length, mp * ps):
+        pg, off = pt[0, t // ps], t % ps
+        kp2[pg, off] = 99.0
+        vp2[pg, off] = -99.0
+    out2 = paged_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), pt,
+                           lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5,
+                               rtol=1e-5)

@@ -1,0 +1,111 @@
+"""KV library tiers, expiry, scoping + transfer planner (Fig. 6 logic)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.cache import (
+    KVLibrary,
+    TIER_DISK,
+    TIER_HBM,
+    TIER_HOST,
+    ParallelLoader,
+    plan_transfers,
+)
+
+
+def _kv(nbytes=1 << 12):
+    n = nbytes // 8
+    return (np.zeros((1, n // 16, 2, 8), np.float32),
+            np.zeros((1, n // 16, 2, 8), np.float32))
+
+
+def test_user_scoping(tmp_path):
+    lib = KVLibrary(spool_dir=str(tmp_path))
+    k, v = _kv()
+    lib.put("alice", "img1", k, v)
+    assert lib.get("alice", "img1") is not None
+    assert lib.get("bob", "img1") is None
+
+
+def test_shared_dynamic_library(tmp_path):
+    lib = KVLibrary(spool_dir=str(tmp_path), shared=True)
+    k, v = _kv()
+    lib.put("admin", "ref1", k, v)
+    assert lib.get("anyone", "ref1") is not None
+
+
+def test_expiry(tmp_path):
+    lib = KVLibrary(spool_dir=str(tmp_path))
+    k, v = _kv()
+    lib.put("u", "ephemeral", k, v, ttl=0.05)
+    assert lib.get("u", "ephemeral") is not None
+    time.sleep(0.08)
+    assert lib.get("u", "ephemeral") is None   # the Fig. 6 "miss" path
+    assert lib.expire_now() == 0               # already evicted
+
+
+def test_tier_demotion_and_disk_roundtrip(tmp_path):
+    k, v = _kv(1 << 14)
+    lib = KVLibrary(hbm_capacity=int(1.5 * (k.nbytes + v.nbytes)),
+                    host_capacity=int(1.5 * (k.nbytes + v.nbytes)),
+                    spool_dir=str(tmp_path))
+    lib.put("u", "a", k, v)
+    lib.put("u", "b", k + 1, v + 1)
+    lib.put("u", "c", k + 2, v + 2)
+    tiers = sorted(lib.peek_tier("u", m) for m in "abc")
+    assert TIER_DISK in tiers and (TIER_HBM in tiers or TIER_HOST in tiers)
+    # disk entry must round-trip bit-exactly
+    for m in "abc":
+        e = lib.get("u", m)
+        assert e is not None and e.k is not None
+    np.testing.assert_array_equal(lib.get("u", "c").k, k + 2)
+
+
+def test_transfer_plan_overlap(tmp_path):
+    lib = KVLibrary(spool_dir=str(tmp_path))
+    k, v = _kv(1 << 16)
+    lib.put("u", "hit1", k, v)
+    lib.put("u", "hit2", k, v)
+    plan = plan_transfers(lib, "u", ["hit1", "hit2", "miss1", "miss2"],
+                          compute_estimator=lambda m: 0.010)
+    assert [m for m in plan.misses] == ["miss1", "miss2"]
+    assert plan.compute_s == pytest.approx(0.020)
+    # parallel schedule never slower than sequential
+    assert plan.parallel_s <= plan.sequential_s
+    assert plan.parallel_s == pytest.approx(
+        max(plan.load_s, plan.compute_s))
+
+
+def test_parallel_loader(tmp_path):
+    lib = KVLibrary(spool_dir=str(tmp_path))
+    k, v = _kv()
+    for i in range(4):
+        lib.put("u", f"m{i}", k + i, v)
+    loader = ParallelLoader(lib)
+    futs = loader.prefetch("u", [f"m{i}" for i in range(4)] + ["nope"])
+    got = loader.gather(futs)
+    assert got["nope"] is None
+    assert all(got[f"m{i}"] is not None for i in range(4))
+    loader.close()
+
+
+def test_paged_pool():
+    from repro.cache import PagedConfig, PagedKVPool
+    import jax.numpy as jnp
+    pcfg = PagedConfig(num_pages=16, page_size=8, num_layers=2,
+                       num_kv_heads=2, head_dim=16, dtype="float32")
+    pool = PagedKVPool(pcfg)
+    pt = pool.alloc("r1", 20)            # 3 pages
+    assert pt is not None and len(pt) == 3
+    assert pool.free_pages == 13
+    k_new = jnp.ones((2, 20, 2, 16))
+    pool.write_tokens(pt, 0, k_new, k_new * 2)
+    k, v = pool.gather(pt, 20)
+    assert k.shape == (2, 20, 2, 16)
+    np.testing.assert_allclose(np.asarray(k), 1.0)
+    np.testing.assert_allclose(np.asarray(v), 2.0)
+    pt2 = pool.extend("r1", 10, 20)      # grow to 30 tokens -> 4 pages
+    assert len(pt2) == 4
+    pool.free("r1")
+    assert pool.free_pages == 16

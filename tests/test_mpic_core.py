@@ -1,0 +1,197 @@
+"""MPIC core: selection, linker (position relocation), policies, quality
+ordering — the paper's central claims at smoke scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import KVLibrary
+from repro.configs import get_smoke_config
+from repro.core import (
+    POLICIES,
+    PrefixStore,
+    Prompt,
+    link_prompt,
+    media_segment,
+    mpic_selection,
+    full_reuse_selection,
+    precompute_media_kv,
+    text_segment,
+)
+from repro.core.select import cacheblend_selection, selection_indices
+from repro.models import build_model
+from repro.models.layers import INVALID_POS, apply_rope, rope_relink
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    rng = np.random.default_rng(0)
+    cfg = get_smoke_config("llava-1.6-7b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    lib = KVLibrary(spool_dir=str(tmp_path_factory.mktemp("spool")))
+    embA = rng.normal(size=(24, cfg.d_model)).astype(np.float32) * 0.02
+    embB = rng.normal(size=(20, cfg.d_model)).astype(np.float32) * 0.02
+    kA, vA = precompute_media_kv(m, params, jnp.asarray(embA))
+    kB, vB = precompute_media_kv(m, params, jnp.asarray(embB))
+    lib.put("u1", "A", kA, vA)
+    lib.put("u1", "B", kB, vB)
+
+    def prompt(seed=0):
+        r = np.random.default_rng(seed)
+        return Prompt([
+            text_segment(r.integers(8, 200, 7), kind="system"),
+            text_segment(r.integers(8, 200, 5)),
+            media_segment("A", embA),
+            text_segment(r.integers(8, 200, 4)),
+            media_segment("B", embB),
+            text_segment(r.integers(8, 200, 6)),
+        ], user_id="u1")
+
+    return cfg, m, params, lib, prompt
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+def test_mpic_selection(setup):
+    _, _, _, _, prompt = setup
+    p = prompt()
+    sel = mpic_selection(p, k=8)
+    media = p.media_mask()
+    # all text selected
+    assert sel[~media].all()
+    # exactly first k of each media segment selected
+    for off, seg in p.media_segments():
+        assert sel[off:off + 8].all()
+        assert not sel[off + 8:off + seg.length].any()
+
+
+def test_full_reuse_selection_is_mpic_0(setup):
+    _, _, _, _, prompt = setup
+    p = prompt()
+    assert (full_reuse_selection(p) == mpic_selection(p, 0)).all()
+
+
+def test_cacheblend_selection_picks_top_deviation(setup):
+    _, _, _, _, prompt = setup
+    p = prompt()
+    dev = np.zeros(p.total_len)
+    media_idx = np.nonzero(p.media_mask())[0]
+    dev[media_idx[5]] = 10.0
+    dev[media_idx[11]] = 9.0
+    sel = cacheblend_selection(p, dev, r=2 / len(media_idx))
+    assert sel[media_idx[5]] and sel[media_idx[11]]
+    assert sel.sum() == (~p.media_mask()).sum() + 2
+
+
+# ---------------------------------------------------------------------------
+# linker: exact position relocation
+# ---------------------------------------------------------------------------
+
+def test_rope_relink_composes():
+    k = jnp.asarray(np.random.default_rng(1).normal(size=(4, 6, 2, 64)),
+                    jnp.float32)
+    theta = 1e4
+    base = apply_rope(k, jnp.arange(6), theta)
+    # K computed at canonical positions 0..5, relinked by +11 ==
+    # K computed directly at positions 11..16
+    relinked = rope_relink(base, jnp.full((6,), 11), theta)
+    direct = apply_rope(k, jnp.arange(11, 17), theta)
+    np.testing.assert_allclose(np.asarray(relinked), np.asarray(direct),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_linker_layout(setup):
+    cfg, m, params, lib, prompt = setup
+    p = prompt()
+    sel = mpic_selection(p, k=4)
+    link = link_prompt(m, p, lib, sel)
+    pos = np.asarray(link.cache["pos"][0])
+    sel_idx = link.sel_idx
+    # selected slots are INVALID (dummy cache) until the selective prefill
+    assert (pos[sel_idx] == INVALID_POS).all()
+    # reused media slots carry their linked positions
+    for off, seg in p.media_segments():
+        reused = np.arange(off + 4, off + seg.length)
+        assert (pos[reused] == reused).all()
+    assert link.n_reused + link.n_recomputed == p.total_len
+
+
+def test_linker_miss_falls_back_to_recompute(setup):
+    cfg, m, params, lib, prompt = setup
+    p = prompt()
+    p.segments[2].media_id = "MISSING"
+    link = link_prompt(m, p, lib, mpic_selection(p, k=4))
+    assert link.misses == ["MISSING"]
+    # the whole missing segment became selected
+    off, seg = p.media_segments()[0]
+    sel_set = set(link.sel_idx.tolist())
+    assert all(i in sel_set for i in range(off, off + seg.length))
+
+
+# ---------------------------------------------------------------------------
+# policies: the paper's quality/efficiency ordering
+# ---------------------------------------------------------------------------
+
+def _kl(p_logits, q_logits):
+    p = jax.nn.softmax(jnp.asarray(p_logits))
+    q = jax.nn.log_softmax(jnp.asarray(q_logits))
+    return float(jnp.sum(p * (jnp.log(p + 1e-20) - q)))
+
+
+def test_policy_ordering(setup):
+    cfg, m, params, lib, prompt = setup
+    p = prompt()
+    oracle = POLICIES["full_recompute"](m, params, p)
+    mpic = POLICIES["mpic"](m, params, p, lib, k=8)
+    fullr = POLICIES["full_reuse"](m, params, p, lib)
+    cb = POLICIES["cacheblend"](m, params, p, lib, r=0.2)
+
+    kl_mpic, kl_full = _kl(oracle.first_logits, mpic.first_logits), \
+        _kl(oracle.first_logits, fullr.first_logits)
+    # partial reuse repairs quality vs full reuse (Insight 3 payoff)
+    assert kl_mpic < kl_full
+    # MPIC is single-step; full reuse and CacheBlend are two-step
+    assert mpic.stats["engine_steps"] == 1
+    assert fullr.stats["engine_steps"] == 2
+    assert cb.stats["engine_steps"] == 2
+    # reuse accounting
+    assert mpic.stats["n_recomputed"] < oracle.stats["n_recomputed"]
+    assert fullr.stats["n_recomputed"] <= mpic.stats["n_recomputed"]
+
+
+def test_prefix_caching_exactness(setup):
+    cfg, m, params, lib, prompt = setup
+    p = prompt()
+    sys_toks = p.segments[0].tokens
+    cache = m.make_cache(1, len(sys_toks) + 1)
+    _, cache = m.prefill(params, jnp.asarray(sys_toks[None]), cache)
+    ps = PrefixStore()
+    ps.put(sys_toks, np.asarray(cache["k"][:, 0, :len(sys_toks)]),
+           np.asarray(cache["v"][:, 0, :len(sys_toks)]))
+    oracle = POLICIES["full_recompute"](m, params, p)
+    pref = POLICIES["prefix_caching"](m, params, p, lib, prefix_store=ps)
+    assert pref.stats["n_reused"] == len(sys_toks)
+    # prefix caching is mathematically exact
+    np.testing.assert_allclose(pref.first_logits, oracle.first_logits,
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_mpic_position_independence(setup):
+    """The same stored cache serves the SAME media at DIFFERENT offsets —
+    the defining property prefix caching lacks."""
+    cfg, m, params, lib, prompt = setup
+    r = np.random.default_rng(7)
+    emb = np.asarray(lib.get("u1", "A").k)  # just to confirm presence
+    embA = None
+    for seed, lead in [(1, 3), (2, 9)]:
+        pr = Prompt([
+            text_segment(r.integers(8, 200, lead)),
+            media_segment("A", np.zeros((24, cfg.d_model), np.float32)),
+            text_segment(r.integers(8, 200, 5)),
+        ], user_id="u1")
+        res = POLICIES["mpic"](m, params, pr, lib, k=4)
+        assert res.stats["n_reused"] == 20   # 24 - k, both offsets
+        assert not res.stats["misses"]

@@ -1,0 +1,109 @@
+"""Hypothesis property tests on system invariants: prompt/selection
+algebra, linker accounting, roofline HLO parsing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.segments import Prompt, Segment, media_segment, text_segment
+from repro.core.select import (
+    full_reuse_selection,
+    mpic_selection,
+    selection_indices,
+)
+from repro.roofline.analysis import _group_size, _wire_bytes, collective_bytes
+
+
+# ---------------------------------------------------------------------------
+# prompt / selection algebra
+# ---------------------------------------------------------------------------
+
+@st.composite
+def prompts(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    n_seg = draw(st.integers(1, 6))
+    segs = []
+    for i in range(n_seg):
+        if draw(st.booleans()):
+            ln = draw(st.integers(1, 20))
+            segs.append(text_segment(rng.integers(8, 200, ln)))
+        else:
+            ln = draw(st.integers(1, 24))
+            segs.append(media_segment(
+                f"m{i}", rng.standard_normal((ln, 8)).astype(np.float32)))
+    return Prompt(segs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=prompts(), k=st.integers(0, 32))
+def test_selection_partition_invariant(p, k):
+    """Selected ∪ reused == all tokens; reused ⊆ media; text ⊆ selected."""
+    sel = mpic_selection(p, k)
+    media = p.media_mask()
+    assert sel.shape == (p.total_len,)
+    assert (~sel <= media).all()          # unselected -> media
+    assert (sel[~media]).all()            # all text selected
+    # exactly min(k, len) per media segment
+    n_sel_media = sum(min(k, seg.length) for _, seg in p.media_segments())
+    assert (sel & media).sum() == n_sel_media
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=prompts())
+def test_offsets_partition_prompt(p):
+    offs = p.offsets()
+    assert offs[0] == 0
+    for (o, s), nxt in zip(zip(offs, p.segments), offs[1:] + [p.total_len]):
+        assert o + s.length == nxt
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=prompts(), k1=st.integers(0, 8), k2=st.integers(9, 64))
+def test_selection_monotone_in_k(p, k1, k2):
+    s1, s2 = mpic_selection(p, k1), mpic_selection(p, k2)
+    assert (s1 <= s2).all()               # larger k selects a superset
+    assert (full_reuse_selection(p) <= s1).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=prompts(), k=st.integers(0, 16))
+def test_selection_indices_sorted_unique(p, k):
+    idx = selection_indices(mpic_selection(p, k))
+    assert (np.diff(idx) > 0).all() if len(idx) > 1 else True
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %ag = f32[256,8]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}, metadata={op_name="jit(fn)/while/body/dot_general"}
+  %ar = bf16[2,4096,5120]{2,1,0} all-reduce(%y), channel_id=2, replica_groups=[16,16]<=[256], metadata={op_name="jit(fn)/dot_general"}
+  %cp = f32[32,16]{1,0} collective-permute(%z), channel_id=3, source_target_pairs={{0,1},{1,0}}, metadata={op_name="jit(fn)/while/body/while/body/split"}
+"""
+
+
+def test_collective_parser_kinds_and_multipliers():
+    stats = collective_bytes(HLO_SAMPLE, trip_counts=[24, 8])
+    # all-gather: 256*8*4 bytes * 15/16 * L(24)
+    ag = 256 * 8 * 4 * 15 / 16 * 24
+    # all-reduce: 2*4096*5120*2 * 2*(15/16), no loop
+    ar = 2 * 4096 * 5120 * 2 * 2 * 15 / 16
+    # permute: 32*16*4 at depth 2 -> *24*8
+    cp = 32 * 16 * 4 * 24 * 8
+    assert stats.by_kind["all-gather"] == pytest.approx(ag)
+    assert stats.by_kind["all-reduce"] == pytest.approx(ar)
+    assert stats.by_kind["collective-permute"] == pytest.approx(cp)
+    assert stats.op_count == 3
+    assert stats.total_bytes == pytest.approx(ag + ar + cp)
+
+
+def test_wire_bytes_model():
+    assert _wire_bytes("all-gather", 160, 16) == pytest.approx(150)
+    assert _wire_bytes("all-reduce", 160, 16) == pytest.approx(300)
+    assert _wire_bytes("reduce-scatter", 10, 16) == pytest.approx(150)
+    assert _wire_bytes("collective-permute", 99, 4) == 99.0
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[16,16]<=[256]") == 16
+    assert _group_size("replica_groups={{0,1,2,3}}") == 4
