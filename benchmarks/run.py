@@ -15,13 +15,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation_mpic_k, fig3_prefix_vs_fullreuse,
-                            fig4_attention_sparsity, fig6_parallel_transfer,
-                            fig8_kv_distance, fig9_main_comparison,
-                            fig10_sensitivity, roofline_table)
+                            fig4_attention_sparsity, fig6_overlap_serving,
+                            fig6_parallel_transfer, fig8_kv_distance,
+                            fig9_main_comparison, fig10_sensitivity,
+                            roofline_table)
     suite = {
         "fig3": fig3_prefix_vs_fullreuse.main,
         "fig4": fig4_attention_sparsity.main,
         "fig6": fig6_parallel_transfer.main,
+        "fig6_serving": fig6_overlap_serving.main,
         "fig8": fig8_kv_distance.main,
         "fig9": fig9_main_comparison.main,
         "fig10": fig10_sensitivity.main,

@@ -21,8 +21,13 @@ def drive(policy: str, n_requests: int, policy_kwargs=None):
     cfg = get_smoke_config("llava-1.6-7b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    # pipelined admission: fetches for the next 2 queued requests are issued
+    # while the current request's policy recompute runs; two prefills per
+    # step; long prompts chunk across steps so decode slots keep advancing
     eng = MPICEngine(model, params,
-                     EngineConfig(max_seq_len=512, decode_slots=4))
+                     EngineConfig(max_seq_len=512, decode_slots=4,
+                                  max_prefills_per_step=2, prefetch_depth=2,
+                                  prefill_chunk_tokens=96))
 
     dialogues = make_dialogues(n=n_requests, n_images=2,
                                d_model=cfg.d_model, media_len=32,
@@ -61,9 +66,13 @@ def main():
     args = ap.parse_args()
     for policy, kw in (("prefix_caching", {}), ("mpic", {"k": 8})):
         rep = drive(policy, args.requests, kw)
+        sched = rep.pop("scheduler", {})
         print(f"\n== engine[{policy}] ==")
         for k, v in rep.items():
             print(f"  {k}: {v}")
+        print("  scheduler:")
+        for k, v in sched.items():
+            print(f"    {k}: {v}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,25 @@
-from repro.cache.library import KVLibrary, TIER_BW, TIER_DISK, TIER_HBM, TIER_HOST
+from repro.cache.library import (
+    Entry,
+    KVLibrary,
+    SimulatedLatencyLibrary,
+    TIER_BW,
+    TIER_DISK,
+    TIER_HBM,
+    TIER_HOST,
+)
 from repro.cache.paged import PagedConfig, PagedKVPool
-from repro.cache.transfer import ParallelLoader, TransferPlan, plan_transfers
+from repro.cache.transfer import (
+    LoadRecord,
+    ParallelLoader,
+    PrefetchHandle,
+    TransferPlan,
+    plan_transfers,
+)
 
 __all__ = [
-    "KVLibrary", "TIER_BW", "TIER_DISK", "TIER_HBM", "TIER_HOST",
-    "PagedConfig", "PagedKVPool", "ParallelLoader", "TransferPlan",
+    "Entry", "KVLibrary", "SimulatedLatencyLibrary",
+    "TIER_BW", "TIER_DISK", "TIER_HBM", "TIER_HOST",
+    "PagedConfig", "PagedKVPool",
+    "LoadRecord", "ParallelLoader", "PrefetchHandle", "TransferPlan",
     "plan_transfers",
 ]

@@ -5,13 +5,14 @@ separated per user (user A cannot link user B's cache).  The **dynamic
 library** stores the MRAG corpus, shared and refreshed by the operator.
 
 Entries live on a tier: HBM (device arrays) → HOST (numpy) → DISK
-(zstd-compressed npz in a spool dir).  A single image KV can reach ~1 GB at
+(npz in a spool dir).  A single image KV can reach ~1 GB at
 LLaVA scale (paper §4.1), so HBM capacity is tight and entries demote under
 pressure; expired entries are deleted (the Fig. 6 "m misses" path).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import threading
 import time
@@ -43,27 +44,44 @@ class Entry:
     path: Optional[str] = None   # disk spool path
     qk: Optional[QuantizedKV] = None   # int8 storage (quantized library)
     qv: Optional[QuantizedKV] = None
+    # byte size retained while k/v are spooled out; 0 until known.  Must be a
+    # real field: a disk-tier entry that never went through ``_spool`` (e.g.
+    # constructed directly, or a crash-recovered spool file) still has nbytes.
+    _nbytes: int = 0
+    # serializes concurrent ``materialize`` calls from ParallelLoader workers
+    _mlock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def nbytes(self) -> int:
+        """Resident bytes: a dequantized entry holds BOTH the int8 storage
+        and the fp32 compute copy, and capacity must see the sum."""
+        total = 0
         if self.qk is not None:
-            return self.qk.nbytes + self.qv.nbytes
+            total += self.qk.nbytes + self.qv.nbytes
         if self.k is not None:
-            return self.k.nbytes + self.v.nbytes
-        return self._nbytes
+            total += self.k.nbytes + self.v.nbytes
+        return total if total else self._nbytes
 
     def materialize(self) -> "Entry":
-        if self.tier == TIER_DISK and self.k is None and self.qk is None:
-            with np.load(self.path) as z:
-                if "qk" in z:
-                    self.qk = QuantizedKV(z["qk"], z["qk_scale"])
-                    self.qv = QuantizedKV(z["qv"], z["qv_scale"])
-                else:
-                    self.k, self.v = z["k"], z["v"]
-        if self.qk is not None and self.k is None:
-            # dequantize at link time (int8 storage, fp compute)
-            self.k = dequantize_kv(self.qk)
-            self.v = dequantize_kv(self.qv)
+        with self._mlock:
+            if self.tier == TIER_DISK and self.k is None and self.qk is None:
+                with np.load(self.path) as z:
+                    if "qk" in z:
+                        self.qk = QuantizedKV(z["qk"], z["qk_scale"])
+                        self.qv = QuantizedKV(z["qv"], z["qv_scale"])
+                    else:
+                        self.k, self.v = z["k"], z["v"]
+                # the KV now lives in host memory: flip the tier so capacity
+                # accounting sees the resident bytes and _rebalance can
+                # demote it again under pressure (the spool file is
+                # rewritten then) — otherwise every accessed disk entry
+                # would stay resident forever, invisible to the caps
+                self.tier = TIER_HOST
+            if self.qk is not None and self.k is None:
+                # dequantize at link time (int8 storage, fp compute)
+                self.k = dequantize_kv(self.qk)
+                self.v = dequantize_kv(self.qv)
         return self
 
 
@@ -106,7 +124,12 @@ class KVLibrary:
         return e
 
     def get(self, user_id: str, media_id: str) -> Optional[Entry]:
-        """Lookup honouring user scoping and expiry (step ③)."""
+        """Lookup honouring user scoping and expiry (step ③).
+
+        The library lock covers only the lookup; the (potentially slow) disk
+        read in ``materialize`` runs outside it so ParallelLoader workers can
+        fetch different entries concurrently (per-entry lock inside).
+        """
         with self._lock:
             e = self._entries.get(self._key(user_id, media_id))
             if e is None:
@@ -115,7 +138,29 @@ class KVLibrary:
                 self._evict(self._key(user_id, media_id))
                 return None
             e.last_used = time.time()
-            return e.materialize()
+        was_disk = e.tier == TIER_DISK
+        try:
+            e.materialize()
+        except FileNotFoundError:
+            # spool file gone: either a concurrent _evict won the race, or
+            # something external (tmp reaper) deleted it.  Drop the zombie
+            # entry so the library heals — identity-guarded so we never pop
+            # a replacement entry that re-used the key in the meantime.
+            with self._lock:
+                key = self._key(user_id, media_id)
+                if self._entries.get(key) is e:
+                    self._entries.pop(key)
+            return None
+        if was_disk:
+            # the promotion made KV resident: enforce the caps now, or a
+            # get-only serving phase would grow host memory unboundedly.
+            # Holding e._mlock makes the non-blocking _spool skip the entry
+            # we are about to hand out (no one blocks on _mlock while
+            # holding _lock, so this ordering cannot deadlock).
+            with e._mlock:
+                with self._lock:
+                    self._rebalance()
+        return e
 
     def peek_tier(self, user_id: str, media_id: str) -> Optional[str]:
         e = self._entries.get(self._key(user_id, media_id))
@@ -136,24 +181,47 @@ class KVLibrary:
 
     # -- tier management -------------------------------------------------------
     def _evict(self, key) -> None:
+        # no e._mlock here: callers hold the library lock, and waiting on a
+        # loader worker mid-np.load would stall every library operation.  A
+        # concurrent materialize either already has the fd open (POSIX unlink
+        # is safe) or hits FileNotFoundError, which its callers treat as a
+        # miss.
         e = self._entries.pop(key, None)
         if e is not None and e.path and os.path.exists(e.path):
             os.unlink(e.path)
 
-    def _spool(self, key, e: Entry) -> None:
-        path = os.path.join(self.spool_dir,
-                            f"{abs(hash(key)) & 0xFFFFFFFFFFFF:x}.npz")
-        if e.qk is not None:
-            np.savez(path, qk=e.qk.q, qk_scale=e.qk.scale,
-                     qv=e.qv.q, qv_scale=e.qv.scale)
-            e._nbytes = e.qk.nbytes + e.qv.nbytes
-            e.qk = e.qv = None
-        else:
-            np.savez(path, k=e.k, v=e.v)
-            e._nbytes = e.k.nbytes + e.v.nbytes
-        e.path = path
-        e.k = e.v = None
-        e.tier = TIER_DISK
+    def _spool(self, key, e: Entry) -> bool:
+        """Demote one entry to disk; returns False if it is in active use.
+
+        Callers hold the library lock, so we must never *wait* on the entry
+        lock (a loader worker can hold it for a whole disk read — blocking
+        here would stall every library operation).  An entry being
+        materialized right now is by definition hot: skip it and let
+        ``_rebalance`` pick the next LRU victim.
+        """
+        if not e._mlock.acquire(blocking=False):
+            return False
+        try:
+            # stable digest, not hash(): PYTHONHASHSEED randomization would
+            # orphan spool files across restarts, and a 48-bit truncation
+            # could collide two (user, media) keys onto one file — serving
+            # one user another user's KV
+            digest = hashlib.sha1(repr(key).encode()).hexdigest()[:24]
+            path = os.path.join(self.spool_dir, f"{digest}.npz")
+            if e.qk is not None:
+                np.savez(path, qk=e.qk.q, qk_scale=e.qk.scale,
+                         qv=e.qv.q, qv_scale=e.qv.scale)
+                e._nbytes = e.qk.nbytes + e.qv.nbytes
+                e.qk = e.qv = None
+            else:
+                np.savez(path, k=e.k, v=e.v)
+                e._nbytes = e.k.nbytes + e.v.nbytes
+            e.path = path
+            e.k = e.v = None
+            e.tier = TIER_DISK
+        finally:
+            e._mlock.release()
+        return True
 
     def _rebalance(self) -> None:
         """Demote LRU entries when a tier exceeds capacity."""
@@ -165,11 +233,13 @@ class KVLibrary:
             for k, e in live:
                 if used <= cap:
                     break
-                used -= e.nbytes
+                freed = e.nbytes
                 if demote == TIER_DISK:
-                    self._spool(k, e)
+                    if not self._spool(k, e):
+                        continue        # mid-materialize: next LRU victim
                 else:
                     e.tier = TIER_HOST
+                used -= freed
 
     # -- introspection -----------------------------------------------------------
     def stats(self) -> dict:
@@ -178,3 +248,31 @@ class KVLibrary:
             for e in self._entries.values():
                 by_tier[e.tier] = by_tier.get(e.tier, 0) + e.nbytes
             return {"entries": len(self._entries), "bytes_by_tier": by_tier}
+
+
+class SimulatedLatencyLibrary(KVLibrary):
+    """KVLibrary with injected per-``get`` latency and a fetch log.
+
+    Smoke-scale KV entries load from disk in microseconds, which hides the
+    load/compute overlap the scheduler exists to exploit.  This subclass
+    sleeps ``tier_latency_s[tier]`` per get (modelling paper-scale ~1 GB
+    entries over the Fig. 6 tier bandwidths) and records every fetch
+    interval so benchmarks/tests can assert that loads genuinely interleave
+    with compute.  The sleep happens outside any lock, so concurrent loader
+    workers overlap exactly as real disk reads would.
+    """
+
+    def __init__(self, *, tier_latency_s: Optional[Dict[str, float]] = None,
+                 **kw):
+        super().__init__(**kw)
+        self.tier_latency_s = dict(tier_latency_s or {})
+        self.get_log: list = []      # (media_id, t_start, t_end)
+
+    def get(self, user_id: str, media_id: str) -> Optional[Entry]:
+        t0 = time.perf_counter()
+        delay = self.tier_latency_s.get(self.peek_tier(user_id, media_id), 0.0)
+        if delay:
+            time.sleep(delay)
+        e = super().get(user_id, media_id)
+        self.get_log.append((media_id, t0, time.perf_counter()))
+        return e

@@ -24,7 +24,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.cache.library import TIER_BW, TIER_HBM, Entry, KVLibrary
+from repro.cache.library import (
+    TIER_BW,
+    TIER_DISK,
+    TIER_HBM,
+    TIER_HOST,
+    Entry,
+    KVLibrary,
+)
 
 
 @dataclasses.dataclass
@@ -59,6 +66,122 @@ def plan_transfers(library: KVLibrary, user_id: str,
     return TransferPlan(hits, misses, load_s, compute_s)
 
 
+@dataclasses.dataclass
+class LoadRecord:
+    """One in-flight library fetch: future + wall-clock instrumentation."""
+    media_id: str
+    future: Optional[cf.Future] = None
+    t_start: float = 0.0                  # worker actually began the fetch
+    t_end: float = 0.0                    # worker finished (hit or miss)
+
+    @property
+    def busy_s(self) -> float:
+        """Time a loader worker actually spent on this fetch."""
+        return max(0.0, self.t_end - self.t_start) if self.t_end else 0.0
+
+
+class PrefetchHandle:
+    """Per-request bundle of in-flight fetches with per-entry completion.
+
+    Returned by :meth:`ParallelLoader.prefetch_handle`.  The serving
+    scheduler issues one handle per queued request; the linker then gathers
+    *per media id* at link time via :meth:`get` (blocking only on entries
+    that have not finished loading yet).  Exposes an as-completed iterator
+    and per-entry done-callbacks for fully asynchronous consumers, plus the
+    measured load intervals the engine uses to compute overlap ratios.
+    """
+
+    def __init__(self, loader: "ParallelLoader", user_id: str,
+                 records: Dict[str, LoadRecord]):
+        self._loader = loader
+        self.user_id = user_id
+        self.records = records
+        self.blocked_s = 0.0      # wall time a consumer spent waiting in get()
+        self.blocked_intervals: List[Tuple[float, float]] = []
+
+    # -- gather-at-link-time ------------------------------------------------
+    def _revalidate(self, media_id: str,
+                    entry: Optional[Entry]) -> Optional[Entry]:
+        """The fetch may predate the gather by a whole queue wait: the entry
+        can have been spooled back to disk (k/v nulled) or have expired in
+        between.  A ready entry passes through; anything stale goes back
+        through ``library.get`` so re-promotion runs the library's own
+        expiry / last_used / capacity-rebalance machinery instead of
+        bypassing it."""
+        if entry is None:
+            return None
+        if entry.k is not None and time.time() <= entry.expires:
+            return entry
+        return self._loader.library.get(self.user_id, media_id)
+
+    def get(self, media_id: str, timeout: float = 60.0) -> Optional[Entry]:
+        """Entry for ``media_id`` (None on miss), blocking if still loading.
+
+        Ids that were never prefetched fall back to a synchronous library
+        get, so the handle is a drop-in ``entries`` mapping for the linker.
+        """
+        rec = self.records.get(media_id)
+        if rec is None:
+            return self._loader.library.get(self.user_id, media_id)
+        # only a gather that actually waits counts as blocked time —
+        # re-gathers of completed futures must not pollute the TTFT
+        # breakdown or the overlap subtraction
+        was_pending = not rec.future.done()
+        t0 = time.perf_counter()
+        entry = rec.future.result(timeout=timeout)
+        if was_pending:
+            t1 = time.perf_counter()
+            self.blocked_s += t1 - t0
+            self.blocked_intervals.append((t0, t1))
+        return self._revalidate(media_id, entry)
+
+    def wait(self, timeout: float = 60.0) -> Dict[str, Optional[Entry]]:
+        return {mid: self.get(mid, timeout=timeout) for mid in self.records}
+
+    # -- async per-entry completion -----------------------------------------
+    def as_completed(self, timeout: Optional[float] = None):
+        """Yield ``(media_id, entry)`` in completion order."""
+        by_future = {rec.future: mid for mid, rec in self.records.items()}
+        for fut in cf.as_completed(by_future, timeout=timeout):
+            mid = by_future[fut]
+            yield mid, self._revalidate(mid, fut.result())
+
+    def add_done_callback(self, media_id: str,
+                          fn: Callable[[str, Optional[Entry]], None]) -> None:
+        """Invoke ``fn(media_id, entry)`` when that entry's fetch finishes.
+
+        The entry is revalidated like in :meth:`get`; a fetch that raised
+        delivers ``None`` (miss) instead of dying silently inside the
+        executor's callback machinery.
+        """
+        def _cb(fut: cf.Future) -> None:
+            try:
+                entry = self._revalidate(media_id, fut.result())
+            except Exception:
+                entry = None
+            fn(media_id, entry)
+        self.records[media_id].future.add_done_callback(_cb)
+
+    # -- instrumentation -----------------------------------------------------
+    def done(self) -> bool:
+        return all(r.future.done() for r in self.records.values())
+
+    @property
+    def load_busy_s(self) -> float:
+        """Total worker-busy seconds across all fetches (the load stream)."""
+        return sum(r.busy_s for r in self.records.values())
+
+    def intervals(self) -> List[Tuple[float, float]]:
+        """Completed fetch intervals [(t_start, t_end), ...]."""
+        return [(r.t_start, r.t_end) for r in self.records.values()
+                if r.t_end > 0.0]
+
+
+# tier-aware issue order: slowest tier first so the long disk fetches get a
+# head start on the worker pool (misses are near-free lookups → last)
+_TIER_RANK = {TIER_DISK: 0, TIER_HOST: 1, TIER_HBM: 2, None: 3}
+
+
 class ParallelLoader:
     """Overlap real library fetches with caller compute."""
 
@@ -70,6 +193,27 @@ class ParallelLoader:
                  ) -> Dict[str, cf.Future]:
         return {mid: self.pool.submit(self.library.get, user_id, mid)
                 for mid in media_ids}
+
+    def prefetch_handle(self, user_id: str,
+                        media_ids: Sequence[str]) -> PrefetchHandle:
+        """Issue fetches (disk first) and return a :class:`PrefetchHandle`."""
+        tiers = {mid: self.library.peek_tier(user_id, mid)
+                 for mid in media_ids}
+        ordered = sorted(dict.fromkeys(media_ids),
+                         key=lambda m: _TIER_RANK.get(tiers[m], 3))
+        records: Dict[str, LoadRecord] = {}
+        for mid in ordered:
+            rec = LoadRecord(mid)
+            rec.future = self.pool.submit(self._timed_get, user_id, rec)
+            records[mid] = rec
+        return PrefetchHandle(self, user_id, records)
+
+    def _timed_get(self, user_id: str, rec: LoadRecord) -> Optional[Entry]:
+        rec.t_start = time.perf_counter()
+        try:
+            return self.library.get(user_id, rec.media_id)
+        finally:
+            rec.t_end = time.perf_counter()
 
     def gather(self, futures: Dict[str, "cf.Future"],
                timeout: float = 60.0) -> Dict[str, Optional[Entry]]:

@@ -51,8 +51,16 @@ def precompute_media_kv(model: Model, params, embeds: jnp.ndarray):
 
 
 def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
-                *, kv_len: Optional[int] = None) -> LinkResult:
-    """Build the blended cache for one request (workflow step ⑤)."""
+                *, kv_len: Optional[int] = None, entries=None) -> LinkResult:
+    """Build the blended cache for one request (workflow step ⑤).
+
+    ``entries`` is an optional per-media gather source (anything with a
+    ``.get(media_id) -> Entry | None`` method, e.g. a
+    :class:`repro.cache.transfer.PrefetchHandle`).  When given, each entry is
+    gathered *here*, at link time — blocking only on fetches the pipelined
+    scheduler has not finished yet — instead of through a synchronous
+    ``library.get`` per segment.
+    """
     cfg = model.cfg
     total = prompt.total_len
     kv_len = kv_len or total + 1          # +1 scratch slot for pad scatter
@@ -62,7 +70,11 @@ def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
     misses = []
     placed = []                            # (offset, k_np, v_np, length)
     for off, seg in prompt.media_segments():
-        entry = library.get(prompt.user_id, seg.media_id) if library else None
+        if entries is not None:
+            entry = entries.get(seg.media_id)
+        else:
+            entry = library.get(prompt.user_id, seg.media_id) if library \
+                else None
         if entry is None:
             # expired/missing: recompute the whole segment (paper Fig. 6, m misses)
             sel[off:off + seg.length] = True

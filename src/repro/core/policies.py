@@ -146,12 +146,13 @@ def prefix_caching(model: Model, params, prompt: Prompt, library=None, *,
 
 
 def full_reuse(model: Model, params, prompt: Prompt, library, *, kv_len=None,
-               **kw) -> PolicyResult:
+               entries=None, **kw) -> PolicyResult:
     """Two-step Prompt-Cache-style reuse (paper §3.2)."""
     t0 = time.perf_counter()
     cfg = model.cfg
     selection = sel_mod.full_reuse_selection(prompt)
-    link = link_prompt(model, prompt, library, selection, kv_len=kv_len)
+    link = link_prompt(model, prompt, library, selection, kv_len=kv_len,
+                       entries=entries)
 
     # step 1: compute text KV *standalone* (text attends only to text, at
     # original positions) — a separate engine invocation
@@ -189,7 +190,7 @@ def full_reuse(model: Model, params, prompt: Prompt, library, *, kv_len=None,
 
 def cacheblend(model: Model, params, prompt: Prompt, library, *,
                r: float = 0.15, probe_layers: int = 1, kv_len=None,
-               **kw) -> PolicyResult:
+               entries=None, **kw) -> PolicyResult:
     """CacheBlend-r [Yao et al. 2024]: KV-deviation-driven selection.
 
     Step 1 (probe): recompute K of *all* tokens through the first
@@ -199,7 +200,7 @@ def cacheblend(model: Model, params, prompt: Prompt, library, *,
     t0 = time.perf_counter()
     cfg = model.cfg
     base_sel = sel_mod.full_reuse_selection(prompt)
-    link0 = link_prompt(model, prompt, library, base_sel)
+    link0 = link_prompt(model, prompt, library, base_sel, entries=entries)
 
     # probe: layer-0 K for every token (cheap: one layer, no cache)
     toks, mask, emb = _full_prompt_arrays(model, prompt)
@@ -218,7 +219,8 @@ def cacheblend(model: Model, params, prompt: Prompt, library, *,
         axis=(-1, -2)))
 
     selection = sel_mod.cacheblend_selection(prompt, dev, r)
-    link = link_prompt(model, prompt, library, selection, kv_len=kv_len)
+    link = link_prompt(model, prompt, library, selection, kv_len=kv_len,
+                       entries=entries)
     logits, cache = _selective_step(model, params, link)
     logits.block_until_ready()
     return PolicyResult(
@@ -229,11 +231,12 @@ def cacheblend(model: Model, params, prompt: Prompt, library, *,
 
 
 def mpic(model: Model, params, prompt: Prompt, library, *, k: int = 32,
-         kv_len=None, **kw) -> PolicyResult:
+         kv_len=None, entries=None, **kw) -> PolicyResult:
     """MPIC-k: single-step selective attention (the paper's algorithm)."""
     t0 = time.perf_counter()
     selection = sel_mod.mpic_selection(prompt, k)
-    link = link_prompt(model, prompt, library, selection, kv_len=kv_len)
+    link = link_prompt(model, prompt, library, selection, kv_len=kv_len,
+                       entries=entries)
     logits, cache = _selective_step(model, params, link)
     logits.block_until_ready()
     return PolicyResult(

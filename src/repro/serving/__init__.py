@@ -1,5 +1,13 @@
 from repro.serving.engine import EngineConfig, MPICEngine
 from repro.serving.request import Request, State
 from repro.serving.retriever import Retriever
+from repro.serving.scheduler import (
+    ChunkedPrefillTask,
+    PipelinedScheduler,
+    WaitingQueue,
+)
 
-__all__ = ["EngineConfig", "MPICEngine", "Request", "State", "Retriever"]
+__all__ = [
+    "EngineConfig", "MPICEngine", "Request", "State", "Retriever",
+    "ChunkedPrefillTask", "PipelinedScheduler", "WaitingQueue",
+]

@@ -10,16 +10,21 @@ Components wired here:
 
 Continuous batching under XLA static shapes: a fixed number of decode
 *slots*; each slot owns a kv-region of ``max_seq_len`` in the stacked batch
-cache.  Admission runs prefill (per request, via its CC policy) and splices
-the resulting cache into the slot; every engine step then advances ALL
-running slots by one token with a single jit'd decode step.  Position
-arrays (INVALID_POS for empty) make padding slots inert.
+cache.  Admission runs through the **pipelined scheduler**
+(``serving/scheduler.py``): the waiting queue is priority-ordered, media
+fetches for the next ``prefetch_depth`` queued requests are issued while
+the current request's policy recompute runs, and entries are gathered per
+media id at link time — genuine load/compute overlap, measured per request
+and surfaced in ``report()``.  Long prompts prefill in chunks
+(``prefill_chunk_tokens``) across engine steps so decode slots never stall;
+every engine step advances ALL running slots by one token with a single
+jit'd decode step.  Position arrays (INVALID_POS for empty) make padding
+slots inert.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -27,22 +32,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.library import KVLibrary
-from repro.cache.transfer import ParallelLoader, plan_transfers
+from repro.cache.transfer import ParallelLoader, PrefetchHandle
 from repro.core.linker import precompute_media_kv
-from repro.core.policies import POLICIES, PrefixStore
+from repro.core.policies import POLICIES, PolicyResult, PrefixStore
 from repro.core.segments import Prompt
 from repro.models.layers import INVALID_POS
 from repro.models.model import Model
 from repro.serving.request import Request, State
 from repro.serving.retriever import Retriever
+from repro.serving.scheduler import (
+    CHUNKABLE_POLICIES,
+    ChunkedPrefillTask,
+    PipelinedScheduler,
+)
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_seq_len: int = 512          # kv region per slot (incl. scratch slot)
     decode_slots: int = 4           # continuous-batching capacity
-    max_prefills_per_step: int = 1
+    max_prefills_per_step: int = 1  # admissions per engine step
     greedy: bool = True
+    prefetch_depth: int = 2         # queued requests with loads in flight
+    prefill_chunk_tokens: int = 0   # >0: chunk long prefills across steps
+    pipelined: bool = True          # False → sequential admission baseline
 
 
 class MPICEngine:
@@ -57,14 +70,24 @@ class MPICEngine:
         self.retriever = Retriever()
         self.prefix_store = PrefixStore()
         self.loader = ParallelLoader(self.static_lib)
+        self.scheduler = PipelinedScheduler(
+            self.loader, prefetch_depth=self.cfg.prefetch_depth,
+            pipelined=self.cfg.pipelined,
+            prefetch_filter=self._policy_consumes_entries)
 
-        self.waiting: deque[Request] = deque()
         self.running: List[Optional[Request]] = [None] * self.cfg.decode_slots
         self.finished: List[Request] = []
+        self.failed: List[Request] = []     # prefill raised (see _abort_prefill)
+        self._prefill_tasks: Dict[int, ChunkedPrefillTask] = {}
 
         self._batch_cache = model.make_cache(self.cfg.decode_slots,
                                              self.cfg.max_seq_len)
         self._decode_jit = jax.jit(self._decode_step_fn)
+
+    @property
+    def waiting(self):
+        """The scheduler's priority queue (len/bool/iter like the old deque)."""
+        return self.scheduler.queue
 
     # ------------------------------------------------------------------
     # workflow ①: upload → precompute KV → store
@@ -84,19 +107,21 @@ class MPICEngine:
     def submit(self, request: Request) -> Request:
         assert request.prompt.total_len + 1 < self.cfg.max_seq_len, \
             "prompt exceeds slot kv region"
-        self.waiting.append(request)
+        self.scheduler.enqueue(request)
         return request
 
     # ------------------------------------------------------------------
-    # engine step: admit (prefill) then decode all running slots
+    # engine step: advance chunked prefills, admit, decode running slots
     # ------------------------------------------------------------------
     def step(self) -> None:
+        self._advance_prefills()
         self._admit()
         self._decode()
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         steps = 0
-        while (self.waiting or any(self.running)) and steps < max_steps:
+        while (self.scheduler.queue or any(self.running)) \
+                and steps < max_steps:
             self.step()
             steps += 1
         return self.finished
@@ -110,51 +135,121 @@ class MPICEngine:
 
     def _admit(self) -> None:
         admitted = 0
-        while (self.waiting and admitted < self.cfg.max_prefills_per_step):
+        while (self.scheduler.queue
+               and admitted < self.cfg.max_prefills_per_step):
             slot = self._free_slot()
             if slot < 0:
                 return
-            req = self.waiting.popleft()
-            self._prefill_into_slot(req, slot)
+            req, handle = self.scheduler.pop()
+            self._begin_prefill(req, slot, handle)
             admitted += 1
 
-    def _prefill_into_slot(self, req: Request, slot: int) -> None:
-        model, cfg = self.model, self.model.cfg
+    # -- admission ------------------------------------------------------
+    def _resolve_policy(self, req: Request) -> str:
         policy_name = req.policy
         # PIC needs attention KV — prefix-only semantics for SSM/hybrid
         # (DESIGN.md §Arch-applicability)
-        if cfg.arch_type in ("ssm", "hybrid") and policy_name in (
+        if self.model.cfg.arch_type in ("ssm", "hybrid") and policy_name in (
                 "mpic", "cacheblend", "full_reuse"):
             policy_name = "full_recompute"
+        return policy_name
 
-        # parallel transfer: prefetch hit caches while the policy computes
-        media_ids = [seg.media_id for _, seg in req.prompt.media_segments()]
-        futures = self.loader.prefetch(req.prompt.user_id, media_ids)
-        self.loader.gather(futures)   # entries now hot (host tier)
+    def _policy_consumes_entries(self, req: Request) -> bool:
+        """Does this request's *resolved* policy gather library entries?
+        (prefix_caching / full_recompute — incl. the SSM/hybrid rewrite —
+        never link media KV, so prefetching for them is wasted loader time)"""
+        return self._resolve_policy(req) in ("mpic", "cacheblend",
+                                             "full_reuse")
 
-        result = POLICIES[policy_name](
-            model, self.params, req.prompt, self.static_lib,
-            kv_len=self.cfg.max_seq_len,
-            prefix_store=self.prefix_store, **req.policy_kwargs)
+    def _chunkable(self, req: Request, policy_name: str) -> bool:
+        cfg = self.model.cfg
+        chunk = self.cfg.prefill_chunk_tokens
+        return (chunk > 0
+                and policy_name in CHUNKABLE_POLICIES
+                and cfg.arch_type not in ("ssm", "hybrid")
+                and not cfg.is_encoder_decoder
+                and req.prompt.total_len > chunk)
+
+    def _begin_prefill(self, req: Request,
+                       slot: int, handle: Optional[PrefetchHandle]) -> None:
+        policy_name = self._resolve_policy(req)
+        req.slot = slot
+        req.state = State.PREFILLING
+        self.running[slot] = req
+
+        try:
+            if self._chunkable(req, policy_name):
+                task = ChunkedPrefillTask(
+                    self.model, self.params, req, self.static_lib,
+                    kv_len=self.cfg.max_seq_len,
+                    chunk_tokens=self.cfg.prefill_chunk_tokens,
+                    policy_name=policy_name, scheduler=self.scheduler,
+                    entries=handle)
+                self._prefill_tasks[slot] = task
+                if task.advance():          # first chunk runs this step
+                    del self._prefill_tasks[slot]
+                    self._finalize_prefill(req, task.result, handle)
+                return
+
+            # monolithic path: one policy call inside a measured compute
+            # window; the linker gathers this request's prefetched entries
+            # at link time
+            with self.scheduler.compute_window():
+                result = POLICIES[policy_name](
+                    self.model, self.params, req.prompt, self.static_lib,
+                    kv_len=self.cfg.max_seq_len,
+                    prefix_store=self.prefix_store,
+                    entries=handle, **req.policy_kwargs)
+            self._finalize_prefill(req, result, handle)
+        except BaseException:
+            self._abort_prefill(slot)
+            raise
+
+    def _advance_prefills(self) -> None:
+        for slot, task in list(self._prefill_tasks.items()):
+            try:
+                done = task.advance()
+            except BaseException:
+                self._abort_prefill(slot)
+                raise
+            if done:
+                del self._prefill_tasks[slot]
+                self._finalize_prefill(task.req, task.result, task.handle)
+
+    def _abort_prefill(self, slot: int) -> None:
+        """Free a slot whose prefill raised, so capacity is not leaked.
+
+        The request goes terminal (FAILED, in ``self.failed``) rather than
+        back into the queue: a deterministic error (bad policy kwargs, …)
+        must not retry forever, and a caller that catches the exception from
+        ``step()``/``run()`` can inspect/resubmit it explicitly.
+        """
+        self._prefill_tasks.pop(slot, None)
+        req = self.running[slot]
+        if req is not None:
+            req.slot = -1
+            req.state = State.FAILED
+            self.failed.append(req)
+        self.running[slot] = None
+
+    def _finalize_prefill(self, req: Request, result: PolicyResult,
+                          handle: Optional[PrefetchHandle]) -> None:
         req.prefill_stats = result.stats
-        req.linked_media = media_ids
+        req.linked_media = [seg.media_id
+                            for _, seg in req.prompt.media_segments()]
 
         first_tok = int(np.argmax(result.first_logits))
         req.output_tokens.append(first_tok)
         req.t_first_token = time.perf_counter()
         req.cur_len = req.prompt.total_len
-        req.slot = slot
         req.state = State.RUNNING
-        self.running[slot] = req
+        self.scheduler.account(req, handle, result.stats.get("wall_s", 0.0))
 
         # splice the request cache into the batch cache at `slot`
-        bc, rc = self._batch_cache, result.cache
+        slot, bc, rc = req.slot, self._batch_cache, result.cache
         for key in bc:
             if key == "pos":
                 self._batch_cache["pos"] = bc["pos"].at[slot].set(rc["pos"][0])
-            elif key in ("ssm_h", "ssm_conv", "cross_k", "cross_v"):
-                self._batch_cache[key] = bc[key].at[:, slot].set(
-                    rc[key][:, 0].astype(bc[key].dtype))
             else:
                 self._batch_cache[key] = bc[key].at[:, slot].set(
                     rc[key][:, 0].astype(bc[key].dtype))
@@ -199,7 +294,8 @@ class MPICEngine:
         return logits, cache
 
     def _decode(self) -> None:
-        live = [r for r in self.running if r is not None]
+        live = [r for r in self.running
+                if r is not None and r.state is State.RUNNING]
         if not live:
             return
         B = self.cfg.decode_slots
@@ -208,10 +304,11 @@ class MPICEngine:
         for r in live:
             tokens[r.slot, 0] = r.output_tokens[-1]
             positions[r.slot, 0] = r.cur_len
-        logits, self._batch_cache = self._decode_jit(
-            self.params, self._batch_cache, jnp.asarray(tokens),
-            jnp.asarray(positions))
-        logits = np.asarray(logits, np.float32)
+        with self.scheduler.compute_window():
+            logits, self._batch_cache = self._decode_jit(
+                self.params, self._batch_cache, jnp.asarray(tokens),
+                jnp.asarray(positions))
+            logits = np.asarray(logits, np.float32)
         for r in live:
             nxt = int(np.argmax(logits[r.slot]))
             r.output_tokens.append(nxt)
@@ -241,4 +338,5 @@ class MPICEngine:
             "p90_ttft_s": float(np.percentile(ttfts, 90)),
             "total_tokens": sum(len(r.output_tokens) for r in done),
             "library": self.static_lib.stats(),
+            "scheduler": self.scheduler.stats(done),
         }

@@ -16,8 +16,10 @@ _ids = itertools.count()
 
 class State(enum.Enum):
     WAITING = "waiting"
+    PREFILLING = "prefilling"   # chunked prefill in progress (owns a slot)
     RUNNING = "running"     # decode phase (continuous batching slot)
     DONE = "done"
+    FAILED = "failed"       # prefill raised; slot freed, request terminal
 
 
 @dataclasses.dataclass(eq=False)
@@ -26,6 +28,7 @@ class Request:
     max_new_tokens: int = 16
     policy: str = "mpic"
     policy_kwargs: dict = dataclasses.field(default_factory=dict)
+    priority: int = 0                # higher admits sooner (FIFO within ties)
     # MRAG: if set, the retriever is triggered after prefill (workflow ④)
     retrieval_query: Optional[np.ndarray] = None
     retrieval_top_k: int = 1
@@ -39,14 +42,34 @@ class Request:
 
     # metrics
     t_arrival: float = dataclasses.field(default_factory=time.perf_counter)
+    t_admitted: float = 0.0          # popped from the waiting queue
     t_first_token: float = 0.0
     t_done: float = 0.0
     prefill_stats: dict = dataclasses.field(default_factory=dict)
     linked_media: List[str] = dataclasses.field(default_factory=list)
+    # TTFT breakdown + overlap accounting (filled by the scheduler/engine):
+    load_s: float = 0.0              # loader-worker busy time for this request
+    load_blocked_s: float = 0.0      # admission wall-time spent waiting on loads
+    compute_s: float = 0.0           # prefill compute wall (minus load blocking)
+    overlap_s: float = 0.0           # load time overlapped with engine compute
 
     @property
     def ttft(self) -> float:
         return self.t_first_token - self.t_arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return max(0.0, self.t_admitted - self.t_arrival)
+
+    @property
+    def prefill_wall_s(self) -> float:
+        """Admission → first token (what overlap shrinks vs load+compute)."""
+        return max(0.0, self.t_first_token - self.t_admitted)
+
+    @property
+    def load_overlap_ratio(self) -> float:
+        """Fraction of this request's load stream hidden under compute."""
+        return self.overlap_s / self.load_s if self.load_s > 0 else 0.0
 
     @property
     def done(self) -> bool:

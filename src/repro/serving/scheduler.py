@@ -1,0 +1,372 @@
+"""Pipelined admission scheduler — true load/compute overlap (Fig. 6).
+
+The seed engine faked the paper's central systems claim: it issued
+``ParallelLoader`` prefetches and immediately blocked on them *before* any
+policy compute started, so serving was strictly sequential.  This module
+rebuilds admission as a pipeline with two genuinely concurrent streams:
+
+  * **load stream** — whenever a request enters the front-``prefetch_depth``
+    window of the priority queue, its media fetches are issued on the loader
+    pool (disk tier first).  Entries are *gathered per media id at link
+    time* (``PrefetchHandle.get`` via the linker's ``entries=`` hook), so a
+    request only ever blocks on fetches that have not finished by the time
+    its own link step needs them.
+  * **compute stream** — policy prefill and jit'd decode steps.  Every
+    compute region is recorded as a wall-clock interval, so the scheduler
+    can *measure* (not model) how much of each request's load time was
+    hidden under compute: ``overlap_s = Σ |load ∩ compute|``.
+
+With pipelining, the steady-state admission cost of request *i* is
+``max(load_i, compute_{i-1..})`` instead of ``load_i + compute_i`` — the
+paper's ``T_parallel = max(T_load, T_compute)`` realised on the real
+engine rather than the analytic ``plan_transfers`` model.
+
+Also here: :class:`WaitingQueue` (priority admission, FIFO within a
+priority) and :class:`ChunkedPrefillTask` (long prompts prefill in
+position-ordered chunks across engine steps so decode slots never stall
+behind one long prefill — the causal selective-attention mask makes chunked
+prefill mathematically equivalent to the single-shot policy).
+"""
+from __future__ import annotations
+
+import contextlib
+import heapq
+import itertools
+import time
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.transfer import ParallelLoader, PrefetchHandle
+from repro.core import select as sel_mod
+from repro.core.linker import link_prompt
+from repro.core.policies import POLICIES, PolicyResult
+from repro.serving.request import Request, State
+
+
+class WaitingQueue:
+    """Priority waiting queue: higher ``Request.priority`` first, FIFO ties."""
+
+    def __init__(self):
+        self._heap: List[Tuple[int, int, Request]] = []
+        self._seq = itertools.count()
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (-req.priority, next(self._seq), req))
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def peek(self, n: int) -> List[Request]:
+        """The next ``n`` requests in admission order (without popping)."""
+        return [item[2] for item in heapq.nsmallest(n, self._heap)]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self):
+        return iter(item[2] for item in sorted(self._heap))
+
+
+def _media_ids(req: Request) -> List[str]:
+    return [seg.media_id for _, seg in req.prompt.media_segments()]
+
+
+class PipelinedScheduler:
+    """Admission pipeline over a :class:`WaitingQueue` + ``ParallelLoader``.
+
+    ``pipelined=False`` disables all prefetching (the sequential baseline
+    measured by ``benchmarks/fig6_overlap_serving.py``); the engine then
+    falls back to blocking ``library.get`` inside the linker.
+    """
+
+    def __init__(self, loader: ParallelLoader, *, prefetch_depth: int = 2,
+                 pipelined: bool = True, max_intervals: int = 1024,
+                 prefetch_filter=None):
+        self.loader = loader
+        self.prefetch_depth = prefetch_depth
+        self.pipelined = pipelined
+        # predicate(req) -> bool: will this request's (resolved) policy ever
+        # gather library entries?  Set by the engine so requests destined for
+        # full-recompute/prefix policies don't occupy loader workers with
+        # fetches nobody consumes (and don't pollute the load metrics)
+        self.prefetch_filter = prefetch_filter
+        self.queue = WaitingQueue()
+        self._handles: Dict[str, PrefetchHandle] = {}
+        # engine-global compute intervals (prefill chunks + decode steps);
+        # bounded: old intervals can't overlap new loads
+        self._compute_intervals: deque = deque(maxlen=max_intervals)
+        # recently issued handles: their blocked spans (engine thread waiting
+        # on loads) must be excluded from EVERY request's overlap, not just
+        # their own — the engine computes nothing while blocked on anyone
+        self._recent_handles: deque = deque(maxlen=64)
+        self.admitted = 0
+
+    # -- queue side ----------------------------------------------------------
+    def enqueue(self, req: Request) -> None:
+        req.state = State.WAITING
+        self.queue.push(req)
+        self._top_up()
+
+    def pop(self) -> Tuple[Request, Optional[PrefetchHandle]]:
+        """Next request to admit + its (possibly still loading) handle."""
+        req = self.queue.pop()
+        req.t_admitted = time.perf_counter()
+        handle = self._handles.pop(req.req_id, None)
+        if handle is None and self._should_prefetch(req):
+            # pipelined: entered and left the queue between top-ups (depth
+            # exceeded).  Non-pipelined baseline: per-request parallel
+            # prefetch + blocking gather BEFORE compute — the seed engine's
+            # admission behavior (T_seq = load + compute per request),
+            # without cross-request pipelining.
+            handle = self._issue(req)
+            if not self.pipelined:
+                handle.wait()
+        self._top_up()          # issue loads for the requests now in window
+        self.admitted += 1
+        return req, handle
+
+    def _issue(self, req: Request) -> PrefetchHandle:
+        handle = self.loader.prefetch_handle(req.prompt.user_id,
+                                             _media_ids(req))
+        self._recent_handles.append(handle)
+        return handle
+
+    def _should_prefetch(self, req: Request) -> bool:
+        return bool(_media_ids(req)) and (self.prefetch_filter is None
+                                          or self.prefetch_filter(req))
+
+    def _top_up(self) -> None:
+        """Keep the front-``prefetch_depth`` requests' loads in flight."""
+        if not self.pipelined or self.prefetch_depth <= 0:
+            return
+        for req in self.queue.peek(self.prefetch_depth):
+            if req.req_id not in self._handles and self._should_prefetch(req):
+                self._handles[req.req_id] = self._issue(req)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    # -- compute-stream instrumentation --------------------------------------
+    @contextlib.contextmanager
+    def compute_window(self):
+        """Record one compute interval (policy prefill chunk or decode step)."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._compute_intervals.append((t0, time.perf_counter()))
+
+    def compute_intervals(self) -> List[Tuple[float, float]]:
+        return list(self._compute_intervals)
+
+    @staticmethod
+    def _intersection_s(a_intervals: Iterable[Tuple[float, float]],
+                        b_intervals: Iterable[Tuple[float, float]]) -> float:
+        total = 0.0
+        for (a, b) in a_intervals:
+            for (c, d) in b_intervals:
+                total += max(0.0, min(b, d) - max(a, c))
+        return total
+
+    def measure_overlap(self,
+                        load_intervals: Iterable[Tuple[float, float]],
+                        ) -> float:
+        """Σ wall-clock intersection of load intervals with compute intervals.
+
+        This is the *measured* overlap: seconds during which a loader worker
+        was fetching this request's entries while the engine was inside a
+        compute window (another request's prefill, a decode step, …).
+        Spans where the engine thread sat waiting on *any* request's loads
+        (``PrefetchHandle.get`` inside a link step) are subtracted: they fall
+        inside a compute window but no compute happens during them, so
+        counting them would report un-hidden load latency as overlap.
+        """
+        load_intervals = list(load_intervals)
+        raw = self._intersection_s(load_intervals, self._compute_intervals)
+        # engine-thread blocked spans never overlap each other (single
+        # thread), so summing per-handle intersections does not double-count
+        blocked = sum(
+            self._intersection_s(load_intervals, h.blocked_intervals)
+            for h in self._recent_handles)
+        return max(0.0, raw - blocked)
+
+    def account(self, req: Request, handle: Optional[PrefetchHandle],
+                policy_wall_s: float) -> None:
+        """Fill the request's TTFT-breakdown / overlap metrics."""
+        blocked_in_compute = 0.0
+        if handle is not None:
+            req.load_s = handle.load_busy_s
+            req.load_blocked_s = handle.blocked_s
+            req.overlap_s = self.measure_overlap(handle.intervals())
+            # only blocking that happened inside a compute window (link-time
+            # gathers) dilutes the policy wall; a blocking gather at pop
+            # time (non-pipelined baseline) precedes the policy entirely
+            blocked_in_compute = self._intersection_s(
+                handle.blocked_intervals, self._compute_intervals)
+        req.compute_s = max(0.0, policy_wall_s - blocked_in_compute)
+
+    # -- aggregate metrics (engine ``report()``) ------------------------------
+    def stats(self, finished: List[Request]) -> dict:
+        if not finished:
+            return {"admitted": self.admitted, "waiting": len(self.queue)}
+        loaded = [r for r in finished if r.load_s > 0]
+        return {
+            "admitted": self.admitted,
+            "waiting": len(self.queue),
+            "pipelined": self.pipelined,
+            "prefetch_depth": self.prefetch_depth,
+            "chunked_prefills": sum(
+                1 for r in finished if r.prefill_stats.get("chunks", 1) > 1),
+            "mean_queue_wait_s": float(np.mean(
+                [r.queue_wait for r in finished])),
+            "mean_prefill_wall_s": float(np.mean(
+                [r.prefill_wall_s for r in finished])),
+            "mean_load_s": float(np.mean([r.load_s for r in finished])),
+            "mean_compute_s": float(np.mean([r.compute_s for r in finished])),
+            "mean_load_overlap_ratio": float(np.mean(
+                [r.load_overlap_ratio for r in loaded])) if loaded else 0.0,
+            "ttft_breakdown_s": {
+                "queue": float(np.mean([r.queue_wait for r in finished])),
+                "load_blocked": float(np.mean(
+                    [r.load_blocked_s for r in finished])),
+                "compute": float(np.mean([r.compute_s for r in finished])),
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+#: policies with a single forward pass over position-ordered tokens — safe to
+#: split into chunks (causal masking ⇒ chunk j attends only to already-written
+#: KV of chunks < j and the linked/reused slots)
+CHUNKABLE_POLICIES = ("mpic", "full_recompute")
+
+
+class ChunkedPrefillTask:
+    """Incremental prefill of one request, one chunk per engine step.
+
+    The engine advances the task each step via :meth:`advance` (inside a
+    scheduler compute window) and keeps decoding the *other* slots between
+    chunks, so one long prompt never stalls the decode batch.  When the last
+    chunk finishes, ``result`` holds a :class:`PolicyResult` identical in
+    shape to the monolithic policies'.
+    """
+
+    def __init__(self, model, params, req: Request, library, *,
+                 kv_len: int, chunk_tokens: int, policy_name: str,
+                 scheduler: PipelinedScheduler,
+                 entries: Optional[PrefetchHandle] = None):
+        self.req = req
+        self.handle = entries
+        self.result: Optional[PolicyResult] = None
+        self.failed = False
+        self.chunks_run = 0
+        self._wall = 0.0
+        self._scheduler = scheduler
+        self._gen = self._run(model, params, req, library, kv_len,
+                              chunk_tokens, policy_name, entries)
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def advance(self) -> bool:
+        """Run one chunk; returns True when the prefill completed.
+
+        Exceptions from the chunk propagate (the engine frees the slot); the
+        task is marked failed so a dead generator is never advanced again.
+        """
+        if self.failed:
+            raise RuntimeError(
+                f"prefill task for {self.req.req_id} already failed")
+        t0 = time.perf_counter()
+        with self._scheduler.compute_window():
+            try:
+                next(self._gen)
+            except StopIteration:
+                pass
+            except BaseException:
+                self.failed = True
+                raise
+            finally:
+                self._wall += time.perf_counter() - t0
+        if self.result is not None:
+            self.result.stats["wall_s"] = self._wall
+        return self.done
+
+    # -- chunk generators ------------------------------------------------------
+    def _run(self, model, params, req, library, kv_len, chunk, policy_name,
+             entries):
+        if policy_name == "mpic":
+            yield from self._run_mpic(model, params, req, library, kv_len,
+                                      chunk, entries)
+        else:
+            yield from self._run_full_recompute(model, params, req, kv_len,
+                                                chunk)
+
+    def _run_mpic(self, model, params, req, library, kv_len, chunk, entries):
+        k = req.policy_kwargs.get("k", 32)
+        prompt = req.prompt
+        selection = sel_mod.mpic_selection(prompt, k)
+        if int(selection.sum()) == 0:
+            # empty base selection (all-media prompt, k=0): nothing to chunk
+            # — delegate to the monolithic policy *before* linking so the
+            # prompt is not linked twice
+            self.result = POLICIES["mpic"](model, params, prompt, library,
+                                           k=k, kv_len=kv_len,
+                                           entries=entries)
+            return
+        link = link_prompt(model, prompt, library, selection, kv_len=kv_len,
+                           entries=entries)
+        n = len(link.sel_idx)
+        cache, logits = link.cache, None
+        for a in range(0, n, chunk):
+            b = min(a + chunk, n)
+            sp = jnp.asarray(link.sel_idx[a:b][None])
+            logits, cache = model.selective_prefill(
+                params,
+                jnp.asarray(link.sel_tokens[a:b][None]), sp, cache, sp,
+                media_embeds=jnp.asarray(link.sel_media_embeds[a:b][None]),
+                media_mask=jnp.asarray(link.sel_media_mask[a:b][None]))
+            self.chunks_run += 1
+            if b < n:
+                yield           # engine-step boundary: decode runs in between
+        logits.block_until_ready()
+        self.result = PolicyResult(
+            np.asarray(logits[0, -1], np.float32), cache,
+            {"policy": f"mpic-{k}", "n_recomputed": link.n_recomputed,
+             "n_reused": link.n_reused, "engine_steps": self.chunks_run,
+             "chunks": self.chunks_run, "wall_s": 0.0,
+             "misses": link.misses})
+
+    def _run_full_recompute(self, model, params, req, kv_len, chunk):
+        prompt = req.prompt
+        total = prompt.total_len
+        toks = jnp.asarray(prompt.flat_tokens()[None])
+        mask = jnp.asarray(prompt.media_mask()[None])
+        emb = jnp.asarray(prompt.flat_media_embeds(model.cfg.d_model)[None])
+        cache, logits = model.make_cache(1, kv_len), None
+        for a in range(0, total, chunk):
+            b = min(a + chunk, total)
+            pos = jnp.arange(a, b, dtype=jnp.int32)[None]
+            logits, cache = model.prefill(
+                params, toks[:, a:b], cache,
+                media_embeds=emb[:, a:b], media_mask=mask[:, a:b],
+                positions=pos, write_idx=pos)
+            self.chunks_run += 1
+            if b < total:
+                yield
+        logits.block_until_ready()
+        self.result = PolicyResult(
+            np.asarray(logits[0, -1], np.float32), cache,
+            {"policy": "full_recompute", "n_recomputed": total,
+             "n_reused": 0, "engine_steps": self.chunks_run,
+             "chunks": self.chunks_run, "wall_s": 0.0})

@@ -1,0 +1,98 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+Four seed test modules use ``@given``/``strategies`` property tests.  CI
+installs the real hypothesis via the ``dev`` extra; environments without it
+(the baked runtime image has no network) previously failed at *collection*.
+``conftest.py`` registers this module as ``hypothesis`` in that case, so the
+property tests still run — as deterministic seeded-random sampling rather
+than full property-based search (no shrinking, no example database).
+
+Implements exactly the surface the test-suite uses: ``given``, ``settings``,
+``strategies.integers/booleans/sampled_from/composite``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    """A value source: ``example(rng)`` draws one value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng) -> object:
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> Strategy:
+    return Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def composite(fn):
+    """``@st.composite``: ``fn(draw, ...)`` becomes a strategy factory."""
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+        return Strategy(sample)
+    return builder
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    """Records ``max_examples`` on the (possibly already-wrapped) test."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies_by_name):
+    """Run the test once per drawn example (deterministic per-test seed)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(getattr(wrapper, "_max_examples", 10)):
+                drawn = {name: strat.example(rng)
+                         for name, strat in strategies_by_name.items()}
+                fn(*args, **drawn, **kwargs)
+        wrapper._max_examples = getattr(fn, "_max_examples", 10)
+        # hide the drawn params from pytest's fixture resolution: expose only
+        # the original params NOT supplied by a strategy (i.e. real fixtures)
+        del wrapper.__wrapped__
+        remaining = [p for name, p in
+                     inspect.signature(fn).parameters.items()
+                     if name not in strategies_by_name]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        return wrapper
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.Strategy = Strategy
+strategies.integers = integers
+strategies.booleans = booleans
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.composite = composite

@@ -1,10 +1,25 @@
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device.
 # Only launch/dryrun.py requests 512 placeholder devices (and only when run
 # as a script).
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# hypothesis is a dev-extra dependency; when absent (offline images), register
+# the deterministic fallback in tests/_hypothesis_fallback.py so the property
+# test modules still collect and run (as seeded-random sampling).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 import jax
 import numpy as np

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.cache import (
+    Entry,
     KVLibrary,
     TIER_DISK,
     TIER_HBM,
@@ -77,6 +78,16 @@ def test_transfer_plan_overlap(tmp_path):
         max(plan.load_s, plan.compute_s))
 
 
+def test_disk_entry_nbytes_without_demotion():
+    """Regression: an Entry created directly on the disk tier (never passed
+    through ``_spool``, which is what used to set ``_nbytes``) must not raise
+    AttributeError on ``nbytes``."""
+    e = Entry(media_id="x", k=None, v=None, tier=TIER_DISK)
+    assert e.nbytes == 0
+    e._nbytes = 123
+    assert e.nbytes == 123
+
+
 def test_parallel_loader(tmp_path):
     lib = KVLibrary(spool_dir=str(tmp_path))
     k, v = _kv()
@@ -87,6 +98,65 @@ def test_parallel_loader(tmp_path):
     got = loader.gather(futs)
     assert got["nope"] is None
     assert all(got[f"m{i}"] is not None for i in range(4))
+    loader.close()
+
+
+def test_prefetch_handle_per_entry_completion(tmp_path):
+    """Tier-aware issue order (disk first), as-completed iteration,
+    per-entry done-callbacks, and gather-at-link-time ``get``."""
+    k, v = _kv(1 << 14)
+    lib = KVLibrary(hbm_capacity=int(1.5 * (k.nbytes + v.nbytes)),
+                    host_capacity=1 << 10,       # overflow goes to disk
+                    spool_dir=str(tmp_path))
+    for m in "abc":
+        lib.put("u", m, k, v)
+    disk_ids = {m for m in "abc" if lib.peek_tier("u", m) == TIER_DISK}
+    assert disk_ids                               # pressure forced spooling
+
+    loader = ParallelLoader(lib)
+    handle = loader.prefetch_handle("u", ["a", "b", "c", "ghost"])
+    # records preserve issue order: all disk fetches queued first, miss last
+    issue_order = list(handle.records)
+    n_disk = len(disk_ids)
+    assert set(issue_order[:n_disk]) == disk_ids
+    assert issue_order[-1] == "ghost"
+
+    fired = []
+    handle.add_done_callback("a", lambda mid, e: fired.append((mid, e)))
+    completed = dict(handle.as_completed(timeout=10))
+    assert completed["ghost"] is None
+    assert all(completed[m] is not None for m in "abc")
+    assert fired and fired[0][0] == "a"
+
+    assert handle.done()
+    assert handle.get("a") is not None            # gather is idempotent
+    assert handle.get("never-prefetched") is None  # falls back to library
+    assert handle.load_busy_s > 0.0
+    assert all(t1 >= t0 for t0, t1 in handle.intervals())
+    loader.close()
+
+
+def test_prefetch_handle_revalidates_stale_entries(tmp_path):
+    """An entry fetched at enqueue time can be spooled back to disk (memory
+    pressure) or expire while the request waits in the queue; the handle
+    must re-materialize / miss at gather time like a synchronous get."""
+    lib = KVLibrary(spool_dir=str(tmp_path))
+    k, v = _kv()
+    lib.put("u", "m", k, v)
+    loader = ParallelLoader(lib)
+    h = loader.prefetch_handle("u", ["m"])
+    h.wait()
+    key = lib._key("u", "m")
+    lib._spool(key, lib._entries[key])        # demoted during the queue wait
+    e = h.get("m")
+    assert e is not None and e.k is not None  # re-materialized at link time
+    np.testing.assert_array_equal(e.k, k)
+
+    lib.put("u", "x", k, v, ttl=30)
+    h2 = loader.prefetch_handle("u", ["x"])
+    h2.wait()
+    lib._entries[lib._key("u", "x")].expires = time.time() - 1
+    assert h2.get("x") is None                # expired while queued → miss
     loader.close()
 
 

@@ -72,8 +72,12 @@ def test_mpic_quality_with_quantized_library(tmp_path):
         q = jax.nn.log_softmax(jnp.asarray(r.first_logits))
         return float(jnp.sum(p * (jnp.log(p + 1e-20) - q)))
 
-    kl_fp, kl_q = kl(run(False)), kl(run(True))
+    r_fp, r_q = run(False), run(True)
+    kl_fp, kl_q = kl(r_fp), kl(r_q)
     # int8 adds at most a small increment over the fp-library reuse error
     assert kl_q < kl_fp + 5e-3
-    assert int(np.argmax(run(True).first_logits)) == \
-        int(np.argmax(oracle.first_logits))
+    # ...and does not change the greedy token relative to the fp library
+    # (vs the recompute oracle the *reuse* error already dominates, so the
+    # right invariant is fp-mpic ≡ int8-mpic, not mpic ≡ oracle)
+    assert int(np.argmax(r_q.first_logits)) == \
+        int(np.argmax(r_fp.first_logits))
