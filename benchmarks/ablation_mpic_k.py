@@ -17,13 +17,16 @@ from benchmarks.common import (
     emit,
     evaluate,
     populate_library,
+    scaled,
 )
 from repro.data import make_dialogues
 
-MEDIA_LEN = 48
+MEDIA_LEN = scaled(48, 16)
 
 
-def main(ks=(0, 4, 8, 16, 32, 48), n_samples=3):
+def main(ks=None, n_samples=None):
+    ks = ks or scaled((0, 4, 8, 16, 32, 48), (0, 8, MEDIA_LEN))
+    n_samples = n_samples or scaled(3, 1)
     cfg, model, params = build_bench_model()
     dialogues = make_dialogues(n=n_samples, n_images=2, d_model=cfg.d_model,
                                media_len=MEDIA_LEN, style="mmdu", seed=11)

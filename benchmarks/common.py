@@ -10,6 +10,7 @@ TTFT is wall-clock of the policy's prefill path on CPU, second call
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List
 
@@ -22,6 +23,19 @@ from repro.configs import get_smoke_config
 from repro.core import POLICIES, PrefixStore, precompute_media_kv
 from repro.data import SYSTEM_PROMPT, ByteTokenizer, image_embeds
 from repro.models import build_model
+
+
+def smoke() -> bool:
+    """CI smoke mode (``benchmarks/run.py --smoke``): every benchmark shrinks
+    its knobs so the whole suite runs in minutes on a CPU runner — the claim
+    checked is "the script still runs and its invariants hold", not the
+    measured numbers."""
+    return os.environ.get("MPIC_BENCH_SMOKE", "") == "1"
+
+
+def scaled(value, smoke_value):
+    """Pick the smoke-sized knob when running under ``--smoke``."""
+    return smoke_value if smoke() else value
 
 
 def build_bench_model(arch: str = "llava-1.6-7b", seed: int = 0):

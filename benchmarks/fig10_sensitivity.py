@@ -13,13 +13,16 @@ from benchmarks.common import (
     evaluate,
     make_prefix_store,
     populate_library,
+    scaled,
 )
 from repro.data import make_dialogues
 
-MEDIA_LEN = 64
+MEDIA_LEN = scaled(64, 16)
 
 
-def main(n_images_list=(1, 2, 3, 4, 6), n_samples=2):
+def main(n_images_list=None, n_samples=None):
+    n_images_list = n_images_list or scaled((1, 2, 3, 4, 6), (1, 2))
+    n_samples = n_samples or scaled(2, 1)
     import jax
     cfg, model, params = build_bench_model()
     rows = []

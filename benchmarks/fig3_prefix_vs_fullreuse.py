@@ -14,13 +14,16 @@ from benchmarks.common import (
     evaluate,
     make_prefix_store,
     populate_library,
+    scaled,
 )
 from repro.data import make_dialogues
 
-MEDIA_LEN = 96
+MEDIA_LEN = scaled(96, 24)
 
 
-def main(n_images_list=(1, 2, 4, 6), n_samples=3):
+def main(n_images_list=None, n_samples=None):
+    n_images_list = n_images_list or scaled((1, 2, 4, 6), (1, 2))
+    n_samples = n_samples or scaled(3, 1)
     cfg, model, params = build_bench_model()
     rows = []
     with tempfile.TemporaryDirectory() as td:

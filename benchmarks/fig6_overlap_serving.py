@@ -27,17 +27,17 @@ import time
 
 import numpy as np
 
-from benchmarks.common import build_bench_model, emit
+from benchmarks.common import build_bench_model, emit, scaled, smoke
 from repro.cache import SimulatedLatencyLibrary, TIER_HBM
 from repro.cache.library import TIER_BW, TIER_DISK
 from repro.core import Prompt, media_segment, text_segment
 from repro.data import image_embeds
 from repro.serving import EngineConfig, MPICEngine, Request
 
-MEDIA_LEN = 24
-N_REQUESTS = 4
+MEDIA_LEN = scaled(24, 12)
+N_REQUESTS = scaled(4, 2)
 # one paper-scale image KV (~1 GB) over the Fig. 6 disk bandwidth
-LOAD_DELAY_S = float((1 << 30) / TIER_BW[TIER_DISK])
+LOAD_DELAY_S = scaled(float((1 << 30) / TIER_BW[TIER_DISK]), 0.05)
 
 
 def _prompt(cfg, i):
@@ -103,9 +103,12 @@ def main():
     seq, par = rows
     par["speedup"] = round(seq["wall_ms"] / max(par["wall_ms"], 1e-9), 2)
     # the Fig. 6 claim on the real engine: overlap pushes admission toward
-    # max(load, compute) — strictly below the sequential sum
-    assert par["prefill_wall_ms"] < par["seq_estimate_ms"], \
-        "pipelined prefill wall must beat sequential load+compute"
+    # max(load, compute) — strictly below the sequential sum.  At smoke
+    # scale (50 ms loads) the margin is runner noise, so only check that
+    # both modes ran.
+    if not smoke():
+        assert par["prefill_wall_ms"] < par["seq_estimate_ms"], \
+            "pipelined prefill wall must beat sequential load+compute"
     emit(rows, "fig6_serving")
     return rows
 

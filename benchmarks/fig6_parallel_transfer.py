@@ -17,7 +17,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import build_bench_model, emit
+from benchmarks.common import build_bench_model, emit, scaled
 from repro.cache import KVLibrary, ParallelLoader
 from repro.cache.library import TIER_BW, TIER_DISK, TIER_HOST
 from repro.core import precompute_media_kv
@@ -51,7 +51,8 @@ def real_overlap_row(td: str):
     # force-disk: capacities below entry size
     lib = KVLibrary(hbm_capacity=1 << 10, host_capacity=1 << 10,
                     spool_dir=td)
-    big = np.zeros((8, 4096, 8, 16), np.float32)     # ~16 MB per tensor
+    big = np.zeros(scaled((8, 4096, 8, 16), (8, 512, 8, 16)),
+                   np.float32)                       # ~16 MB (smoke: ~2 MB)
     for i in range(6):
         lib.put("u", f"m{i}", big, big)
     assert all(lib.peek_tier("u", f"m{i}") == TIER_DISK for i in range(6))

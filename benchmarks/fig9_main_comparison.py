@@ -15,21 +15,25 @@ from benchmarks.common import (
     evaluate,
     make_prefix_store,
     populate_library,
+    scaled,
 )
 from repro.data import make_dialogues
 
-MEDIA_LEN = 64
-N_IMAGES = 3
-N_SAMPLES = 3
+MEDIA_LEN = scaled(64, 16)
+N_IMAGES = scaled(3, 2)
+N_SAMPLES = scaled(3, 1)
+MODELS = scaled((("llava-vicuna", 0), ("llava-mistral", 1)),
+                (("llava-vicuna", 0),))
+STYLES = scaled(("mmdu", "sparkles"), ("mmdu",))
 
 
 def main():
     rows = []
     with tempfile.TemporaryDirectory() as td:
         # two model variants stand in for vicuna-7B / mistral-7B backbones
-        for model_name, seed in (("llava-vicuna", 0), ("llava-mistral", 1)):
+        for model_name, seed in MODELS:
             cfg, model, params = build_bench_model(seed=seed)
-            for style in ("mmdu", "sparkles"):
+            for style in STYLES:
                 dialogues = make_dialogues(
                     n=N_SAMPLES, n_images=N_IMAGES, d_model=cfg.d_model,
                     media_len=MEDIA_LEN, style=style, seed=7)

@@ -1,9 +1,15 @@
 """Benchmark runner — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables).
-Run: PYTHONPATH=src python -m benchmarks.run [--only fig9]
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig9] [--smoke]
+
+``--smoke`` shrinks every benchmark's knobs (sample counts, sequence
+lengths, simulated latencies) so the full suite runs in CI minutes; each
+script's internal invariants/assertions still execute, so perf scripts
+cannot rot silently.
 """
 import argparse
+import os
 import sys
 import time
 
@@ -12,13 +18,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single benchmark (e.g. fig9)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs for CI (see benchmarks.common.smoke)")
     args = ap.parse_args()
+    if args.smoke:
+        # set BEFORE importing benchmark modules: module-level knobs read it
+        os.environ["MPIC_BENCH_SMOKE"] = "1"
 
     from benchmarks import (ablation_mpic_k, fig3_prefix_vs_fullreuse,
                             fig4_attention_sparsity, fig6_overlap_serving,
                             fig6_parallel_transfer, fig8_kv_distance,
                             fig9_main_comparison, fig10_sensitivity,
-                            roofline_table)
+                            fig_decode_paged, roofline_table)
     suite = {
         "fig3": fig3_prefix_vs_fullreuse.main,
         "fig4": fig4_attention_sparsity.main,
@@ -28,6 +39,7 @@ def main() -> None:
         "fig9": fig9_main_comparison.main,
         "fig10": fig10_sensitivity.main,
         "ablation_mpic_k": ablation_mpic_k.main,
+        "decode_paged": fig_decode_paged.main,
         "roofline": roofline_table.main,
     }
     names = [args.only] if args.only else list(suite)

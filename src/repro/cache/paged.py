@@ -4,10 +4,19 @@ A fixed pool of pages per layer: ``(num_pages, page_size, Hkv, Dh)``.
 Requests own page lists via a page table; lookup is gather-based (static
 shapes, jit-friendly).  The pool backs the serving engine's per-request
 caches and the paged decode-attention Pallas kernel.
+
+Prefill splice-in goes through :func:`scatter_tokens`, a jit'd scatter that
+**donates** the pool buffers — the engine reassigns ``pool.k/pool.v`` from
+the outputs and XLA updates the (aliased) buffers in place.  The other two
+pool write paths carry their own donated writes: the engine's MRAG link
+(``_pool_link``) and the per-layer new-token scatter inside the donated
+decode step (``models/transformer.decode_paged``).  Steady-state serving
+never copies the pool.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional
 
 import jax
@@ -25,10 +34,25 @@ class PagedConfig:
     dtype: str = "bfloat16"
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def scatter_tokens(pool_k, pool_v, pages, offs, k_new, v_new):
+    """Donated scatter of (L, S, H, Dh) tokens into (L, P, ps, H, Dh) pools.
+
+    ``pages``/``offs`` are (S,) pool coordinates per token.  Duplicate
+    targets (e.g. a shared scratch page absorbing padding writes) are legal
+    scatter semantics — last write wins, and callers only ever point real
+    tokens at unique slots.
+    """
+    pool_k = pool_k.at[:, pages, offs].set(k_new.astype(pool_k.dtype))
+    pool_v = pool_v.at[:, pages, offs].set(v_new.astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
 class PagedKVPool:
     def __init__(self, cfg: PagedConfig):
         self.cfg = cfg
-        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        dt = {"bfloat16": jnp.bfloat16,
+              "float16": jnp.float16}.get(cfg.dtype, jnp.float32)
         shape = (cfg.num_layers, cfg.num_pages, cfg.page_size,
                  cfg.num_kv_heads, cfg.head_dim)
         self.k = jnp.zeros(shape, dt)
@@ -44,6 +68,13 @@ class PagedKVPool:
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.cfg.page_size)
 
+    def owned_pages(self, req_id: str) -> int:
+        return len(self._owned.get(req_id, []))
+
+    def capacity(self, req_id: str) -> int:
+        """Tokens the request's current page list can hold."""
+        return self.owned_pages(req_id) * self.cfg.page_size
+
     def alloc(self, req_id: str, n_tokens: int) -> Optional[np.ndarray]:
         need = self.pages_for(n_tokens)
         if need > len(self._free):
@@ -54,9 +85,8 @@ class PagedKVPool:
 
     def extend(self, req_id: str, n_more_tokens: int, cur_tokens: int
                ) -> Optional[np.ndarray]:
-        have = len(self._owned.get(req_id, [])) * self.cfg.page_size
-        need = self.pages_for(cur_tokens + n_more_tokens) - \
-            len(self._owned.get(req_id, []))
+        have = self.owned_pages(req_id)
+        need = self.pages_for(cur_tokens + n_more_tokens) - have
         if need > len(self._free):
             return None
         for _ in range(max(need, 0)):
@@ -64,25 +94,26 @@ class PagedKVPool:
         return np.asarray(self._owned[req_id], np.int32)
 
     def free(self, req_id: str) -> None:
+        """Return a request's pages.  Idempotent: a second ``free`` (or one
+        for an unknown request) is a no-op, never a double-release."""
         self._free.extend(self._owned.pop(req_id, []))
 
-    # -- data movement --------------------------------------------------------
+    # -- data movement -----------------------------------------------------
     def write_tokens(self, page_table: np.ndarray, slot0: int,
                      k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
         """Scatter (L, S, H, Dh) tokens into the pool starting at ``slot0``."""
         s = k_new.shape[1]
         ps = self.cfg.page_size
         slots = slot0 + np.arange(s)
-        pages = page_table[slots // ps]
-        offs = slots % ps
-        self.k = self.k.at[:, pages, offs].set(
-            jnp.moveaxis(k_new, 1, 1).astype(self.k.dtype))
-        self.v = self.v.at[:, pages, offs].set(v_new.astype(self.v.dtype))
+        pages = jnp.asarray(np.asarray(page_table)[slots // ps], jnp.int32)
+        offs = jnp.asarray(slots % ps, jnp.int32)
+        self.k, self.v = scatter_tokens(self.k, self.v, pages, offs,
+                                        k_new, v_new)
 
     def gather(self, page_table: np.ndarray, n_tokens: int):
         """Contiguous (L, n_tokens, H, Dh) view of a request's cache."""
         ps = self.cfg.page_size
         slots = np.arange(n_tokens)
-        pages = page_table[slots // ps]
+        pages = np.asarray(page_table)[slots // ps]
         offs = slots % ps
         return self.k[:, pages, offs], self.v[:, pages, offs]

@@ -83,32 +83,44 @@ def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
             placed.append((off, entry.k, entry.v, seg.length))
 
     L, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
-    k_buf = np.zeros((L, kv_len, Hkv, Dh), np.float32)
-    v_buf = np.zeros((L, kv_len, Hkv, Dh), np.float32)
-    pos = np.full((kv_len,), INVALID_POS, np.int64)
-
-    for off, k_seg, v_seg, length in placed:
-        k_linked = k_seg
-        if cfg.rope_theta and not cfg.learned_pos_emb:
-            # exact position relocation: K(p+Δ) = R(Δ)·K(p)
-            delta = jnp.full((length,), off, jnp.int32)
-            k_linked = np.asarray(
-                rope_relink(jnp.asarray(k_seg), delta, cfg.rope_theta))
-        k_buf[:, off:off + length] = k_linked
-        v_buf[:, off:off + length] = v_seg
-        pos[off:off + length] = np.arange(off, off + length)
-
-    # dummy cache: selected slots stay zero and INVALID until the selective
-    # prefill scatters the recomputed K/V into them (single-step property)
-    sel_idx = selection_indices(sel)
-    pos[sel_idx] = INVALID_POS
-    k_buf[:, sel_idx] = 0.0
-    v_buf[:, sel_idx] = 0.0
-
     dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    pos = np.full((kv_len,), INVALID_POS, np.int64)
+    k_buf = jnp.zeros((L, kv_len, Hkv, Dh), dt)
+    v_buf = jnp.zeros((L, kv_len, Hkv, Dh), dt)
+    sel_idx = selection_indices(sel)
+
+    if placed:
+        # one host→device transfer of all placed segments and ONE batched
+        # rope_relink over the concatenation — the per-segment relink used
+        # to round-trip through host numpy once per segment
+        k_cat = jnp.asarray(np.concatenate([k for _, k, _, _ in placed],
+                                           axis=1))
+        v_cat = jnp.asarray(np.concatenate([v for _, _, v, _ in placed],
+                                           axis=1))
+        idx = np.concatenate([np.arange(off, off + n)
+                              for off, _, _, n in placed])
+        if cfg.rope_theta and not cfg.learned_pos_emb:
+            # exact position relocation: K(p+Δ) = R(Δ)·K(p), per token
+            delta = np.concatenate([np.full(n, off, np.int32)
+                                    for off, _, _, n in placed])
+            k_cat = rope_relink(k_cat, jnp.asarray(delta), cfg.rope_theta)
+        k_buf = k_buf.at[:, idx].set(k_cat.astype(dt))
+        v_buf = v_buf.at[:, idx].set(v_cat.astype(dt))
+        for off, _, _, n in placed:
+            pos[off:off + n] = np.arange(off, off + n)
+        # dummy cache: selected slots stay zero and INVALID until the
+        # selective prefill scatters the recomputed K/V into them
+        # (single-step property) — selection may overlap placed segments
+        # (MPIC recomputes each segment's first-k tokens), so zero AFTER
+        # placing
+        if len(sel_idx):
+            k_buf = k_buf.at[:, sel_idx].set(0.0)
+            v_buf = v_buf.at[:, sel_idx].set(0.0)
+    pos[sel_idx] = INVALID_POS
+
     cache = {
-        "k": jnp.asarray(k_buf[:, None], dt).reshape(L, 1, kv_len, Hkv, Dh),
-        "v": jnp.asarray(v_buf[:, None], dt).reshape(L, 1, kv_len, Hkv, Dh),
+        "k": k_buf[:, None],
+        "v": v_buf[:, None],
         "pos": jnp.asarray(pos[None], jnp.int32),
     }
 

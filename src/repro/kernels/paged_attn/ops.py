@@ -1,4 +1,19 @@
-"""jit'd wrapper for paged decode attention."""
+"""jit'd wrapper + backend dispatch for paged decode attention.
+
+Two entry points:
+
+* :func:`paged_attention` — standalone jit'd call (kernel tests, ad-hoc use).
+* :func:`paged_attention_call` — un-jit'd dispatch for composition inside a
+  larger jitted program (the engine's donated decode step traces it under
+  ``lax.scan`` over layers).
+
+Backends: ``pallas`` is the TPU kernel (runs in interpret mode off-TPU —
+correct but slow, kept for parity tests); ``ref`` is the pure-jnp oracle,
+which XLA compiles well on CPU/GPU.  ``auto`` picks pallas on TPU and ref
+everywhere else.  Both are lengths-bounded only up to the page-table width,
+so callers shrink ``page_table.shape[1]`` to the live maximum (the engine
+buckets it to a power of two to bound retraces).
+"""
 from __future__ import annotations
 
 import functools
@@ -9,10 +24,29 @@ from repro.kernels.paged_attn.paged_attn import paged_attention_pallas
 from repro.kernels.paged_attn.ref import paged_attention_ref
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_ref"))
-def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
-                    interpret: bool = True, use_ref: bool = False):
-    if use_ref:
-        return paged_attention_ref(q, k_pool, v_pool, page_table, lengths)
+def resolve_backend(backend: str = "auto") -> str:
+    """'pallas' | 'ref' | 'auto' → concrete backend for this process."""
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def paged_attention_call(q, k_pool, v_pool, page_table, lengths, *,
+                         window: int = 0, backend: str = "ref",
+                         interpret: bool = False):
+    """Dispatch without jit — safe to trace inside scan/jit."""
+    if backend == "ref":
+        return paged_attention_ref(q, k_pool, v_pool, page_table, lengths,
+                                   window=window)
     return paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
-                                  interpret=interpret)
+                                  window=window, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret", "use_ref"))
+def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
+                    window: int = 0, interpret: bool = True,
+                    use_ref: bool = False):
+    return paged_attention_call(
+        q, k_pool, v_pool, page_table, lengths, window=window,
+        backend="ref" if use_ref else "pallas", interpret=interpret)

@@ -23,7 +23,8 @@ def _paged_attn_kernel(page_table_ref, lengths_ref,    # scalar prefetch (SMEM)
                        q_ref, k_ref, v_ref,            # VMEM blocks
                        o_ref,
                        m_ref, l_ref, acc_ref,          # VMEM scratch
-                       *, page_size: int, max_pages: int, scale: float):
+                       *, page_size: int, max_pages: int, scale: float,
+                       window: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -43,6 +44,11 @@ def _paged_attn_kernel(page_table_ref, lengths_ref,    # scalar prefetch (SMEM)
     token_idx = j * page_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, page_size), 1)
     valid = token_idx < length                         # (1, page_size)
+    if window > 0:
+        # sliding window, decode semantics: the query sits at position
+        # length-1 and sees keys with kv_pos > q_pos - window (matches the
+        # dense ``attend`` masking)
+        valid = jnp.logical_and(valid, token_idx > length - 1 - window)
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -62,7 +68,7 @@ def _paged_attn_kernel(page_table_ref, lengths_ref,    # scalar prefetch (SMEM)
 
 
 def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths, *,
-                           interpret: bool = False):
+                           window: int = 0, interpret: bool = False):
     """q (B,Hq,Dh); pools (P,page_size,Hkv,Dh); page_table (B,max_pages)."""
     b, hq, dh = q.shape
     p, page_size, hkv, _ = k_pool.shape
@@ -72,7 +78,8 @@ def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths, *,
 
     grid = (b, hkv, max_pages)
     kernel = functools.partial(_paged_attn_kernel, page_size=page_size,
-                               max_pages=max_pages, scale=1.0 / (dh ** 0.5))
+                               max_pages=max_pages, scale=1.0 / (dh ** 0.5),
+                               window=window)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # page_table, lengths

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q, k_pool, v_pool, page_table, lengths):
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
+                        window: int = 0):
     b, hq, dh = q.shape
     p, ps, hkv, _ = k_pool.shape
     max_pages = page_table.shape[1]
@@ -27,6 +28,10 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, lengths):
                         k.astype(jnp.float32)) * scale
     idx = jnp.arange(max_pages * ps)[None, :]
     mask = idx < lengths[:, None]
+    if window > 0:
+        # decode semantics: query position is length-1; keep keys with
+        # kv_pos > q_pos - window (mirrors the dense ``attend`` mask)
+        mask = mask & (idx > lengths[:, None] - 1 - window)
     logits = jnp.where(mask[:, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhk,bkhd->bhd", probs, v.astype(jnp.float32)).astype(q.dtype)

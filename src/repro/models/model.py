@@ -153,6 +153,30 @@ class Model:
             params, self.cfg, x, position, cache, write_idx)
         return logits[:, -1, :], cache
 
+    def supports_paged_decode(self) -> bool:
+        """Paged decode covers pure-attention KV caches — including sliding
+        windows, which the paged kernel masks like the dense decode path.
+        Archs with SSM state or cross KV keep the dense decode path."""
+        cfg = self.cfg
+        return (not cfg.attn_free and not cfg.hybrid
+                and cfg.arch_type not in ("ssm", "hybrid")
+                and not cfg.is_encoder_decoder)
+
+    def decode_step_paged(self, params, token, position, pool_k, pool_v,
+                          page_table, lengths, write_pages, write_offs, *,
+                          backend: str = "ref", interpret: bool = False):
+        """One decode step against the shared paged KV pool (all slots).
+
+        See :func:`repro.models.transformer.decode_paged` for shapes.
+        Returns (logits (B, V), pool_k, pool_v) — callers donate the pool
+        buffers so the write is in place.
+        """
+        x = self.embed(params, token, positions=position)
+        return tf.decode_paged(
+            params, self.cfg, x, position, pool_k, pool_v, page_table,
+            lengths, write_pages, write_offs, backend=backend,
+            interpret=interpret)
+
     # -- whisper helpers ------------------------------------------------------
     def encode_audio(self, params, audio_embeds):
         return tf.encode(params, self.cfg, audio_embeds)

@@ -26,6 +26,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attn.ops import paged_attention_call
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
@@ -353,6 +354,54 @@ def forward_with_cache(params: dict, cfg, embeds: jnp.ndarray,
         new_cache["pos"] = kv_pos
     logits = _logits(params, cfg, x)
     return logits, new_cache, aux
+
+
+def decode_paged(params: dict, cfg, embeds: jnp.ndarray,
+                 positions: jnp.ndarray, pool_k: jnp.ndarray,
+                 pool_v: jnp.ndarray, page_table: jnp.ndarray,
+                 lengths: jnp.ndarray, write_pages: jnp.ndarray,
+                 write_offs: jnp.ndarray, *, backend: str = "ref",
+                 interpret: bool = False):
+    """One decode step for ALL slots against the shared paged KV pool.
+
+    embeds      (B, 1, D)       new-token embeddings
+    positions   (B, 1)          absolute positions (= current cache length)
+    pool_k/v    (L, P, ps, Hkv, Dh)  shared page pool (donated by callers)
+    page_table  (B, mp) int32   pages owned per slot, scratch-padded; ``mp``
+                                only needs to cover max(lengths) — work
+                                scales with the live cache, not max_seq_len
+    lengths     (B,) int32      valid tokens AFTER this step's write
+    write_pages/write_offs (B,) pool coordinates of the new token per slot
+
+    Returns (logits (B, V), pool_k, pool_v).  Attention archs only (no SSM
+    state, no cross KV) — gated by ``Model.supports_paged_decode``.  Padding
+    slots point their write at a scratch page and carry ``lengths == 0``.
+    Sliding windows (``cfg.sliding_window``) mask inside the kernel exactly
+    like the dense ``attend`` decode mask.
+    """
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        xc, aux = carry
+        lp, pk, pv = xs
+        h = rmsnorm(lp["attn_norm"], xc, cfg.rms_norm_eps)
+        q, k_new, v_new = attention_qkv(lp["attn"], cfg, h, positions)
+        pk = pk.at[write_pages, write_offs].set(k_new[:, 0].astype(pk.dtype))
+        pv = pv.at[write_pages, write_offs].set(v_new[:, 0].astype(pv.dtype))
+        o = paged_attention_call(q[:, 0], pk, pv, page_table, lengths,
+                                 window=cfg.sliding_window,
+                                 backend=backend, interpret=interpret)
+        xc = xc + attention_out(lp["attn"], o[:, None])
+        h = rmsnorm(lp["mlp_norm"], xc, cfg.rms_norm_eps)
+        ff, aux = _mlp_block(lp, cfg, h, aux)
+        xc = xc + ff
+        return (xc, aux), (pk, pv)
+
+    (x, _), (new_k, new_v) = _scan_or_loop(
+        body, (embeds, aux0), (params["layers"], pool_k, pool_v),
+        cfg.scan_layers)
+    logits = _logits(params, cfg, x)
+    return logits[:, -1, :], new_k, new_v
 
 
 def forward_train(params: dict, cfg, tokens: jnp.ndarray,

@@ -9,21 +9,32 @@ Components wired here:
   ⑥ decode loop      continuous batching over fixed slots
 
 Continuous batching under XLA static shapes: a fixed number of decode
-*slots*; each slot owns a kv-region of ``max_seq_len`` in the stacked batch
-cache.  Admission runs through the **pipelined scheduler**
+*slots*.  Admission runs through the **pipelined scheduler**
 (``serving/scheduler.py``): the waiting queue is priority-ordered, media
 fetches for the next ``prefetch_depth`` queued requests are issued while
 the current request's policy recompute runs, and entries are gathered per
-media id at link time — genuine load/compute overlap, measured per request
-and surfaced in ``report()``.  Long prompts prefill in chunks
+media id at link time.  Long prompts prefill in chunks
 (``prefill_chunk_tokens``) across engine steps so decode slots never stall;
 every engine step advances ALL running slots by one token with a single
-jit'd decode step.  Position arrays (INVALID_POS for empty) make padding
-slots inert.
+jit'd decode step.
+
+**Paged decode path** (default for attention archs): the batch cache is a
+:class:`~repro.cache.paged.PagedKVPool` — slots own page lists, admission
+allocates pages for the linked prompt, completion frees them.  The decode
+step runs the paged-attention kernel over a page table bucketed to the
+*live* maximum length (work scales with ``cur_len``, not ``max_seq_len``)
+and **donates** the pool buffers (mirroring the train-step donation in
+``training/train_loop.py``), so no full-cache copy happens per token.
+Prefill splice-in and MRAG linking are each a single jit'd, donated scatter
+into the pool.  Sliding-window archs stay paged (the kernel masks the
+window like the dense decode path); archs with SSM state or cross KV keep
+the dense ``(L, B, max_seq_len, …)`` cache (``paged=False`` forces it
+anywhere, and is the benchmark baseline).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional
 
@@ -32,11 +43,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.library import KVLibrary
+from repro.cache.paged import PagedConfig, PagedKVPool
 from repro.cache.transfer import ParallelLoader, PrefetchHandle
 from repro.core.linker import precompute_media_kv
 from repro.core.policies import POLICIES, PolicyResult, PrefixStore
 from repro.core.segments import Prompt
-from repro.models.layers import INVALID_POS
+from repro.kernels.paged_attn.ops import resolve_backend
+from repro.models.layers import INVALID_POS, rope_relink
 from repro.models.model import Model
 from repro.serving.request import Request, State
 from repro.serving.retriever import Retriever
@@ -52,10 +65,64 @@ class EngineConfig:
     max_seq_len: int = 512          # kv region per slot (incl. scratch slot)
     decode_slots: int = 4           # continuous-batching capacity
     max_prefills_per_step: int = 1  # admissions per engine step
-    greedy: bool = True
+    greedy: bool = True             # False → temperature/top-k sampling
+    temperature: float = 1.0        # sampling temperature (greedy=False)
+    top_k: int = 0                  # restrict sampling to top-k logits (0=all)
     prefetch_depth: int = 2         # queued requests with loads in flight
     prefill_chunk_tokens: int = 0   # >0: chunk long prefills across steps
     pipelined: bool = True          # False → sequential admission baseline
+    # -- paged decode path -------------------------------------------------
+    paged: bool = True              # pool-backed decode (attention archs)
+    page_size: int = 16             # tokens per KV page
+    num_pages: int = 0              # 0 → slots·⌈max_seq_len/page⌉ + scratch
+    donate_decode: bool = True      # donate pool buffers into the decode jit
+    paged_backend: str = "auto"     # pallas | ref | auto (pallas on TPU)
+
+
+# -- jit'd, donated cache-mutation helpers ----------------------------------
+# Each is ONE device call that updates the (donated) cache/pool in place —
+# replacing the seed's per-key host-side splice loops.
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _dense_splice(bc: dict, rc: dict, slot) -> dict:
+    """Splice a per-request cache ``rc`` into batch cache ``bc`` at ``slot``
+    (a traced scalar: one compilation covers every slot)."""
+    out = dict(bc)
+    for key in bc:
+        if key == "pos":
+            out["pos"] = bc["pos"].at[slot].set(rc["pos"][0])
+        else:
+            out[key] = bc[key].at[:, slot].set(
+                rc[key][:, 0].astype(bc[key].dtype))
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("theta", "relink"))
+def _dense_link(bc: dict, k_seg, v_seg, off, slot, *, theta: float,
+                relink: bool) -> dict:
+    """Link one MRAG segment at position ``off`` into ``bc`` at ``slot``."""
+    length = k_seg.shape[1]
+    idx = off + jnp.arange(length, dtype=jnp.int32)
+    if relink:
+        k_seg = rope_relink(k_seg, jnp.full((length,), off, jnp.int32), theta)
+    out = dict(bc)
+    out["k"] = bc["k"].at[:, slot, idx].set(k_seg.astype(bc["k"].dtype))
+    out["v"] = bc["v"].at[:, slot, idx].set(v_seg.astype(bc["v"].dtype))
+    out["pos"] = bc["pos"].at[slot, idx].set(idx)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("theta", "relink"))
+def _pool_link(pool_k, pool_v, pages, offs, k_seg, v_seg, delta, *,
+               theta: float, relink: bool):
+    """RoPE-relink one MRAG segment on device and scatter it into the pool."""
+    if relink:
+        k_seg = rope_relink(k_seg, delta, theta)
+    pool_k = pool_k.at[:, pages, offs].set(k_seg.astype(pool_k.dtype))
+    pool_v = pool_v.at[:, pages, offs].set(v_seg.astype(pool_v.dtype))
+    return pool_k, pool_v
 
 
 class MPICEngine:
@@ -79,10 +146,35 @@ class MPICEngine:
         self.finished: List[Request] = []
         self.failed: List[Request] = []     # prefill raised (see _abort_prefill)
         self._prefill_tasks: Dict[int, ChunkedPrefillTask] = {}
+        self._rngs: Dict[str, np.random.Generator] = {}
 
-        self._batch_cache = model.make_cache(self.cfg.decode_slots,
-                                             self.cfg.max_seq_len)
-        self._decode_jit = jax.jit(self._decode_step_fn)
+        self._use_paged = self.cfg.paged and model.supports_paged_decode()
+        if self._use_paged:
+            mcfg = model.cfg
+            ps = self.cfg.page_size
+            self._pages_per_slot = -(-self.cfg.max_seq_len // ps)
+            num_pages = self.cfg.num_pages or (
+                self.cfg.decode_slots * self._pages_per_slot + 1)
+            self.pool = PagedKVPool(PagedConfig(
+                num_pages=num_pages, page_size=ps,
+                num_layers=mcfg.num_layers, num_kv_heads=mcfg.num_kv_heads,
+                head_dim=mcfg.head_dim, dtype=mcfg.compute_dtype))
+            # scratch page: absorbs padding writes (splice tails, idle
+            # slots) so real pages are never aliased
+            self._scratch_page = int(self.pool.alloc("__scratch__", 1)[0])
+            self._page_tables = np.full(
+                (self.cfg.decode_slots, self._pages_per_slot),
+                self._scratch_page, np.int32)
+            self._paged_backend = resolve_backend(self.cfg.paged_backend)
+            self._batch_cache = None
+            donate = (1, 2) if self.cfg.donate_decode else ()
+            self._decode_jit = jax.jit(self._paged_decode_fn,
+                                       donate_argnums=donate)
+        else:
+            self.pool = None
+            self._batch_cache = model.make_cache(self.cfg.decode_slots,
+                                                 self.cfg.max_seq_len)
+            self._decode_jit = jax.jit(self._decode_step_fn)
 
     @property
     def waiting(self):
@@ -107,6 +199,11 @@ class MPICEngine:
     def submit(self, request: Request) -> Request:
         assert request.prompt.total_len + 1 < self.cfg.max_seq_len, \
             "prompt exceeds slot kv region"
+        if self._use_paged:
+            # a prompt that can never fit the pool would livelock admission
+            usable = self.pool.cfg.num_pages - 1          # minus scratch
+            assert self.pool.pages_for(request.prompt.total_len + 1) \
+                <= usable, "prompt exceeds paged pool capacity"
         self.scheduler.enqueue(request)
         return request
 
@@ -140,6 +237,14 @@ class MPICEngine:
             slot = self._free_slot()
             if slot < 0:
                 return
+            if self._use_paged:
+                # paged admission control: hold the request until the pool
+                # can page its prompt (running requests free pages as they
+                # complete)
+                nxt = self.scheduler.queue.peek(1)[0]
+                need = self.pool.pages_for(nxt.prompt.total_len + 1)
+                if need > self.pool.free_pages:
+                    return
             req, handle = self.scheduler.pop()
             self._begin_prefill(req, slot, handle)
             admitted += 1
@@ -176,6 +281,14 @@ class MPICEngine:
         req.slot = slot
         req.state = State.PREFILLING
         self.running[slot] = req
+        if self._use_paged:
+            # reserve the prompt's pages NOW: a chunked prefill holds its
+            # slot for several steps, and only an up-front allocation keeps
+            # the admission gate's free_pages check truthful for the
+            # requests admitted in between
+            pages = self.pool.alloc(req.req_id, req.prompt.total_len + 1)
+            assert pages is not None, "admission gate checked free_pages"
+            self._set_page_row(slot, pages)
 
         try:
             if self._chunkable(req, policy_name):
@@ -209,12 +322,12 @@ class MPICEngine:
         for slot, task in list(self._prefill_tasks.items()):
             try:
                 done = task.advance()
+                if done:
+                    del self._prefill_tasks[slot]
+                    self._finalize_prefill(task.req, task.result, task.handle)
             except BaseException:
                 self._abort_prefill(slot)
                 raise
-            if done:
-                del self._prefill_tasks[slot]
-                self._finalize_prefill(task.req, task.result, task.handle)
 
     def _abort_prefill(self, slot: int) -> None:
         """Free a slot whose prefill raised, so capacity is not leaked.
@@ -230,6 +343,12 @@ class MPICEngine:
             req.slot = -1
             req.state = State.FAILED
             self.failed.append(req)
+            # drop the sampling generator too: a resubmit must reproduce
+            # from Request.seed, not resume an advanced stream
+            self._rngs.pop(req.req_id, None)
+            if self._use_paged:
+                self.pool.free(req.req_id)
+                self._page_tables[slot] = self._scratch_page
         self.running[slot] = None
 
     def _finalize_prefill(self, req: Request, result: PolicyResult,
@@ -238,30 +357,57 @@ class MPICEngine:
         req.linked_media = [seg.media_id
                             for _, seg in req.prompt.media_segments()]
 
-        first_tok = int(np.argmax(result.first_logits))
+        first_tok = self._select_token(
+            req, np.asarray(result.first_logits, np.float32))
         req.output_tokens.append(first_tok)
         req.t_first_token = time.perf_counter()
         req.cur_len = req.prompt.total_len
         req.state = State.RUNNING
         self.scheduler.account(req, handle, result.stats.get("wall_s", 0.0))
 
-        # splice the request cache into the batch cache at `slot`
-        slot, bc, rc = req.slot, self._batch_cache, result.cache
-        for key in bc:
-            if key == "pos":
-                self._batch_cache["pos"] = bc["pos"].at[slot].set(rc["pos"][0])
-            else:
-                self._batch_cache[key] = bc[key].at[:, slot].set(
-                    rc[key][:, 0].astype(bc[key].dtype))
+        # splice the request cache into the batch cache / page pool at
+        # `slot` (paged: pages were reserved at _begin_prefill)
+        if self._use_paged:
+            self._splice_paged(req.slot, result.cache, req.cur_len + 1)
+        else:
+            self._batch_cache = _dense_splice(
+                self._batch_cache, result.cache,
+                jnp.asarray(req.slot, jnp.int32))
 
         # workflow ④: MRAG — link retrieved KV position-independently,
         # with NO recompute of the existing cache (PIC's payoff)
         if req.retrieval_query is not None:
             self._mrag_link(req)
 
+    # -- paged page-table / splice helpers -------------------------------
+    def _set_page_row(self, slot: int, pages: np.ndarray) -> None:
+        row = np.full((self._pages_per_slot,), self._scratch_page, np.int32)
+        row[:len(pages)] = pages
+        self._page_tables[slot] = row
+
+    def _splice_paged(self, slot: int, rc: dict, n_tokens: int) -> None:
+        """ONE donated scatter of the per-request cache into the pool.
+
+        The token count is bucketed to the next power of two (compiles are
+        O(log max_seq_len), like the decode step's page-table bucketing) so
+        splice work scales with the prompt, not ``max_seq_len``.  Bucket
+        rows beyond the slot's owned pages land on the scratch page (the
+        page-table row is scratch-padded); owned slots beyond ``n_tokens``
+        may keep a previous tenant's stale KV — every read is
+        length-masked, so it is never observed.
+        """
+        s = rc["k"].shape[2]
+        b = 1
+        while b < n_tokens:
+            b *= 2
+        b = min(b, s)
+        self.pool.write_tokens(self._page_tables[slot], 0,
+                               rc["k"][:, 0, :b], rc["v"][:, 0, :b])
+
     def _mrag_link(self, req: Request) -> None:
         hits = self.retriever.query(req.retrieval_query, req.retrieval_top_k)
         cfg = self.model.cfg
+        relink = bool(cfg.rope_theta) and not cfg.learned_pos_emb
         for media_id, score in hits:
             entry = self.dynamic_lib.get(req.prompt.user_id, media_id)
             if entry is None:
@@ -270,34 +416,78 @@ class MPICEngine:
             off = req.cur_len
             if off + length + 1 >= self.cfg.max_seq_len:
                 break
-            from repro.models.layers import rope_relink
-            k_linked = entry.k
-            if not cfg.learned_pos_emb:
-                k_linked = np.asarray(rope_relink(
-                    jnp.asarray(entry.k),
-                    jnp.full((length,), off, jnp.int32), cfg.rope_theta))
-            sl = slice(off, off + length)
-            bc = self._batch_cache
-            bc["k"] = bc["k"].at[:, req.slot, sl].set(
-                jnp.asarray(k_linked).astype(bc["k"].dtype))
-            bc["v"] = bc["v"].at[:, req.slot, sl].set(
-                jnp.asarray(entry.v).astype(bc["v"].dtype))
-            bc["pos"] = bc["pos"].at[req.slot, sl].set(
-                jnp.arange(off, off + length, dtype=jnp.int32))
+            if self._use_paged:
+                pages = self.pool.extend(req.req_id, length, off)
+                if pages is None:           # pool full: stop linking
+                    break
+                self._set_page_row(req.slot, pages)
+                ps = self.cfg.page_size
+                t = off + np.arange(length)
+                self.pool.k, self.pool.v = _pool_link(
+                    self.pool.k, self.pool.v,
+                    jnp.asarray(self._page_tables[req.slot][t // ps]),
+                    jnp.asarray((t % ps).astype(np.int32)),
+                    jnp.asarray(entry.k), jnp.asarray(entry.v),
+                    jnp.full((length,), off, jnp.int32),
+                    theta=cfg.rope_theta, relink=relink)
+            else:
+                self._batch_cache = _dense_link(
+                    self._batch_cache, jnp.asarray(entry.k),
+                    jnp.asarray(entry.v), jnp.asarray(off, jnp.int32),
+                    jnp.asarray(req.slot, jnp.int32),
+                    theta=cfg.rope_theta, relink=relink)
             req.cur_len += length
             req.linked_media.append(media_id)
 
+    # ------------------------------------------------------------------
+    # decode
     # ------------------------------------------------------------------
     def _decode_step_fn(self, params, cache, tokens, positions):
         logits, cache = self.model.decode_step(
             params, tokens, positions, cache, positions)
         return logits, cache
 
+    def _paged_decode_fn(self, params, pool_k, pool_v, tokens, positions,
+                         page_table, lengths, write_pages, write_offs):
+        return self.model.decode_step_paged(
+            params, tokens, positions, pool_k, pool_v, page_table, lengths,
+            write_pages, write_offs, backend=self._paged_backend,
+            interpret=jax.default_backend() != "tpu")
+
+    def _select_token(self, req: Request, logits_row: np.ndarray) -> int:
+        """Greedy argmax, or seeded temperature/top-k sampling per request."""
+        if self.cfg.greedy:
+            return int(np.argmax(logits_row))
+        rng = self._rngs.setdefault(req.req_id,
+                                    np.random.default_rng(req.seed))
+        z = logits_row.astype(np.float64)
+        if 0 < self.cfg.top_k < z.size:
+            kth = np.partition(z, -self.cfg.top_k)[-self.cfg.top_k]
+            z = np.where(z < kth, -np.inf, z)
+        z = z / max(self.cfg.temperature, 1e-6)
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(rng.choice(z.size, p=p))
+
     def _decode(self) -> None:
         live = [r for r in self.running
                 if r is not None and r.state is State.RUNNING]
         if not live:
             return
+        if self._use_paged:
+            live, logits = self._decode_paged_step(live)
+        else:
+            logits = self._decode_dense_step(live)
+        for r in live:
+            nxt = self._select_token(r, logits[r.slot])
+            r.output_tokens.append(nxt)
+            r.cur_len += 1
+            if len(r.output_tokens) >= r.max_new_tokens or \
+                    r.cur_len + 1 >= self.cfg.max_seq_len:
+                self._finish(r)
+
+    def _decode_dense_step(self, live: List[Request]) -> np.ndarray:
         B = self.cfg.decode_slots
         tokens = np.zeros((B, 1), np.int32)
         positions = np.full((B, 1), self.cfg.max_seq_len - 1, np.int32)
@@ -309,17 +499,65 @@ class MPICEngine:
                 self.params, self._batch_cache, jnp.asarray(tokens),
                 jnp.asarray(positions))
             logits = np.asarray(logits, np.float32)
-        for r in live:
-            nxt = int(np.argmax(logits[r.slot]))
-            r.output_tokens.append(nxt)
-            r.cur_len += 1
-            if len(r.output_tokens) >= r.max_new_tokens or \
-                    r.cur_len + 1 >= self.cfg.max_seq_len:
-                r.state = State.DONE
-                r.t_done = time.perf_counter()
-                self.finished.append(r)
-                self.running[r.slot] = None
-                self._clear_slot(r.slot)
+        return logits
+
+    def _decode_paged_step(self, live: List[Request]):
+        """One donated decode step over the page pool for all live slots.
+
+        The page table is sliced to the live maximum page count, bucketed to
+        the next power of two (bounds retraces to O(log max_seq_len)) — the
+        attention work each step scales with the longest *live* cache, not
+        with ``max_seq_len``.
+        """
+        B, ps = self.cfg.decode_slots, self.cfg.page_size
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B, 1), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        wp = np.full((B,), self._scratch_page, np.int32)
+        wo = np.zeros((B,), np.int32)
+        for r in list(live):
+            if self.pool.capacity(r.req_id) < r.cur_len + 1:
+                pages = self.pool.extend(r.req_id, 1, r.cur_len)
+                if pages is None:
+                    # pool exhausted mid-decode: finish truncated rather
+                    # than stall the whole batch
+                    r.prefill_stats["truncated"] = True
+                    self._finish(r)
+                    live.remove(r)
+                    continue
+                self._set_page_row(r.slot, pages)
+            tokens[r.slot, 0] = r.output_tokens[-1]
+            positions[r.slot, 0] = r.cur_len
+            lengths[r.slot] = r.cur_len + 1
+            row = self._page_tables[r.slot]
+            wp[r.slot] = row[r.cur_len // ps]
+            wo[r.slot] = r.cur_len % ps
+        if not live:
+            return live, None
+        mp_need = max(self.pool.pages_for(r.cur_len + 1) for r in live)
+        mp = 1
+        while mp < mp_need:
+            mp *= 2
+        mp = min(mp, self._pages_per_slot)
+        with self.scheduler.compute_window():
+            logits, self.pool.k, self.pool.v = self._decode_jit(
+                self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(self._page_tables[:, :mp]),
+                jnp.asarray(lengths), jnp.asarray(wp), jnp.asarray(wo))
+            logits = np.asarray(logits, np.float32)
+        return live, logits
+
+    def _finish(self, r: Request) -> None:
+        r.state = State.DONE
+        r.t_done = time.perf_counter()
+        self.finished.append(r)
+        self.running[r.slot] = None
+        self._rngs.pop(r.req_id, None)
+        if self._use_paged:
+            self.pool.free(r.req_id)
+            self._page_tables[r.slot] = self._scratch_page
+        else:
+            self._clear_slot(r.slot)
 
     def _clear_slot(self, slot: int) -> None:
         bc = self._batch_cache
@@ -337,6 +575,7 @@ class MPICEngine:
             "mean_ttft_s": float(np.mean(ttfts)),
             "p90_ttft_s": float(np.percentile(ttfts, 90)),
             "total_tokens": sum(len(r.output_tokens) for r in done),
+            "paged": self._use_paged,
             "library": self.static_lib.stats(),
             "scheduler": self.scheduler.stats(done),
         }

@@ -32,6 +32,7 @@ class Request:
     # MRAG: if set, the retriever is triggered after prefill (workflow ④)
     retrieval_query: Optional[np.ndarray] = None
     retrieval_top_k: int = 1
+    seed: int = 0                   # sampling PRNG seed (greedy=False)
 
     req_id: str = dataclasses.field(
         default_factory=lambda: f"req{next(_ids)}")

@@ -257,7 +257,9 @@ class ChunkedPrefillTask:
     scheduler compute window) and keeps decoding the *other* slots between
     chunks, so one long prompt never stalls the decode batch.  When the last
     chunk finishes, ``result`` holds a :class:`PolicyResult` identical in
-    shape to the monolithic policies'.
+    shape to the monolithic policies' — the engine then splices it into its
+    batch cache (dense) or page pool (paged) with a single jit'd, donated
+    scatter, so chunked and monolithic prefills share one splice path.
     """
 
     def __init__(self, model, params, req: Request, library, *,

@@ -143,6 +143,38 @@ def test_paged_attn_sweep(b, hq, hkv, dh, pages, ps, mp, dtype):
                                rtol=atol)
 
 
+@pytest.mark.parametrize("window", [4, 16])
+def test_paged_attn_sliding_window(window):
+    """Windowed paged decode == oracle, and == masking tokens below the
+    window by hand (kv_pos > q_pos - window, q_pos = length-1)."""
+    rng = np.random.default_rng(3)
+    b, hq, hkv, dh, pages, ps, mp = 2, 4, 2, 64, 8, 8, 4
+    q = jnp.asarray(rng.normal(size=(b, hq, dh)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), jnp.float32)
+    # disjoint page sets per row so poisoning one row cannot leak into the
+    # other row's valid window
+    pt = jnp.asarray(np.stack([rng.permutation(mp), mp + rng.permutation(mp)]
+                              ).astype(np.int32))
+    lengths = jnp.asarray([7, 29], jnp.int32)
+    out = paged_attention(q, kp, vp, pt, lengths, window=window,
+                          interpret=True)
+    ref = paged_attention_ref(q, kp, vp, pt, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+    # poisoning KV below the window must not change the output
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    for bi in range(b):
+        for t in range(max(0, int(lengths[bi]) - window)):
+            pg, off = pt[bi, t // ps], t % ps
+            kp2[pg, off] = 77.0
+            vp2[pg, off] = -77.0
+    out2 = paged_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), pt,
+                           lengths, window=window, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5,
+                               rtol=1e-5)
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2 ** 16), length=st.integers(1, 31))
 def test_paged_attn_length_property(seed, length):

@@ -1,0 +1,210 @@
+"""Paged decode path parity: the pooled paged-attention decode must match
+the dense ``attend`` decode within tolerance — at the transformer level
+(Pallas kernel, interpret mode, GQA sweep) and end to end on the engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import PagedConfig, PagedKVPool
+from repro.configs import get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core import Prompt, media_segment, text_segment
+from repro.data import image_embeds
+from repro.models import build_model
+from repro.serving import EngineConfig, MPICEngine, Request
+
+PAGE = 8
+
+
+def _tiny_cfg(hq, hkv, window=0):
+    return ModelConfig(name=f"tiny-{hq}-{hkv}", arch_type="dense",
+                       num_layers=2, d_model=64, num_heads=hq,
+                       num_kv_heads=hkv, head_dim=16, d_ff=128,
+                       vocab_size=128, sliding_window=window,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.mark.parametrize("hq,hkv,window", [
+    (4, 4, 0),      # MHA, full causal
+    (4, 2, 0),      # GQA 2:1
+    (8, 1, 0),      # MQA
+    (4, 2, 6),      # GQA + sliding window that BINDS during decode
+])
+def test_paged_decode_matches_dense_gqa(hq, hkv, window):
+    """N decode steps: dense forward_with_cache vs decode_step_paged with
+    the Pallas kernel (interpret=True on CPU), logits allclose each step."""
+    cfg = _tiny_cfg(hq, hkv, window)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    t0, steps, kv_len = 11, 5, 32
+
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, t0)), jnp.int32)
+    cache = model.make_cache(1, kv_len)
+    logits, cache = model.prefill(params, toks, cache)
+
+    pool = PagedKVPool(PagedConfig(num_pages=8, page_size=PAGE,
+                                   num_layers=cfg.num_layers,
+                                   num_kv_heads=hkv, head_dim=cfg.head_dim,
+                                   dtype="float32"))
+    pt = pool.alloc("r", t0 + steps)
+    pool.write_tokens(pt, 0, cache["k"][:, 0, :t0], cache["v"][:, 0, :t0])
+    mp = len(pt)
+    page_table = jnp.asarray(pt[None])
+
+    tok = int(jnp.argmax(logits[0, -1]))
+    for i in range(steps):
+        cur = t0 + i
+        t = jnp.full((1, 1), tok, jnp.int32)
+        p = jnp.full((1, 1), cur, jnp.int32)
+        dense_logits, cache = model.decode_step(params, t, p, cache, p)
+        paged_logits, pk, pv = model.decode_step_paged(
+            params, t, p, pool.k, pool.v, page_table,
+            jnp.asarray([cur + 1], jnp.int32),
+            jnp.asarray([pt[cur // PAGE]], jnp.int32),
+            jnp.asarray([cur % PAGE], jnp.int32),
+            backend="pallas", interpret=True)
+        pool.k, pool.v = pk, pv
+        np.testing.assert_allclose(np.asarray(paged_logits[0], np.float32),
+                                   np.asarray(dense_logits[0], np.float32),
+                                   atol=1e-4, rtol=1e-4)
+        tok = int(jnp.argmax(dense_logits[0]))
+
+    # written pool slots equal the dense cache region (same KV material)
+    k_pool, _ = pool.gather(pt, t0 + steps)
+    np.testing.assert_allclose(np.asarray(k_pool),
+                               np.asarray(cache["k"][:, 0, :t0 + steps]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def _engine_outputs(cfg, model, params, *, paged, n_req=3):
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2,
+                                  paged=paged, page_size=PAGE),
+                     )
+    for mid in ("A", "B"):
+        eng.upload("u1", mid, image_embeds(mid, 16, cfg.d_model))
+    eng.upload("*", "RAG1", image_embeds("RAG1", 12, cfg.d_model),
+               dynamic=True)
+    reqs = []
+    for i in range(n_req):
+        r = np.random.default_rng(i)
+        prompt = Prompt([
+            text_segment(r.integers(8, 200, 5)),
+            media_segment("A", image_embeds("A", 16, cfg.d_model)),
+            text_segment(r.integers(8, 200, 4)),
+            media_segment("B", image_embeds("B", 16, cfg.d_model)),
+        ], user_id="u1")
+        req = Request(prompt=prompt, max_new_tokens=6, policy="mpic",
+                      policy_kwargs={"k": 4})
+        if i == 0:      # exercise the paged MRAG link path too
+            req.retrieval_query = image_embeds("RAG1", 12,
+                                               cfg.d_model).mean(0)
+        reqs.append(eng.submit(req))
+    eng.run()
+    return eng, reqs
+
+
+@pytest.fixture(scope="module")
+def fp32_llava():
+    cfg = dataclasses.replace(get_smoke_config("llava-1.6-7b"),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_paged_matches_dense(fp32_llava):
+    """Same requests through the paged and dense engines produce the same
+    greedy continuations (fp32; includes an MRAG-linked request)."""
+    cfg, model, params = fp32_llava
+    eng_p, reqs_p = _engine_outputs(cfg, model, params, paged=True)
+    eng_d, reqs_d = _engine_outputs(cfg, model, params, paged=False)
+    assert eng_p._use_paged and not eng_d._use_paged
+    for rp, rd in zip(reqs_p, reqs_d):
+        assert rp.output_tokens == rd.output_tokens
+        assert rp.linked_media == rd.linked_media
+    assert "RAG1" in reqs_p[0].linked_media
+
+
+def test_engine_paged_pool_recycled(fp32_llava):
+    """All pages return to the pool when requests complete (scratch stays)."""
+    cfg, model, params = fp32_llava
+    eng, _ = _engine_outputs(cfg, model, params, paged=True)
+    assert eng.running == [None, None]
+    total = eng.pool.cfg.num_pages
+    assert eng.pool.free_pages == total - 1         # only scratch retained
+
+
+def test_unsupported_arch_falls_back_to_dense():
+    cfg = get_smoke_config("mamba2-130m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=96, decode_slots=1, paged=True))
+    assert not eng._use_paged and eng.pool is None
+    r = np.random.default_rng(0)
+    req = Request(prompt=Prompt([text_segment(r.integers(8, 200, 12))],
+                                user_id="u"), max_new_tokens=2)
+    eng.submit(req)
+    eng.run()
+    assert len(req.output_tokens) == 2
+
+
+def test_chunked_prefill_reserves_pages_up_front():
+    """A pool with room for ONE prompt + chunked prefill: the second request
+    must be held in the queue until the first frees its pages (regression:
+    the gate used to double-count pages not yet allocated by in-flight
+    chunked prefills, crashing the later finalize)."""
+    cfg = _tiny_cfg(4, 2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=64, decode_slots=2, paged=True,
+                                  page_size=PAGE, num_pages=4,  # scratch + 3
+                                  prefill_chunk_tokens=8))
+    r = np.random.default_rng(0)
+    reqs = [eng.submit(Request(prompt=Prompt(
+                [text_segment(r.integers(1, 100, 20))], user_id="u"),
+            max_new_tokens=2, policy="full_recompute")) for _ in range(2)]
+    eng.run()
+    assert all(q.done for q in reqs)
+    assert all(len(q.output_tokens) == 2 for q in reqs)
+    assert eng.pool.free_pages == 3
+
+
+def test_overlong_prompt_for_pool_rejected_at_submit():
+    cfg = _tiny_cfg(4, 2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=64, decode_slots=1, paged=True,
+                                  page_size=PAGE, num_pages=3))  # 16 usable
+    r = np.random.default_rng(0)
+    big = Prompt([text_segment(r.integers(1, 100, 20))], user_id="u")
+    with pytest.raises(AssertionError):
+        eng.submit(Request(prompt=big, max_new_tokens=1))
+
+
+def test_paged_pool_exhaustion_truncates_decode():
+    """An undersized pool finishes the request early instead of wedging."""
+    cfg = _tiny_cfg(4, 2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=64, decode_slots=1, paged=True,
+                                  page_size=PAGE, num_pages=3))  # 1 scratch
+    r = np.random.default_rng(0)
+    req = Request(prompt=Prompt([text_segment(r.integers(1, 100, 12))],
+                                user_id="u"),
+                  max_new_tokens=32, policy="full_recompute")
+    eng.submit(req)
+    eng.run()
+    assert req.done
+    assert req.prefill_stats.get("truncated") is True
+    assert 0 < len(req.output_tokens) < 32
+    assert eng.pool.free_pages == eng.pool.cfg.num_pages - 1

@@ -1,0 +1,72 @@
+"""PagedKVPool bookkeeping: alloc/extend/free, exhaustion, double-free,
+and the donated token scatter."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import PagedConfig, PagedKVPool
+
+
+def _pool(num_pages=8, page_size=4, dtype="float32"):
+    return PagedKVPool(PagedConfig(num_pages=num_pages, page_size=page_size,
+                                   num_layers=2, num_kv_heads=2, head_dim=8,
+                                   dtype=dtype))
+
+
+def test_alloc_extend_free_roundtrip():
+    pool = _pool()
+    pt = pool.alloc("r1", 10)              # 3 pages of 4
+    assert len(pt) == 3 and pool.free_pages == 5
+    assert pool.capacity("r1") == 12
+
+    pt = pool.extend("r1", 3, 10)          # 13 tokens -> 4 pages
+    assert len(pt) == 4 and pool.free_pages == 4
+
+    # extend that still fits the owned pages allocates nothing
+    pt = pool.extend("r1", 2, 13)          # 15 tokens -> still 4 pages
+    assert len(pt) == 4 and pool.free_pages == 4
+
+    pool.free("r1")
+    assert pool.free_pages == 8 and pool.capacity("r1") == 0
+
+
+def test_exhaustion_returns_none_and_leaks_nothing():
+    pool = _pool(num_pages=4, page_size=4)
+    assert pool.alloc("a", 12) is not None          # 3 of 4 pages
+    assert pool.alloc("b", 8) is None               # needs 2, only 1 free
+    assert pool.free_pages == 1                     # failed alloc took nothing
+    assert pool.extend("a", 8, 12) is None          # needs 2 more, 1 free
+    assert pool.owned_pages("a") == 3               # failed extend unchanged
+    pool.free("a")
+    assert pool.free_pages == 4
+
+
+def test_double_free_is_safe():
+    pool = _pool()
+    pool.alloc("r1", 10)
+    pool.free("r1")
+    pool.free("r1")                                 # second free: no-op
+    pool.free("never-allocated")
+    assert pool.free_pages == 8
+    assert sorted(pool._free) == list(range(8))     # no duplicated pages
+
+
+def test_pages_are_recycled():
+    pool = _pool(num_pages=4, page_size=4)
+    first = set(pool.alloc("a", 16).tolist())
+    pool.free("a")
+    second = set(pool.alloc("b", 16).tolist())
+    assert first == second
+
+
+def test_write_tokens_scatter_and_gather():
+    """write_tokens at a non-zero slot0 crossing a page boundary."""
+    pool = _pool(page_size=4)
+    pt = pool.alloc("r1", 11)
+    vals = np.arange(2 * 11 * 2 * 8, dtype=np.float32).reshape(2, 11, 2, 8)
+    # write tokens 3..10 (crosses pages 0->1->2)
+    pool.write_tokens(pt, 3, jnp.asarray(vals[:, 3:]),
+                      jnp.asarray(2 * vals[:, 3:]))
+    k, v = pool.gather(pt, 11)
+    np.testing.assert_allclose(np.asarray(k)[:, 3:], vals[:, 3:])
+    np.testing.assert_allclose(np.asarray(v)[:, 3:], 2 * vals[:, 3:])
+    np.testing.assert_allclose(np.asarray(k)[:, :3], 0.0)  # untouched
