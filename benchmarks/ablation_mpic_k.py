@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import tempfile
 
-import numpy as np
 
 from benchmarks.common import (
     build_bench_model,
@@ -33,7 +32,6 @@ def main(ks=None, n_samples=None):
     rows = []
     with tempfile.TemporaryDirectory() as td:
         lib = populate_library(model, params, dialogues, MEDIA_LEN, td)
-        prev_kl = None
         for k in ks:
             name = "full_reuse" if k == 0 else "mpic"
             kw = {} if k == 0 else {"k": k}

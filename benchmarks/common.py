@@ -11,7 +11,6 @@ TTFT is wall-clock of the policy's prefill path on CPU, second call
 from __future__ import annotations
 
 import os
-import time
 from typing import Dict, List
 
 import jax

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import build_bench_model, emit
-from repro.data import image_embeds, make_dialogues
+from repro.data import make_dialogues
 from repro.models.layers import attention_qkv, rmsnorm
 
 

@@ -10,7 +10,6 @@ cannot rot silently.
 """
 import argparse
 import os
-import sys
 import time
 
 
@@ -29,7 +28,8 @@ def main() -> None:
                             fig4_attention_sparsity, fig6_overlap_serving,
                             fig6_parallel_transfer, fig8_kv_distance,
                             fig9_main_comparison, fig10_sensitivity,
-                            fig_decode_paged, roofline_table)
+                            fig_decode_paged, fig_prefill_paged,
+                            roofline_table)
     suite = {
         "fig3": fig3_prefix_vs_fullreuse.main,
         "fig4": fig4_attention_sparsity.main,
@@ -40,6 +40,7 @@ def main() -> None:
         "fig10": fig10_sensitivity.main,
         "ablation_mpic_k": ablation_mpic_k.main,
         "decode_paged": fig_decode_paged.main,
+        "prefill_paged": fig_prefill_paged.main,
         "roofline": roofline_table.main,
     }
     names = [args.only] if args.only else list(suite)

@@ -4,7 +4,6 @@ links externally retrieved images mid-conversation.
 
     PYTHONPATH=src python examples/multiturn_chat.py
 """
-import numpy as np
 import jax
 
 from repro.configs import get_smoke_config

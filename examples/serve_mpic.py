@@ -9,7 +9,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.data import image_embeds, make_dialogues

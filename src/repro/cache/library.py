@@ -18,7 +18,6 @@ import threading
 import time
 from typing import Dict, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.quant import QuantizedKV, dequantize_kv, quantize_kv

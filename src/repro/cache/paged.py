@@ -5,13 +5,13 @@ Requests own page lists via a page table; lookup is gather-based (static
 shapes, jit-friendly).  The pool backs the serving engine's per-request
 caches and the paged decode-attention Pallas kernel.
 
-Prefill splice-in goes through :func:`scatter_tokens`, a jit'd scatter that
-**donates** the pool buffers — the engine reassigns ``pool.k/pool.v`` from
-the outputs and XLA updates the (aliased) buffers in place.  The other two
-pool write paths carry their own donated writes: the engine's MRAG link
-(``_pool_link``) and the per-layer new-token scatter inside the donated
-decode step (``models/transformer.decode_paged``).  Steady-state serving
-never copies the pool.
+Every pool write is a donated jit, so the engine reassigns ``pool.k/pool.v``
+from the outputs and XLA updates the (aliased) buffers in place:
+:func:`scatter_tokens` (dense-prefill splice-in), :func:`pool_link` (the
+linker's ``link_paged`` placement and the engine's MRAG link), and the
+per-layer new-token scatters inside the donated decode/prefill steps
+(``models/transformer.decode_paged`` / ``selective_prefill_paged``).
+Steady-state serving never copies the pool.
 """
 from __future__ import annotations
 
@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.layers import rope_relink
+
 
 @dataclasses.dataclass
 class PagedConfig:
@@ -32,6 +34,20 @@ class PagedConfig:
     num_kv_heads: int
     head_dim: int
     dtype: str = "bfloat16"
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("theta", "relink"))
+def pool_link(pool_k, pool_v, pages, offs, k_seg, v_seg, delta, *,
+              theta: float, relink: bool):
+    """RoPE-relink one placed segment run on device and scatter it into the
+    pool — the donated write shared by the engine's MRAG link and the
+    linker's ``link_paged`` prefill placement (no dense intermediate)."""
+    if relink:
+        k_seg = rope_relink(k_seg, delta, theta)
+    pool_k = pool_k.at[:, pages, offs].set(k_seg.astype(pool_k.dtype))
+    pool_v = pool_v.at[:, pages, offs].set(v_seg.astype(pool_v.dtype))
+    return pool_k, pool_v
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))

@@ -22,7 +22,6 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from repro.cache.library import (
     TIER_BW,

@@ -9,8 +9,7 @@ the CPU smoke tests.  The full configs are only exercised via the dry-run
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

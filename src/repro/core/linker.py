@@ -6,16 +6,22 @@ its offset in the prompt (exact RoPE delta rotation) and placed into the
 request's KV cache.  Selected (to-be-recomputed) slots get the **dummy
 cache** (zeros) — their real K/V are scattered in during the single-step
 selective-attention prefill.
+
+Two targets: :func:`link_prompt` builds a dense per-request blended cache
+(the baselines' path, and the fallback when no page pool exists);
+:func:`link_paged` relocates the same segments straight into a
+:class:`~repro.cache.paged.PagedKVPool`'s reserved pages with one donated
+scatter — the serving engine's zero-copy prefill path.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.paged import pool_link
 from repro.core.segments import Prompt
 from repro.core.select import selection_indices
 from repro.models.layers import INVALID_POS, rope_relink
@@ -34,13 +40,42 @@ class LinkResult:
     misses: list                # media ids absent from the library
 
 
+@dataclasses.dataclass
+class PagedLinkResult:
+    """Link result when placed segments go straight into the page pool.
+
+    No dense blended cache exists: reused KV already sits in the request's
+    reserved pages (scattered by ``link_paged``), and the selected tokens'
+    K/V are written into their pages during the paged selective prefill.
+    ``forced`` records tokens whose segment missed the library — a later
+    re-selection (cacheblend's deviation pass) must keep them selected.
+    """
+    sel_idx: np.ndarray
+    sel_tokens: np.ndarray
+    sel_media_embeds: np.ndarray
+    sel_media_mask: np.ndarray
+    n_reused: int
+    n_recomputed: int
+    misses: list
+    total: int
+    forced: np.ndarray          # (total,) bool — recompute is mandatory
+
+
+def selection_arrays(prompt: Prompt, d_model: int, sel_idx: np.ndarray):
+    """Gather the per-selected-token inputs (ids, media embeds, media mask)."""
+    flat_tokens = prompt.flat_tokens()
+    media_mask = prompt.media_mask()
+    media_embeds = prompt.flat_media_embeds(d_model)
+    return (flat_tokens[sel_idx], media_embeds[sel_idx],
+            media_mask[sel_idx])
+
+
 def precompute_media_kv(model: Model, params, embeds: jnp.ndarray):
     """KV of a media segment standalone (canonical position 0).
 
     embeds (length, D) -> (k, v) each (L, length, Hkv, Dh).  This is what
     the library stores when a user uploads a file (workflow step ①).
     """
-    cfg = model.cfg
     length = embeds.shape[0]
     cache = model.make_cache(1, length)
     tokens = jnp.zeros((1, length), jnp.int32)
@@ -48,6 +83,31 @@ def precompute_media_kv(model: Model, params, embeds: jnp.ndarray):
     _, cache = model.prefill(params, tokens, cache,
                              media_embeds=embeds[None], media_mask=mask)
     return np.asarray(cache["k"][:, 0]), np.asarray(cache["v"][:, 0])
+
+
+def _gather_placements(prompt: Prompt, library, selection: np.ndarray,
+                       entries=None):
+    """Resolve each media segment to a library entry (or a forced recompute).
+
+    Returns (sel, placed, misses): the selection mask grown by missing
+    segments, the placed list [(offset, k, v, length)], and the miss ids.
+    """
+    sel = selection.copy()
+    misses = []
+    placed = []
+    for off, seg in prompt.media_segments():
+        if entries is not None:
+            entry = entries.get(seg.media_id)
+        else:
+            entry = library.get(prompt.user_id, seg.media_id) if library \
+                else None
+        if entry is None:
+            # expired/missing: recompute the whole segment (paper Fig. 6, m misses)
+            sel[off:off + seg.length] = True
+            misses.append(seg.media_id)
+        else:
+            placed.append((off, entry.k, entry.v, seg.length))
+    return sel, placed, misses
 
 
 def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
@@ -66,22 +126,8 @@ def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
     kv_len = kv_len or total + 1          # +1 scratch slot for pad scatter
     assert kv_len >= total + 1
 
-    sel = selection.copy()
-    misses = []
-    placed = []                            # (offset, k_np, v_np, length)
-    for off, seg in prompt.media_segments():
-        if entries is not None:
-            entry = entries.get(seg.media_id)
-        else:
-            entry = library.get(prompt.user_id, seg.media_id) if library \
-                else None
-        if entry is None:
-            # expired/missing: recompute the whole segment (paper Fig. 6, m misses)
-            sel[off:off + seg.length] = True
-            misses.append(seg.media_id)
-        else:
-            placed.append((off, entry.k, entry.v, seg.length))
-
+    sel, placed, misses = _gather_placements(prompt, library, selection,
+                                             entries)
     L, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
     dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
     pos = np.full((kv_len,), INVALID_POS, np.int64)
@@ -124,16 +170,114 @@ def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
         "pos": jnp.asarray(pos[None], jnp.int32),
     }
 
-    flat_tokens = prompt.flat_tokens()
-    media_mask = prompt.media_mask()
-    media_embeds = prompt.flat_media_embeds(cfg.d_model)
+    sel_tokens, sel_media_embeds, sel_media_mask = selection_arrays(
+        prompt, cfg.d_model, sel_idx)
     return LinkResult(
         cache=cache,
         sel_idx=sel_idx,
-        sel_tokens=flat_tokens[sel_idx],
-        sel_media_embeds=media_embeds[sel_idx],
-        sel_media_mask=media_mask[sel_idx],
+        sel_tokens=sel_tokens,
+        sel_media_embeds=sel_media_embeds,
+        sel_media_mask=sel_media_mask,
         n_reused=int(total - sel.sum()),
         n_recomputed=int(sel.sum()),
         misses=misses,
     )
+
+
+def bucket(n: int, lo: int = 8) -> int:
+    """Next power of two ≥ max(n, lo) — bounds distinct jit shapes to
+    O(log max_seq_len) like the engine's page-table bucketing.  Shared by
+    the link scatter and the prefill step (``core/paged_prefill``) so the
+    two stages' compile-cache behavior cannot drift apart."""
+    b = max(lo, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def link_paged(model: Model, prompt: Prompt, library,
+               selection: np.ndarray, pool, page_row: np.ndarray, *,
+               scratch_page: int, entries=None) -> PagedLinkResult:
+    """Link a prompt's reused segments DIRECTLY into reserved pool pages.
+
+    The paged twin of :func:`link_prompt`: placed segments are relinked with
+    one batched ``rope_relink`` and scattered into the request's pages by
+    the donated :func:`repro.cache.paged.pool_link` — no dense
+    ``(L, kv_len, H, D)`` blended cache is ever materialized, and nothing
+    needs splicing after the prefill.  Selected slots are NOT zeroed (the
+    dense path's dummy cache): the paged selective prefill scatters fresh
+    K/V into them before each layer's attention reads the pool, so stale
+    bytes there are never observed.
+
+    The placed-token axis of the scatter is padded to a power-of-two bucket
+    (pad rows land on ``scratch_page``), so steady-state traffic with
+    varying media footprints reuses a warm ``pool_link`` compile cache.
+    """
+    cfg = model.cfg
+    total = prompt.total_len
+    ps = pool.cfg.page_size
+    sel, placed, misses = _gather_placements(prompt, library, selection,
+                                             entries)
+    forced = sel & ~selection                   # miss-driven recomputes
+    sel_idx = selection_indices(sel)
+
+    if placed:
+        k_cat = np.concatenate([k for _, k, _, _ in placed], axis=1)
+        v_cat = np.concatenate([v for _, _, v, _ in placed], axis=1)
+        idx = np.concatenate([np.arange(off, off + n)
+                              for off, _, _, n in placed])
+        delta = np.concatenate([np.full(n, off, np.int32)
+                                for off, _, _, n in placed])
+        n_placed = len(idx)
+        b = min(bucket(n_placed), max(pool.cfg.page_size, 8) *
+                max(len(page_row), 1))
+        pad = b - n_placed
+        if pad > 0:
+            zeros = np.zeros(k_cat.shape[:1] + (pad,) + k_cat.shape[2:],
+                             k_cat.dtype)
+            k_cat = np.concatenate([k_cat, zeros], axis=1)
+            v_cat = np.concatenate([v_cat, zeros], axis=1)
+            delta = np.concatenate([delta, np.zeros(pad, np.int32)])
+        pages = np.full((b,), scratch_page, np.int32)
+        offs = np.zeros((b,), np.int32)
+        pages[:n_placed] = np.asarray(page_row)[idx // ps]
+        offs[:n_placed] = idx % ps
+        relink = bool(cfg.rope_theta) and not cfg.learned_pos_emb
+        pool.k, pool.v = pool_link(
+            pool.k, pool.v, jnp.asarray(pages), jnp.asarray(offs),
+            jnp.asarray(k_cat), jnp.asarray(v_cat), jnp.asarray(delta),
+            theta=cfg.rope_theta, relink=relink)
+
+    sel_tokens, sel_media_embeds, sel_media_mask = selection_arrays(
+        prompt, cfg.d_model, sel_idx)
+    return PagedLinkResult(
+        sel_idx=sel_idx,
+        sel_tokens=sel_tokens,
+        sel_media_embeds=sel_media_embeds,
+        sel_media_mask=sel_media_mask,
+        n_reused=int(total - sel.sum()),
+        n_recomputed=int(sel.sum()),
+        misses=misses,
+        total=total,
+        forced=forced,
+    )
+
+
+def reselect_paged(model: Model, prompt: Prompt, link: PagedLinkResult,
+                   selection: np.ndarray) -> PagedLinkResult:
+    """New selection over an already-linked paged prompt (no re-scatter).
+
+    Placement is selection-independent in the paged path (selected slots
+    are overwritten during the prefill, not zeroed at link time), so
+    cacheblend's deviation-driven re-selection only needs fresh selection
+    arrays.  Miss-forced tokens stay selected.
+    """
+    sel = selection | link.forced
+    sel_idx = selection_indices(sel)
+    sel_tokens, sel_media_embeds, sel_media_mask = selection_arrays(
+        prompt, model.cfg.d_model, sel_idx)
+    return dataclasses.replace(
+        link, sel_idx=sel_idx, sel_tokens=sel_tokens,
+        sel_media_embeds=sel_media_embeds, sel_media_mask=sel_media_mask,
+        n_reused=int(link.total - sel.sum()),
+        n_recomputed=int(sel.sum()))

@@ -27,7 +27,6 @@ import numpy as np
 from repro.core import select as sel_mod
 from repro.core.linker import LinkResult, link_prompt
 from repro.core.segments import Prompt
-from repro.models.layers import INVALID_POS
 from repro.models.model import Model
 
 
@@ -43,25 +42,46 @@ class PolicyResult:
 # ---------------------------------------------------------------------------
 
 class PrefixStore:
-    """Token-prefix → KV cache store (radix-style, hash-chained)."""
+    """Token-prefix → KV cache store (radix-style, hash-chained).
+
+    Hashes are *chained incrementally*: the digest of a prefix of length n
+    is the sha1 state after n per-token updates, so ``longest_match`` walks
+    a prompt with ONE hash update per token — O(n) total bytes hashed —
+    instead of re-hashing every candidate prefix from scratch (the seed's
+    loop hashed O(n²) bytes: a 1k-token prompt re-digested ~4 MB per
+    lookup).
+    """
 
     def __init__(self):
-        self._entries = {}  # hash -> (n_tokens, k, v)
+        self._entries = {}  # chained hash -> (n_tokens, k, v)
 
     @staticmethod
-    def _h(tokens: np.ndarray) -> str:
-        return hashlib.sha1(np.ascontiguousarray(tokens, np.int64)).hexdigest()
+    def _chain(tokens: np.ndarray):
+        """Yield (n, digest-of-first-n-tokens) for n = 1..len(tokens).
+
+        ``hashlib`` objects accept updates after a digest call, so one
+        running sha1 state serves every prefix length.
+        """
+        h = hashlib.sha1()
+        toks = np.ascontiguousarray(tokens, np.int64)
+        for n in range(len(toks)):
+            h.update(toks[n:n + 1])
+            yield n + 1, h.hexdigest()
 
     def put(self, tokens: np.ndarray, k: np.ndarray, v: np.ndarray):
-        self._entries[self._h(tokens)] = (len(tokens), k, v)
+        # one C-speed pass: a streaming hash of the whole buffer is
+        # bit-identical to the per-token chain walked by longest_match
+        digest = hashlib.sha1(
+            np.ascontiguousarray(tokens, np.int64)).hexdigest()
+        self._entries[digest] = (len(tokens), k, v)
 
     def longest_match(self, tokens: np.ndarray):
         """Longest stored prefix of ``tokens``; returns (n, k, v) or (0,..)."""
         best = (0, None, None)
-        for n in range(len(tokens), 0, -1):
-            e = self._entries.get(self._h(tokens[:n]))
+        for n, digest in self._chain(tokens):
+            e = self._entries.get(digest)
             if e is not None and e[0] == n:
-                return e
+                best = e
         return best
 
 
@@ -115,7 +135,6 @@ def prefix_caching(model: Model, params, prompt: Prompt, library=None, *,
                    prefix_store: Optional[PrefixStore] = None, kv_len=None,
                    **kw) -> PolicyResult:
     t0 = time.perf_counter()
-    cfg = model.cfg
     flat = prompt.flat_tokens()
     n_hit, k_hit, v_hit = (prefix_store.longest_match(flat)
                            if prefix_store else (0, None, None))
@@ -149,7 +168,6 @@ def full_reuse(model: Model, params, prompt: Prompt, library, *, kv_len=None,
                entries=None, **kw) -> PolicyResult:
     """Two-step Prompt-Cache-style reuse (paper §3.2)."""
     t0 = time.perf_counter()
-    cfg = model.cfg
     selection = sel_mod.full_reuse_selection(prompt)
     link = link_prompt(model, prompt, library, selection, kv_len=kv_len,
                        entries=entries)
@@ -188,36 +206,65 @@ def full_reuse(model: Model, params, prompt: Prompt, library, *, kv_len=None,
          "wall_s": time.perf_counter() - t0, "misses": link.misses})
 
 
+def _probe_k_deviation(model: Model, params, prompt: Prompt,
+                       k_cached0) -> np.ndarray:
+    """Layer-0 K recompute for every token, L1 deviation vs the linked
+    cache's layer-0 K (cheap: one layer, no cache) — cacheblend's ranking
+    signal.  ``k_cached0`` is (S, Hkv, Dh) from either the dense blended
+    cache or a pool gather."""
+    cfg = model.cfg
+    if cfg.arch_type == "ssm":
+        raise ValueError("cacheblend needs attention KV")
+    from repro.models.layers import attention_qkv, rmsnorm
+    toks, mask, emb = _full_prompt_arrays(model, prompt)
+    x = model.embed(params, toks, emb, mask)
+    lp0 = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+    positions = jnp.arange(prompt.total_len, dtype=jnp.int32)[None]
+    h = rmsnorm(lp0["attn_norm"], x, cfg.rms_norm_eps)
+    _, k_probe, _ = attention_qkv(lp0["attn"], cfg, h, positions)
+    return np.asarray(jnp.sum(jnp.abs(
+        k_probe[0].astype(jnp.float32) -
+        jnp.asarray(k_cached0).astype(jnp.float32)), axis=(-1, -2)))
+
+
 def cacheblend(model: Model, params, prompt: Prompt, library, *,
                r: float = 0.15, probe_layers: int = 1, kv_len=None,
-               entries=None, **kw) -> PolicyResult:
+               entries=None, paged=None, **kw) -> PolicyResult:
     """CacheBlend-r [Yao et al. 2024]: KV-deviation-driven selection.
 
     Step 1 (probe): recompute K of *all* tokens through the first
     ``probe_layers`` layer(s) and rank media tokens by L1 deviation from the
     linked cache.  Step 2: selective prefill of the chosen tokens.
+
+    With ``paged`` (an engine-bound :class:`~repro.core.paged_prefill
+    .BoundPagedPrefill`), the link scatters straight into pool pages, the
+    probe reads layer-0 K back from the pool, and re-selection reuses the
+    same placement (no second link) — then one bucketed, donated jit step.
     """
     t0 = time.perf_counter()
-    cfg = model.cfg
     base_sel = sel_mod.full_reuse_selection(prompt)
+    if paged is not None:
+        link0 = paged.link(model, prompt, library, base_sel, entries=entries)
+        # the pool is not zeroed at selected slots (they are overwritten
+        # during the prefill, and never *attended* before that) — but the
+        # probe reads the pool BEFORE the prefill, so blank them here or a
+        # previous tenant's stale K would steer the deviation ranking
+        # (dense parity: link_prompt's dummy cache zeros exactly these)
+        k0 = paged.gather_k0(prompt.total_len)
+        k0[link0.sel_idx] = 0.0
+        dev = _probe_k_deviation(model, params, prompt, k0)
+        selection = sel_mod.cacheblend_selection(prompt, dev, r)
+        link = paged.reselect(model, prompt, link0, selection)
+        first = paged.prefill(params, link)
+        return PolicyResult(
+            first, None,
+            {"policy": f"cacheblend-{int(r * 100)}",
+             "n_recomputed": link.n_recomputed, "n_reused": link.n_reused,
+             "engine_steps": 2, "paged_prefill": True,
+             "wall_s": time.perf_counter() - t0, "misses": link.misses})
     link0 = link_prompt(model, prompt, library, base_sel, entries=entries)
-
-    # probe: layer-0 K for every token (cheap: one layer, no cache)
-    toks, mask, emb = _full_prompt_arrays(model, prompt)
-    from repro.models import transformer as tf
-    from repro.models.layers import attention_qkv, rmsnorm
-    x = model.embed(params, toks, emb, mask)
-    lp0 = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
-    positions = jnp.arange(prompt.total_len, dtype=jnp.int32)[None]
-    if cfg.arch_type == "ssm":
-        raise ValueError("cacheblend needs attention KV")
-    h = rmsnorm(lp0["attn_norm"], x, cfg.rms_norm_eps)
-    _, k_probe, _ = attention_qkv(lp0["attn"], cfg, h, positions)
-    k_cached0 = link0.cache["k"][0, 0, :prompt.total_len]      # (S, Hkv, Dh)
-    dev = np.asarray(jnp.sum(jnp.abs(
-        k_probe[0].astype(jnp.float32) - k_cached0.astype(jnp.float32)),
-        axis=(-1, -2)))
-
+    dev = _probe_k_deviation(model, params, prompt,
+                             link0.cache["k"][0, 0, :prompt.total_len])
     selection = sel_mod.cacheblend_selection(prompt, dev, r)
     link = link_prompt(model, prompt, library, selection, kv_len=kv_len,
                        entries=entries)
@@ -231,10 +278,24 @@ def cacheblend(model: Model, params, prompt: Prompt, library, *,
 
 
 def mpic(model: Model, params, prompt: Prompt, library, *, k: int = 32,
-         kv_len=None, entries=None, **kw) -> PolicyResult:
-    """MPIC-k: single-step selective attention (the paper's algorithm)."""
+         kv_len=None, entries=None, paged=None, **kw) -> PolicyResult:
+    """MPIC-k: single-step selective attention (the paper's algorithm).
+
+    With ``paged``, link → selective prefill → first-token logits is one
+    donated, shape-bucketed jit against the page pool: no dense blended
+    cache is materialized and nothing is spliced afterwards.
+    """
     t0 = time.perf_counter()
     selection = sel_mod.mpic_selection(prompt, k)
+    if paged is not None:
+        link = paged.link(model, prompt, library, selection, entries=entries)
+        first = paged.prefill(params, link)
+        return PolicyResult(
+            first, None,
+            {"policy": f"mpic-{k}", "n_recomputed": link.n_recomputed,
+             "n_reused": link.n_reused, "engine_steps": 1,
+             "paged_prefill": True, "wall_s": time.perf_counter() - t0,
+             "misses": link.misses})
     link = link_prompt(model, prompt, library, selection, kv_len=kv_len,
                        entries=entries)
     logits, cache = _selective_step(model, params, link)

@@ -6,8 +6,7 @@ audio / video) references.  Media segments point into the MPIC library by
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
 import numpy as np

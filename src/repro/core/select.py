@@ -9,8 +9,6 @@ probe forward to *measure* deviation — the two-step cost MPIC avoids).
 """
 from __future__ import annotations
 
-from typing import List
-
 import numpy as np
 
 from repro.core.segments import Prompt

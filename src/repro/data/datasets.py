@@ -15,7 +15,7 @@ generators match.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+from typing import Iterator, List
 
 import numpy as np
 

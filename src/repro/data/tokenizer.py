@@ -6,8 +6,6 @@ is valid for every assigned architecture.
 """
 from __future__ import annotations
 
-from typing import List
-
 import numpy as np
 
 PAD, BOS, EOS, IMG, AUDIO = 0, 1, 2, 3, 4

@@ -13,9 +13,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.selective_attn.ref import selective_attention_ref
+from repro.kernels.selective_attn.ref import (
+    selective_attention_paged_ref,
+    selective_attention_ref,
+)
 from repro.kernels.selective_attn.selective_attn import (
     INVALID_POS,
+    selective_attention_paged_pallas,
     selective_attention_pallas,
 )
 
@@ -27,6 +31,47 @@ def _pad_to(x, axis, mult, value=0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value)
+
+
+def selective_attention_paged_call(q, k_pool, v_pool, page_table, q_pos,
+                                   lengths, *, window: int = 0,
+                                   block_q: int = 128, backend: str = "ref",
+                                   interpret: bool = False):
+    """Paged selective-prefill attention — dispatch without jit.
+
+    Accepts the model's (B, Sq, Hq, Dh) query layout and returns the same;
+    K/V are read through ``page_table`` from the (P, page_size, Hkv, Dh)
+    pool slices.  Safe to trace inside scan/jit (the engine's donated
+    prefill step traces it under ``lax.scan`` over layers).
+    """
+    b, sq, hq, dh = q.shape
+    qt = jnp.moveaxis(q, 2, 1)
+    if backend == "ref":
+        out = selective_attention_paged_ref(
+            qt, k_pool, v_pool, page_table, q_pos, lengths, window=window)
+        return jnp.moveaxis(out, 1, 2)
+    bq = min(block_q, max(8, sq))
+    qt = _pad_to(qt, 2, bq)
+    # padding query rows: q_pos 0 yields a garbage-but-finite row that the
+    # caller slices off (their K/V never reach the pool)
+    q_pos_p = _pad_to(q_pos, 1, bq, value=0)
+    out = selective_attention_paged_pallas(
+        qt, k_pool, v_pool, page_table, q_pos_p, lengths, window=window,
+        block_q=bq, interpret=interpret)
+    return jnp.moveaxis(out[:, :, :sq, :], 1, 2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_q", "interpret",
+                                    "use_ref"))
+def selective_attention_paged(q, k_pool, v_pool, page_table, q_pos, lengths,
+                              *, window: int = 0, block_q: int = 128,
+                              interpret: bool = True, use_ref: bool = False):
+    """Standalone jit'd paged selective attention (kernel tests, ad-hoc)."""
+    return selective_attention_paged_call(
+        q, k_pool, v_pool, page_table, q_pos, lengths, window=window,
+        block_q=block_q, backend="ref" if use_ref else "pallas",
+        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",

@@ -16,6 +16,50 @@ import jax.numpy as jnp
 INVALID_POS = jnp.iinfo(jnp.int32).max
 
 
+def selective_attention_paged_ref(q, k_pool, v_pool, page_table, q_pos,
+                                  lengths, *, window: int = 0):
+    """Selective prefill attention reading K/V through a page table.
+
+    q          (B, Hq, Sq, Dh)        selected (recomputed) tokens
+    k/v pool   (P, page_size, Hkv, Dh) shared page pool (one layer's slice)
+    page_table (B, max_pages) int32   pages owned per sequence
+    q_pos      (B, Sq) int32          original positions of the queries
+    lengths    (B,) int32             valid token slots per sequence
+
+    In the paged prefill layout cache slot ``i`` holds the token at original
+    position ``i`` (the linker places segments at their prompt offsets), so
+    the kv position of slot ``i`` IS ``i`` — masking needs only ``lengths``:
+      * i >= length           -> masked (pad pages / stale previous tenant)
+      * i >  q_pos            -> masked (causal by original position)
+      * window and too far    -> masked (sliding window)
+    Returns (B, Hq, Sq, Dh); fully-masked (padding) query rows give zeros.
+    """
+    b, hq, sq, dh = q.shape
+    p, ps, hkv, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    rep = hq // hkv
+
+    k = k_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    v = v_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    k = jnp.moveaxis(jnp.repeat(k, rep, axis=2), 2, 1)   # (B, Hq, Skv, Dh)
+    v = jnp.moveaxis(jnp.repeat(v, rep, axis=2), 2, 1)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    idx = jnp.arange(max_pages * ps)[None, None, None, :]
+    mask = idx < lengths[:, None, None, None]
+    mask &= idx <= q_pos[:, None, :, None]
+    if window > 0:
+        mask &= idx > q_pos[:, None, :, None] - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    any_valid = jnp.any(mask, axis=-1, keepdims=True)
+    probs = jnp.where(any_valid, probs, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def selective_attention_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
     b, hq, sq, dh = q.shape
     hkv = k.shape[1]

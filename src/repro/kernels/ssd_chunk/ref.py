@@ -15,7 +15,6 @@ covers the quadratic, MXU-dense part.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

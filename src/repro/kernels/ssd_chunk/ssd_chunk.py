@@ -10,12 +10,10 @@ in jnp): it is tiny and latency-bound, not MXU work.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_chunk_kernel(x_ref, bm_ref, cm_ref, la_ref, dt_ref,

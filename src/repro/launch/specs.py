@@ -7,8 +7,6 @@ a CPU-only container.
 """
 from __future__ import annotations
 
-import functools
-import re
 from typing import Optional
 
 import jax
@@ -16,10 +14,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.launch import pspec as pspec_mod
-from repro.launch.mesh import activation_rules, batch_axes
-from repro.models.layers import INVALID_POS, _dtype
-from repro.models.model import Model, build_model
+from repro.launch.mesh import batch_axes
+from repro.models.layers import _dtype
+from repro.models.model import build_model
 from repro.training.optimizer import AdamW
 
 

@@ -6,14 +6,13 @@ everything composes with pjit/shard_map and the training loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
-from repro.models.layers import INVALID_POS, _dtype
+from repro.models.layers import INVALID_POS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +144,32 @@ class Model:
         logits, cache, _ = tf.forward_with_cache(
             params, self.cfg, x, sel_positions, cache, write_idx)
         return logits, cache
+
+    def supports_paged_prefill(self) -> bool:
+        """Selective prefill straight into the page pool — same coverage as
+        paged decode (pure-attention KV; no SSM state, no cross KV)."""
+        return self.supports_paged_decode()
+
+    def selective_prefill_paged(self, params, sel_tokens, sel_positions,
+                                pool_k, pool_v, page_table, lengths,
+                                write_pages, write_offs, *,
+                                media_embeds=None, media_mask=None,
+                                backend: str = "ref",
+                                interpret: bool = False):
+        """MPIC selective prefill against the shared paged KV pool.
+
+        See :func:`repro.models.transformer.selective_prefill_paged` for
+        shapes.  Returns (logits (B, Sq, V), pool_k, pool_v) — callers
+        donate the pool buffers so the K/V writes are in place.
+        """
+        assert self.cfg.arch_type not in ("ssm",), \
+            "selective prefill needs attention KV (see DESIGN.md)"
+        x = self.embed(params, sel_tokens, media_embeds, media_mask,
+                       sel_positions)
+        return tf.selective_prefill_paged(
+            params, self.cfg, x, sel_positions, pool_k, pool_v, page_table,
+            lengths, write_pages, write_offs, backend=backend,
+            interpret=interpret)
 
     def decode_step(self, params, token, position, cache, write_idx):
         """One decode step. token (B,1), position (B,1), write_idx (B,1)."""

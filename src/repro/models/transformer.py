@@ -20,13 +20,13 @@ Design notes
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attn.ops import paged_attention_call
+from repro.kernels.selective_attn.ops import selective_attention_paged_call
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
@@ -402,6 +402,59 @@ def decode_paged(params: dict, cfg, embeds: jnp.ndarray,
         cfg.scan_layers)
     logits = _logits(params, cfg, x)
     return logits[:, -1, :], new_k, new_v
+
+
+def selective_prefill_paged(params: dict, cfg, embeds: jnp.ndarray,
+                            sel_positions: jnp.ndarray, pool_k: jnp.ndarray,
+                            pool_v: jnp.ndarray, page_table: jnp.ndarray,
+                            lengths: jnp.ndarray, write_pages: jnp.ndarray,
+                            write_offs: jnp.ndarray, *, backend: str = "ref",
+                            interpret: bool = False):
+    """MPIC selective-attention prefill straight against the paged KV pool.
+
+    embeds       (B, Sq, D)      embeddings of the selected tokens (padded
+                                 to the caller's shape bucket)
+    sel_positions (B, Sq)        their original prompt positions
+    pool_k/v     (L, P, ps, Hkv, Dh)  shared page pool (donated by callers)
+    page_table   (B, mp) int32   pages owned per slot, scratch-padded; ``mp``
+                                 only needs to cover ⌈lengths/ps⌉
+    lengths      (B,) int32      valid kv slots (= prompt length); slot i
+                                 holds original position i — the linker
+                                 places reused segments at their offsets and
+                                 this pass scatters the recomputed tokens
+                                 into theirs, so no per-slot pos array is
+                                 needed (contrast ``forward_with_cache``)
+    write_pages/write_offs (B, Sq)  pool coordinates per selected token;
+                                 padding rows point at the scratch page
+
+    Per layer (mirroring ``decode_paged``): compute Q/K/V of the selected
+    tokens, scatter K/V into their pages, then selective attention over the
+    full paged region — the recomputed tokens become visible to each other
+    inside this one pass (the paper's single-step property).  Returns
+    (logits (B, Sq, V), pool_k, pool_v).
+    """
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        xc, aux = carry
+        lp, pk, pv = xs
+        h = rmsnorm(lp["attn_norm"], xc, cfg.rms_norm_eps)
+        q, k_new, v_new = attention_qkv(lp["attn"], cfg, h, sel_positions)
+        pk = pk.at[write_pages, write_offs].set(k_new.astype(pk.dtype))
+        pv = pv.at[write_pages, write_offs].set(v_new.astype(pv.dtype))
+        o = selective_attention_paged_call(
+            q, pk, pv, page_table, sel_positions, lengths,
+            window=cfg.sliding_window, backend=backend, interpret=interpret)
+        xc = xc + attention_out(lp["attn"], o)
+        h = rmsnorm(lp["mlp_norm"], xc, cfg.rms_norm_eps)
+        ff, aux = _mlp_block(lp, cfg, h, aux)
+        xc = xc + ff
+        return (xc, aux), (pk, pv)
+
+    (x, _), (new_k, new_v) = _scan_or_loop(
+        body, (embeds, aux0), (params["layers"], pool_k, pool_v),
+        cfg.scan_layers)
+    return _logits(params, cfg, x), new_k, new_v
 
 
 def forward_train(params: dict, cfg, tokens: jnp.ndarray,

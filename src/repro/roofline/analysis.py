@@ -48,7 +48,6 @@ _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
 def _shape_bytes(line: str) -> int:
     """Bytes of the result shape(s) — the text before the op name."""
-    head = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
     # result shapes appear between '=' and the op name
     m = re.search(r"=\s*(.*?)\s(all-gather|all-reduce|reduce-scatter|"
                   r"all-to-all|collective-permute)", line)

@@ -30,6 +30,17 @@ into the pool.  Sliding-window archs stay paged (the kernel masks the
 window like the dense decode path); archs with SSM state or cross KV keep
 the dense ``(L, B, max_seq_len, …)`` cache (``paged=False`` forces it
 anywhere, and is the benchmark baseline).
+
+**Paged prefill path** (default on paged engines): mpic/cacheblend
+admissions never build a dense blended cache — the linker scatters reused
+segments straight into the slot's reserved pages
+(``core/linker.link_paged``) and the selective prefill runs as ONE
+shape-bucketed, donated jit against the pool
+(``core/paged_prefill.PagedPrefiller``): selected tokens pad to a
+power-of-two bucket, the page table to the live page bucket, so
+varying-length traffic reuses a warm compile cache with zero host
+round-trips between link and first token.  Other policies (and chunked
+prefills) keep the dense per-request cache + splice fallback.
 """
 from __future__ import annotations
 
@@ -43,11 +54,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.library import KVLibrary
-from repro.cache.paged import PagedConfig, PagedKVPool
+from repro.cache.paged import PagedConfig, PagedKVPool, pool_link
 from repro.cache.transfer import ParallelLoader, PrefetchHandle
-from repro.core.linker import precompute_media_kv
+from repro.core.linker import bucket, precompute_media_kv
+from repro.core.paged_prefill import PagedPrefiller
 from repro.core.policies import POLICIES, PolicyResult, PrefixStore
-from repro.core.segments import Prompt
 from repro.kernels.paged_attn.ops import resolve_backend
 from repro.models.layers import INVALID_POS, rope_relink
 from repro.models.model import Model
@@ -77,6 +88,10 @@ class EngineConfig:
     num_pages: int = 0              # 0 → slots·⌈max_seq_len/page⌉ + scratch
     donate_decode: bool = True      # donate pool buffers into the decode jit
     paged_backend: str = "auto"     # pallas | ref | auto (pallas on TPU)
+    # -- paged prefill path ------------------------------------------------
+    paged_prefill: bool = True      # mpic/cacheblend prefill straight into
+                                    # pool pages (bucketed, donated jit)
+    prefill_bucket_min: int = 16    # smallest selection shape bucket
 
 
 # -- jit'd, donated cache-mutation helpers ----------------------------------
@@ -111,18 +126,6 @@ def _dense_link(bc: dict, k_seg, v_seg, off, slot, *, theta: float,
     out["v"] = bc["v"].at[:, slot, idx].set(v_seg.astype(bc["v"].dtype))
     out["pos"] = bc["pos"].at[slot, idx].set(idx)
     return out
-
-
-@functools.partial(jax.jit, donate_argnums=(0, 1),
-                   static_argnames=("theta", "relink"))
-def _pool_link(pool_k, pool_v, pages, offs, k_seg, v_seg, delta, *,
-               theta: float, relink: bool):
-    """RoPE-relink one MRAG segment on device and scatter it into the pool."""
-    if relink:
-        k_seg = rope_relink(k_seg, delta, theta)
-    pool_k = pool_k.at[:, pages, offs].set(k_seg.astype(pool_k.dtype))
-    pool_v = pool_v.at[:, pages, offs].set(v_seg.astype(pool_v.dtype))
-    return pool_k, pool_v
 
 
 class MPICEngine:
@@ -170,8 +173,18 @@ class MPICEngine:
             donate = (1, 2) if self.cfg.donate_decode else ()
             self._decode_jit = jax.jit(self._paged_decode_fn,
                                        donate_argnums=donate)
+            # paged prefill: mpic/cacheblend link + selective-prefill
+            # straight into pool pages through one bucketed, donated jit
+            self._prefiller = None
+            if self.cfg.paged_prefill and model.supports_paged_prefill():
+                self._prefiller = PagedPrefiller(
+                    model, self.pool, self._scratch_page,
+                    backend=self._paged_backend,
+                    interpret=jax.default_backend() != "tpu",
+                    bucket_min=self.cfg.prefill_bucket_min)
         else:
             self.pool = None
+            self._prefiller = None
             self._batch_cache = model.make_cache(self.cfg.decode_slots,
                                                  self.cfg.max_seq_len)
             self._decode_jit = jax.jit(self._decode_step_fn)
@@ -180,6 +193,11 @@ class MPICEngine:
     def waiting(self):
         """The scheduler's priority queue (len/bool/iter like the old deque)."""
         return self.scheduler.queue
+
+    @property
+    def prefill_trace_count(self) -> int:
+        """Retraces of the paged-prefill jit (compile-count guard probe)."""
+        return self._prefiller.traces if self._prefiller is not None else 0
 
     # ------------------------------------------------------------------
     # workflow ①: upload → precompute KV → store
@@ -306,13 +324,19 @@ class MPICEngine:
 
             # monolithic path: one policy call inside a measured compute
             # window; the linker gathers this request's prefetched entries
-            # at link time
+            # at link time.  mpic/cacheblend on a paged engine get the
+            # slot-bound prefiller: link → selective prefill → first token
+            # happens inside the pool with no dense blended cache
+            paged_ctx = None
+            if (self._prefiller is not None
+                    and policy_name in ("mpic", "cacheblend")):
+                paged_ctx = self._prefiller.bind(self._page_tables[slot])
             with self.scheduler.compute_window():
                 result = POLICIES[policy_name](
                     self.model, self.params, req.prompt, self.static_lib,
                     kv_len=self.cfg.max_seq_len,
                     prefix_store=self.prefix_store,
-                    entries=handle, **req.policy_kwargs)
+                    entries=handle, paged=paged_ctx, **req.policy_kwargs)
             self._finalize_prefill(req, result, handle)
         except BaseException:
             self._abort_prefill(slot)
@@ -366,8 +390,12 @@ class MPICEngine:
         self.scheduler.account(req, handle, result.stats.get("wall_s", 0.0))
 
         # splice the request cache into the batch cache / page pool at
-        # `slot` (paged: pages were reserved at _begin_prefill)
-        if self._use_paged:
+        # `slot` (paged: pages were reserved at _begin_prefill).  A paged
+        # prefill (result.cache is None) already wrote every K/V into the
+        # slot's pages — nothing to splice, no dense copy ever existed.
+        if result.cache is None:
+            pass
+        elif self._use_paged:
             self._splice_paged(req.slot, result.cache, req.cur_len + 1)
         else:
             self._batch_cache = _dense_splice(
@@ -396,11 +424,7 @@ class MPICEngine:
         may keep a previous tenant's stale KV — every read is
         length-masked, so it is never observed.
         """
-        s = rc["k"].shape[2]
-        b = 1
-        while b < n_tokens:
-            b *= 2
-        b = min(b, s)
+        b = min(bucket(n_tokens, 1), rc["k"].shape[2])
         self.pool.write_tokens(self._page_tables[slot], 0,
                                rc["k"][:, 0, :b], rc["v"][:, 0, :b])
 
@@ -423,7 +447,7 @@ class MPICEngine:
                 self._set_page_row(req.slot, pages)
                 ps = self.cfg.page_size
                 t = off + np.arange(length)
-                self.pool.k, self.pool.v = _pool_link(
+                self.pool.k, self.pool.v = pool_link(
                     self.pool.k, self.pool.v,
                     jnp.asarray(self._page_tables[req.slot][t // ps]),
                     jnp.asarray((t % ps).astype(np.int32)),
@@ -535,10 +559,7 @@ class MPICEngine:
         if not live:
             return live, None
         mp_need = max(self.pool.pages_for(r.cur_len + 1) for r in live)
-        mp = 1
-        while mp < mp_need:
-            mp *= 2
-        mp = min(mp, self._pages_per_slot)
+        mp = min(bucket(mp_need, 1), self._pages_per_slot)
         with self.scheduler.compute_window():
             logits, self.pool.k, self.pool.v = self._decode_jit(
                 self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),

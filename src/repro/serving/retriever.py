@@ -9,7 +9,7 @@ scope; the *system* path it exercises is the point).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 import os
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Iterator, Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
-from repro.data import train_batches
 from repro.models import build_model
 from repro.training import AdamW, make_train_step
 

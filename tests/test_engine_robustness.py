@@ -6,7 +6,6 @@ import jax
 import numpy as np
 import pytest
 
-from repro.cache import KVLibrary
 from repro.configs import get_smoke_config
 from repro.core import Prompt, media_segment, text_segment
 from repro.data import image_embeds

@@ -5,7 +5,6 @@ drop-in for the serving hot spot, not just a synthetic-shape toy."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.cache import KVLibrary
 from repro.configs import get_smoke_config

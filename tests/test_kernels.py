@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
 against the pure-jnp oracles (interpret mode on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -18,7 +18,7 @@ from repro.core import (
     precompute_media_kv,
     text_segment,
 )
-from repro.core.select import cacheblend_selection, selection_indices
+from repro.core.select import cacheblend_selection
 from repro.models import build_model
 from repro.models.layers import INVALID_POS, apply_rope, rope_relink
 
@@ -184,8 +184,7 @@ def test_mpic_position_independence(setup):
     the defining property prefix caching lacks."""
     cfg, m, params, lib, prompt = setup
     r = np.random.default_rng(7)
-    emb = np.asarray(lib.get("u1", "A").k)  # just to confirm presence
-    embA = None
+    assert lib.get("u1", "A") is not None
     for seed, lead in [(1, 3), (2, 9)]:
         pr = Prompt([
             text_segment(r.integers(8, 200, lead)),
@@ -195,3 +194,47 @@ def test_mpic_position_independence(setup):
         res = POLICIES["mpic"](m, params, pr, lib, k=4)
         assert res.stats["n_reused"] == 20   # 24 - k, both offsets
         assert not res.stats["misses"]
+
+
+# ---------------------------------------------------------------------------
+# PrefixStore: incremental hash chain
+# ---------------------------------------------------------------------------
+
+def test_prefix_store_longest_match_1k_prompt():
+    """Regression for the O(n²) re-hash: on a 1k-token prompt the lookup
+    must hash each token exactly once (chained digests) and still return
+    the longest stored prefix."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 1000, 1000).astype(np.int64)
+    ps = PrefixStore()
+    for n in (10, 300, 700):
+        ps.put(toks[:n], k=f"k{n}", v=f"v{n}")
+    # the chain walks each prefix length once — count sha1 byte throughput
+    import hashlib as _hl
+    hashed = []
+    real_sha1 = _hl.sha1
+
+    class CountingSha1:
+        def __init__(self):
+            self._h = real_sha1()
+        def update(self, b):
+            hashed.append(len(bytes(b)))
+            self._h.update(b)
+        def hexdigest(self):
+            return self._h.hexdigest()
+
+    _hl.sha1 = CountingSha1
+    try:
+        n, k, v = ps.longest_match(toks)
+    finally:
+        _hl.sha1 = real_sha1
+    assert (n, k, v) == (700, "k700", "v700")
+    # one int64 per token — linear, not quadratic (seed hashed ~4 MB here)
+    assert sum(hashed) == 8 * len(toks)
+
+    # prefix that diverges after 5 tokens: only the 10-token entry's prefix
+    # region matches nothing; stored 10-prefix requires 10 equal tokens
+    other = toks.copy()
+    other[5:] += 1
+    assert ps.longest_match(other)[0] == 0
+    assert ps.longest_match(toks[:10])[0] == 10

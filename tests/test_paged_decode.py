@@ -52,7 +52,6 @@ def test_paged_decode_matches_dense_gqa(hq, hkv, window):
                                    dtype="float32"))
     pt = pool.alloc("r", t0 + steps)
     pool.write_tokens(pt, 0, cache["k"][:, 0, :t0], cache["v"][:, 0, :t0])
-    mp = len(pt)
     page_table = jnp.asarray(pt[None])
 
     tok = int(jnp.argmax(logits[0, -1]))

@@ -1,0 +1,288 @@
+"""Paged prefill path: link → selective prefill straight into the KV pool.
+
+Parity against the dense selective-prefill policies (Pallas kernel in
+interpret mode, GQA/MQA/windowed sweep), bucketed pad-masking correctness,
+the compile-count guard (same-bucket prompt lengths must NOT retrace), and
+the engine-level guarantee that the mpic path never materializes or splices
+a dense blended cache.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import KVLibrary, PagedConfig, PagedKVPool
+from repro.configs import get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core import (POLICIES, Prompt, media_segment,
+                        precompute_media_kv, text_segment)
+from repro.core.paged_prefill import PagedPrefiller, bucket
+from repro.data import image_embeds
+from repro.models import build_model
+from repro.serving import EngineConfig, MPICEngine, Request
+
+PAGE = 8
+
+
+def _tiny_cfg(hq, hkv, window=0):
+    return ModelConfig(name=f"tiny-{hq}-{hkv}", arch_type="dense",
+                       num_layers=2, d_model=64, num_heads=hq,
+                       num_kv_heads=hkv, head_dim=16, d_ff=128,
+                       vocab_size=128, sliding_window=window,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+def _setup(cfg, media_len=16):
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    emb = image_embeds("IMG", media_len, cfg.d_model)
+    lib = KVLibrary()
+    k, v = precompute_media_kv(model, params, jnp.asarray(emb))
+    lib.put("u", "IMG", k, v)
+    prompt = Prompt([
+        text_segment(rng.integers(1, cfg.vocab_size, 5)),
+        media_segment("IMG", emb),
+        text_segment(rng.integers(1, cfg.vocab_size, 4)),
+    ], user_id="u")
+    return model, params, lib, prompt
+
+
+def _pool_prefiller(model, n_tokens, *, backend="pallas", bucket_min=16):
+    pool = PagedKVPool(PagedConfig(
+        num_pages=2 + -(-n_tokens // PAGE), page_size=PAGE,
+        num_layers=model.cfg.num_layers, num_kv_heads=model.cfg.num_kv_heads,
+        head_dim=model.cfg.head_dim, dtype="float32"))
+    scratch = int(pool.alloc("__scratch__", 1)[0])
+    pages = pool.alloc("r", n_tokens)
+    pf = PagedPrefiller(model, pool, scratch, backend=backend,
+                        interpret=True, bucket_min=bucket_min)
+    return pool, pf, pages
+
+
+@pytest.mark.parametrize("hq,hkv,window", [
+    (4, 4, 0),      # MHA, full causal
+    (4, 2, 0),      # GQA 2:1
+    (8, 1, 0),      # MQA
+    (4, 2, 6),      # GQA + sliding window that binds across the prompt
+])
+def test_paged_prefill_matches_dense_policy(hq, hkv, window):
+    """mpic through the paged step (Pallas, interpret=True) == dense mpic:
+    same first-token logits AND identical pool KV vs the dense blended
+    cache over every real slot."""
+    cfg = _tiny_cfg(hq, hkv, window)
+    model, params, lib, prompt = _setup(cfg)
+    total = prompt.total_len
+
+    dense = POLICIES["mpic"](model, params, prompt, lib, k=4)
+    pool, pf, pages = _pool_prefiller(model, total + 1)
+    paged = POLICIES["mpic"](model, params, prompt, lib, k=4,
+                             paged=pf.bind(pages))
+    assert paged.cache is None and paged.stats["paged_prefill"] is True
+    assert paged.stats["n_recomputed"] == dense.stats["n_recomputed"]
+    np.testing.assert_allclose(paged.first_logits, dense.first_logits,
+                               atol=1e-4, rtol=1e-4)
+    k_pool, v_pool = pool.gather(pages, total)
+    np.testing.assert_allclose(np.asarray(k_pool),
+                               np.asarray(dense.cache["k"][:, 0, :total]),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(v_pool),
+                               np.asarray(dense.cache["v"][:, 0, :total]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_cacheblend_paged_matches_dense_policy(monkeypatch):
+    """Same deviation-driven selection through both paths ⇒ same logits.
+
+    The probe itself only differs by float noise between the dense cache
+    and the pool gather (rope_relink fused into the link jit), but that
+    noise can flip a near-tied argpartition pick — so pin the selection and
+    compare the *machinery* exactly."""
+    cfg = _tiny_cfg(4, 2)
+    model, params, lib, prompt = _setup(cfg)
+
+    def fixed_selection(prompt_, dev, r):
+        sel = np.zeros((prompt_.total_len,), bool)
+        sel[~prompt_.media_mask()] = True          # all text
+        media_idx = np.nonzero(prompt_.media_mask())[0]
+        sel[media_idx[::3]] = True                 # every 3rd media token
+        assert dev.shape == (prompt_.total_len,)
+        return sel
+
+    from repro.core import policies as pol_mod
+    monkeypatch.setattr(pol_mod.sel_mod, "cacheblend_selection",
+                        fixed_selection)
+    dense = POLICIES["cacheblend"](model, params, prompt, lib, r=0.25)
+    pool, pf, pages = _pool_prefiller(model, prompt.total_len + 1)
+    paged = POLICIES["cacheblend"](model, params, prompt, lib, r=0.25,
+                                   paged=pf.bind(pages))
+    assert paged.cache is None and paged.stats["paged_prefill"] is True
+    assert paged.stats["n_recomputed"] == dense.stats["n_recomputed"]
+    np.testing.assert_allclose(paged.first_logits, dense.first_logits,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_bucket_padding_is_masked():
+    """The same prompt through a tight bucket (no padding) and a huge one
+    (mostly padding rows + scratch-page writes) gives identical logits and
+    identical pool KV — pad rows are fully absorbed."""
+    cfg = _tiny_cfg(4, 2)
+    model, params, lib, prompt = _setup(cfg)
+    total = prompt.total_len
+    outs = []
+    for bucket_min in (8, 128):
+        pool, pf, pages = _pool_prefiller(model, total + 1,
+                                          bucket_min=bucket_min)
+        res = POLICIES["mpic"](model, params, prompt, lib, k=4,
+                               paged=pf.bind(pages))
+        outs.append((res.first_logits, *map(np.asarray,
+                                            pool.gather(pages, total))))
+    np.testing.assert_allclose(outs[0][0], outs[1][0], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs[0][1], outs[1][1], atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(outs[0][2], outs[1][2], atol=1e-6, rtol=1e-6)
+
+
+def test_bucket_helper():
+    assert [bucket(n, 8) for n in (1, 8, 9, 16, 17, 33)] == \
+        [8, 8, 16, 16, 32, 64]
+
+
+def _text_req(n, seed=0, **kw):
+    r = np.random.default_rng(seed)
+    return Request(prompt=Prompt([text_segment(r.integers(1, 100, n))],
+                                 user_id="u"),
+                   max_new_tokens=2, policy="mpic", policy_kwargs={"k": 4},
+                   **kw)
+
+
+def test_same_bucket_prompt_lengths_single_trace():
+    """Two different prompt lengths inside one (selection, page) bucket pair
+    must reuse the first compile; a length outside the bucket retraces."""
+    cfg = _tiny_cfg(4, 2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2, paged=True,
+                                  page_size=PAGE, prefill_bucket_min=16))
+    # selection buckets: 20 → 32, 24 → 32 (warm);  40 → 64 (one new trace)
+    for n, seed in ((20, 0), (24, 1)):
+        eng.submit(_text_req(n, seed))
+    eng.run()
+    assert eng.prefill_trace_count == 1, \
+        "same-bucket prompt lengths must not retrace the prefill jit"
+    eng.submit(_text_req(40, 2))
+    eng.run()
+    assert eng.prefill_trace_count == 2
+
+
+def test_engine_mpic_path_never_splices_dense_cache():
+    """On the paged engine, mpic admission goes link → selective prefill →
+    first token entirely inside the pool: no dense blended cache reaches
+    ``_splice_paged``.  A policy with no paged route (full_recompute) still
+    splices — the counter proves the hook is live."""
+    cfg = _tiny_cfg(4, 2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2, paged=True,
+                                  page_size=PAGE))
+    calls = []
+    orig = eng._splice_paged
+    eng._splice_paged = lambda *a, **kw: (calls.append(a), orig(*a, **kw))
+    eng.upload("u", "IMG", image_embeds("IMG", 16, cfg.d_model))
+    r = np.random.default_rng(0)
+    prompt = Prompt([
+        text_segment(r.integers(1, 100, 6)),
+        media_segment("IMG", image_embeds("IMG", 16, cfg.d_model)),
+    ], user_id="u")
+    req = eng.submit(Request(prompt=prompt, max_new_tokens=3, policy="mpic",
+                             policy_kwargs={"k": 4}))
+    eng.run()
+    assert req.done and not calls
+    assert req.prefill_stats.get("paged_prefill") is True
+    eng.submit(Request(prompt=Prompt([text_segment(
+        np.random.default_rng(4).integers(1, 100, 10))], user_id="u"),
+        max_new_tokens=2, policy="full_recompute"))
+    eng.run()
+    assert calls, "non-mpic policies keep the dense splice fallback"
+
+
+def test_engine_outputs_identical_with_and_without_paged_prefill():
+    """The paged prefill is a pure perf change: greedy continuations match
+    the dense-prefill-then-splice path exactly (fp32 smoke llava)."""
+    cfg = dataclasses.replace(get_smoke_config("llava-1.6-7b"),
+                              param_dtype="float32", compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def drive(paged_prefill):
+        eng = MPICEngine(model, params,
+                         EngineConfig(max_seq_len=128, decode_slots=2,
+                                      paged=True, page_size=PAGE,
+                                      paged_prefill=paged_prefill))
+        eng.upload("u1", "A", image_embeds("A", 16, cfg.d_model))
+        reqs = []
+        for i in range(3):
+            r = np.random.default_rng(i)
+            prompt = Prompt([
+                text_segment(r.integers(8, 200, 5 + i)),
+                media_segment("A", image_embeds("A", 16, cfg.d_model)),
+                text_segment(r.integers(8, 200, 4)),
+            ], user_id="u1")
+            reqs.append(eng.submit(Request(prompt=prompt, max_new_tokens=5,
+                                           policy="mpic",
+                                           policy_kwargs={"k": 4})))
+        eng.run()
+        return eng, reqs
+
+    eng_new, new = drive(True)
+    eng_old, old = drive(False)
+    assert eng_new._prefiller is not None and eng_old._prefiller is None
+    for a, b in zip(new, old):
+        assert a.output_tokens == b.output_tokens
+    # pages fully recycled on completion, same as the splice path
+    assert eng_new.pool.free_pages == eng_new.pool.cfg.num_pages - 1
+
+
+def test_cacheblend_probe_ignores_stale_pool_bytes():
+    """The deviation probe reads the pool BEFORE the prefill, so selected
+    slots (text + missed media) must be blanked — a previous tenant's stale
+    K in those pages must not steer cacheblend's selection (regression:
+    the probe used to read them raw, breaking warm-pool determinism)."""
+    cfg = _tiny_cfg(4, 2)
+    model, params, lib, prompt = _setup(cfg)
+    total = prompt.total_len
+
+    def run(pollute):
+        pool, pf, pages = _pool_prefiller(model, total + 1)
+        if pollute:
+            rng = np.random.default_rng(9)
+            pool.k = pool.k + jnp.asarray(
+                rng.standard_normal(pool.k.shape).astype(np.float32)) * 5.0
+            pool.v = pool.v + jnp.asarray(
+                rng.standard_normal(pool.v.shape).astype(np.float32)) * 5.0
+        return POLICIES["cacheblend"](model, params, prompt, lib, r=0.25,
+                                      paged=pf.bind(pages))
+
+    clean, dirty = run(False), run(True)
+    assert clean.stats["n_recomputed"] == dirty.stats["n_recomputed"]
+    np.testing.assert_allclose(clean.first_logits, dirty.first_logits,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_missing_media_recomputed_on_paged_path():
+    """A library miss forces the whole segment into the selection — the
+    paged route must produce the full-recompute result, not stale pages."""
+    cfg = _tiny_cfg(4, 2)
+    model, params, _lib, prompt = _setup(cfg)
+    empty = KVLibrary()
+    oracle = POLICIES["full_recompute"](model, params, prompt)
+    pool, pf, pages = _pool_prefiller(model, prompt.total_len + 1)
+    res = POLICIES["mpic"](model, params, prompt, empty, k=4,
+                           paged=pf.bind(pages))
+    assert res.stats["misses"] == ["IMG"]
+    assert res.stats["n_recomputed"] == prompt.total_len
+    np.testing.assert_allclose(res.first_logits, oracle.first_logits,
+                               atol=1e-4, rtol=1e-4)

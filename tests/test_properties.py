@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.segments import Prompt, Segment, media_segment, text_segment
+from repro.core.segments import Prompt, media_segment, text_segment
 from repro.core.select import (
     full_reuse_selection,
     mpic_selection,

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.cache import KVLibrary
@@ -81,3 +80,30 @@ def test_mpic_quality_with_quantized_library(tmp_path):
     # right invariant is fp-mpic ≡ int8-mpic, not mpic ≡ oracle)
     assert int(np.argmax(r_q.first_logits)) == \
         int(np.argmax(r_fp.first_logits))
+
+
+def test_quantized_spool_halves_disk_bytes(tmp_path):
+    """The opt-in int8 disk format (``KVLibrary(quantize=True)``) must
+    write at least ~2x fewer spool bytes per entry than the bf16-equivalent
+    fp path (4x vs fp32 minus the fp32 scale rows), and survive a
+    disk→host→link round trip through ``materialize``."""
+    import os
+
+    x = np.random.default_rng(0).standard_normal((4, 64, 8, 32)) \
+        .astype(np.float32)
+
+    def spool_bytes(quantize):
+        d = tmp_path / ("q" if quantize else "fp")
+        lib = KVLibrary(spool_dir=str(d), quantize=quantize,
+                        hbm_capacity=1, host_capacity=1)   # force disk
+        lib.put("u", "m", x, x)
+        files = [os.path.join(d, f) for f in os.listdir(d)]
+        assert len(files) == 1
+        size = os.path.getsize(files[0])
+        e = lib.get("u", "m")                 # disk → host → dequantize
+        amax = np.max(np.abs(x))
+        np.testing.assert_allclose(e.k, x, atol=amax / 100)
+        return size
+
+    fp, q = spool_bytes(False), spool_bytes(True)
+    assert q < fp / 2, f"int8 spool {q}B should halve the fp {fp}B"

@@ -4,7 +4,6 @@ claims (quality ordering, single-step prefill, position independence)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.cache import KVLibrary
 from repro.configs import get_smoke_config

@@ -1,5 +1,4 @@
 """Optimizer, train loop, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp
