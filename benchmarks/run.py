@@ -29,7 +29,7 @@ def main() -> None:
                             fig6_parallel_transfer, fig8_kv_distance,
                             fig9_main_comparison, fig10_sensitivity,
                             fig_decode_paged, fig_prefill_paged,
-                            roofline_table)
+                            fig_sharded_serving, roofline_table)
     suite = {
         "fig3": fig3_prefix_vs_fullreuse.main,
         "fig4": fig4_attention_sparsity.main,
@@ -41,6 +41,7 @@ def main() -> None:
         "ablation_mpic_k": ablation_mpic_k.main,
         "decode_paged": fig_decode_paged.main,
         "prefill_paged": fig_prefill_paged.main,
+        "sharded_serving": fig_sharded_serving.main,
         "roofline": roofline_table.main,
     }
     names = [args.only] if args.only else list(suite)

@@ -12,6 +12,12 @@ linker's ``link_paged`` placement and the engine's MRAG link), and the
 per-layer new-token scatters inside the donated decode/prefill steps
 (``models/transformer.decode_paged`` / ``selective_prefill_paged``).
 Steady-state serving never copies the pool.
+
+Mesh-sharded serving: construct with ``sharding=`` (kv heads on the
+``model`` axis) and the buffers are committed to the mesh at creation
+while every pool-owned write pins the same sharding on its outputs — the
+pool never leaves the mesh, and reads (``gather``) stream only the local
+kv-head slice per shard.
 """
 from __future__ import annotations
 
@@ -36,10 +42,8 @@ class PagedConfig:
     dtype: str = "bfloat16"
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1),
-                   static_argnames=("theta", "relink"))
-def pool_link(pool_k, pool_v, pages, offs, k_seg, v_seg, delta, *,
-              theta: float, relink: bool):
+def _pool_link_impl(pool_k, pool_v, pages, offs, k_seg, v_seg, delta, *,
+                    theta: float, relink: bool):
     """RoPE-relink one placed segment run on device and scatter it into the
     pool — the donated write shared by the engine's MRAG link and the
     linker's ``link_paged`` prefill placement (no dense intermediate)."""
@@ -50,8 +54,7 @@ def pool_link(pool_k, pool_v, pages, offs, k_seg, v_seg, delta, *,
     return pool_k, pool_v
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1))
-def scatter_tokens(pool_k, pool_v, pages, offs, k_new, v_new):
+def _scatter_tokens_impl(pool_k, pool_v, pages, offs, k_new, v_new):
     """Donated scatter of (L, S, H, Dh) tokens into (L, P, ps, H, Dh) pools.
 
     ``pages``/``offs`` are (S,) pool coordinates per token.  Duplicate
@@ -64,15 +67,47 @@ def scatter_tokens(pool_k, pool_v, pages, offs, k_new, v_new):
     return pool_k, pool_v
 
 
+# module-level (unsharded) jits — sharded pools build their own instance
+# jits with pinned out_shardings, so the constraint never leaks into these
+# shared compile caches
+pool_link = functools.partial(jax.jit, donate_argnums=(0, 1),
+                              static_argnames=("theta", "relink"))(
+    _pool_link_impl)
+scatter_tokens = functools.partial(
+    jax.jit, donate_argnums=(0, 1))(_scatter_tokens_impl)
+
+
 class PagedKVPool:
-    def __init__(self, cfg: PagedConfig):
+    def __init__(self, cfg: PagedConfig, *, sharding=None):
+        """``sharding``: optional :class:`jax.sharding.NamedSharding` for
+        the pool buffers (kv heads on the mesh's ``model`` axis — see
+        ``repro.serving.sharding.ServingSharding.pool``).  When set, the
+        buffers are committed to it at construction and every pool-owned
+        donated write pins its outputs to the same sharding, so the pool
+        stays resident and partitioned across devices for the whole
+        serving lifetime."""
         self.cfg = cfg
         dt = {"bfloat16": jnp.bfloat16,
               "float16": jnp.float16}.get(cfg.dtype, jnp.float32)
         shape = (cfg.num_layers, cfg.num_pages, cfg.page_size,
                  cfg.num_kv_heads, cfg.head_dim)
-        self.k = jnp.zeros(shape, dt)
-        self.v = jnp.zeros(shape, dt)
+        self.sharding = sharding
+        # allocate straight into the sharded layout: a sharded pool must
+        # never materialize unsharded on one device first — at production
+        # scale the whole point is that the pool exceeds a single chip's HBM
+        self.k = jnp.zeros(shape, dt, device=sharding)
+        self.v = jnp.zeros(shape, dt, device=sharding)
+        if sharding is not None:
+            out_sh = (sharding, sharding)
+            self._link_jit = jax.jit(
+                _pool_link_impl, donate_argnums=(0, 1),
+                static_argnames=("theta", "relink"), out_shardings=out_sh)
+            self._scatter_jit = jax.jit(
+                _scatter_tokens_impl, donate_argnums=(0, 1),
+                out_shardings=out_sh)
+        else:
+            self._link_jit = pool_link
+            self._scatter_jit = scatter_tokens
         self._free: List[int] = list(range(cfg.num_pages - 1, -1, -1))
         self._owned: Dict[str, List[int]] = {}
 
@@ -115,6 +150,14 @@ class PagedKVPool:
         self._free.extend(self._owned.pop(req_id, []))
 
     # -- data movement -----------------------------------------------------
+    def link_write(self, pages, offs, k_seg, v_seg, delta, *, theta: float,
+                   relink: bool) -> None:
+        """Relink + scatter one placed run through the pool-owned donated
+        jit (sharding-preserving on sharded pools)."""
+        self.k, self.v = self._link_jit(self.k, self.v, pages, offs, k_seg,
+                                        v_seg, delta, theta=theta,
+                                        relink=relink)
+
     def write_tokens(self, page_table: np.ndarray, slot0: int,
                      k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
         """Scatter (L, S, H, Dh) tokens into the pool starting at ``slot0``."""
@@ -123,8 +166,8 @@ class PagedKVPool:
         slots = slot0 + np.arange(s)
         pages = jnp.asarray(np.asarray(page_table)[slots // ps], jnp.int32)
         offs = jnp.asarray(slots % ps, jnp.int32)
-        self.k, self.v = scatter_tokens(self.k, self.v, pages, offs,
-                                        k_new, v_new)
+        self.k, self.v = self._scatter_jit(self.k, self.v, pages, offs,
+                                           k_new, v_new)
 
     def gather(self, page_table: np.ndarray, n_tokens: int):
         """Contiguous (L, n_tokens, H, Dh) view of a request's cache."""

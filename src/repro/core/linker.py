@@ -21,7 +21,6 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.paged import pool_link
 from repro.core.segments import Prompt
 from repro.core.select import selection_indices
 from repro.models.layers import INVALID_POS, rope_relink
@@ -243,9 +242,9 @@ def link_paged(model: Model, prompt: Prompt, library,
         pages[:n_placed] = np.asarray(page_row)[idx // ps]
         offs[:n_placed] = idx % ps
         relink = bool(cfg.rope_theta) and not cfg.learned_pos_emb
-        pool.k, pool.v = pool_link(
-            pool.k, pool.v, jnp.asarray(pages), jnp.asarray(offs),
-            jnp.asarray(k_cat), jnp.asarray(v_cat), jnp.asarray(delta),
+        pool.link_write(
+            jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(k_cat),
+            jnp.asarray(v_cat), jnp.asarray(delta),
             theta=cfg.rope_theta, relink=relink)
 
     sel_tokens, sel_media_embeds, sel_media_mask = selection_arrays(

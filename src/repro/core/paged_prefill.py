@@ -28,6 +28,7 @@ same-bucket prompt lengths do not recompile.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
@@ -48,15 +49,29 @@ class PagedPrefiller:
 
     def __init__(self, model: Model, pool, scratch_page: int, *,
                  backend: str = "ref", interpret: bool = True,
-                 bucket_min: int = 16):
+                 bucket_min: int = 16, sharding=None, param_shardings=None):
+        """``sharding``: optional
+        :class:`repro.serving.sharding.ServingSharding` — the prefill jit
+        then pins the pool in/out to its head-sharded layout,
+        ``param_shardings`` on the params, and replicates the per-request
+        host operands (prefill batch is 1; there is nothing to split on
+        ``data``).  The step is traced under ``sharding.activate()`` so the
+        model's logical ``shard()`` annotations apply."""
         self.model = model
         self.pool = pool
         self.scratch_page = int(scratch_page)
         self.backend = backend
         self.interpret = interpret
         self.bucket_min = int(bucket_min)
+        self.sharding = sharding
         self.traces = 0          # incremented at TRACE time only
-        self._jit = jax.jit(self._step_fn, donate_argnums=(1, 2))
+        jit_kw = {}
+        if sharding is not None:
+            pool_sh, rep = sharding.pool(), sharding.replicated
+            jit_kw = dict(
+                in_shardings=(param_shardings, pool_sh, pool_sh) + (rep,) * 9,
+                out_shardings=(rep, pool_sh, pool_sh))
+        self._jit = jax.jit(self._step_fn, donate_argnums=(1, 2), **jit_kw)
 
     # -- the traced step ---------------------------------------------------
     def _step_fn(self, params, pool_k, pool_v, tokens, positions,
@@ -104,14 +119,17 @@ class PagedPrefiller:
         wo[:n] = link.sel_idx % ps
 
         mp = min(bucket(pool.pages_for(link.total)), len(page_row))
-        out, pool.k, pool.v = self._jit(
-            params, pool.k, pool.v,
-            np.asarray(tokens[None]), np.asarray(positions[None]),
-            np.asarray(emb[None]), np.asarray(mask[None]),
-            np.asarray(page_row[None, :mp]),
-            np.asarray([link.total], np.int32),
-            np.asarray(wp[None]), np.asarray(wo[None]),
-            np.int32(max(n - 1, 0)))
+        ctx = (self.sharding.activate() if self.sharding is not None
+               else contextlib.nullcontext())
+        with ctx:   # logical shard() annotations apply at trace time
+            out, pool.k, pool.v = self._jit(
+                params, pool.k, pool.v,
+                np.asarray(tokens[None]), np.asarray(positions[None]),
+                np.asarray(emb[None]), np.asarray(mask[None]),
+                np.asarray(page_row[None, :mp]),
+                np.asarray([link.total], np.int32),
+                np.asarray(wp[None]), np.asarray(wo[None]),
+                np.int32(max(n - 1, 0)))
         return np.asarray(out, np.float32)
 
     def bind(self, page_row: np.ndarray) -> "BoundPagedPrefill":

@@ -13,15 +13,27 @@ which XLA compiles well on CPU/GPU.  ``auto`` picks pallas on TPU and ref
 everywhere else.  Both are lengths-bounded only up to the page-table width,
 so callers shrink ``page_table.shape[1]`` to the live maximum (the engine
 buckets it to a power of two to bound retraces).
+
+**Mesh-sharded serving**: when a ``repro.launch.pspec`` policy is active at
+trace time and its ``kv_heads`` rule divides the pool's head axis, the
+Pallas backend is wrapped in ``shard_map`` over the tensor-parallel axis —
+paged decode attention is embarrassingly parallel across kv-head shards
+(each shard holds its heads' pages and its queries' head group; the page
+table and lengths are replicated), so the kernel runs per-device with no
+collectives.  The ref backend needs no wrapping: GSPMD partitions the
+gather + einsum along the annotated head axes (see ``ref.py``).
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.paged_attn.paged_attn import paged_attention_pallas
 from repro.kernels.paged_attn.ref import paged_attention_ref
+from repro.launch.pspec import axis_divides, current_policy
 
 
 def resolve_backend(backend: str = "auto") -> str:
@@ -31,6 +43,24 @@ def resolve_backend(backend: str = "auto") -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+def head_shard_axis(hq: int, hkv: int):
+    """Mesh axis the active policy maps heads to, if it evenly divides both
+    the query and kv head counts (GQA group size is preserved per shard);
+    None when unsharded or not divisible (same ``axis_divides`` rule as
+    every other guard)."""
+    pol = current_policy()
+    if pol is None:
+        return None, None
+    mesh, rules = pol
+    ax = rules.get("kv_heads")
+    if (ax is None or rules.get("heads") != ax or isinstance(ax, tuple)
+            or ax not in mesh.axis_names
+            or not axis_divides(mesh, ax, hq)
+            or not axis_divides(mesh, ax, hkv)):
+        return None, None
+    return mesh, ax
+
+
 def paged_attention_call(q, k_pool, v_pool, page_table, lengths, *,
                          window: int = 0, backend: str = "ref",
                          interpret: bool = False):
@@ -38,8 +68,19 @@ def paged_attention_call(q, k_pool, v_pool, page_table, lengths, *,
     if backend == "ref":
         return paged_attention_ref(q, k_pool, v_pool, page_table, lengths,
                                    window=window)
-    return paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
-                                  window=window, interpret=interpret)
+    mesh, ax = head_shard_axis(q.shape[1], k_pool.shape[2])
+    fn = functools.partial(paged_attention_pallas, window=window,
+                           interpret=interpret)
+    if mesh is not None:
+        # per-shard pallas: heads/pages split on the TP axis, table and
+        # lengths replicated; every shard computes its own softmax (heads
+        # never mix), so out_specs need no reduction
+        fn = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(None, ax, None), P(None, None, ax, None),
+                      P(None, None, ax, None), P(None, None), P(None)),
+            out_specs=P(None, ax, None), check_rep=False)
+    return fn(q, k_pool, v_pool, page_table, lengths)
 
 
 @functools.partial(jax.jit,

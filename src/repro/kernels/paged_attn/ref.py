@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.launch.pspec import shard
+
 
 def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
                         window: int = 0):
@@ -18,8 +20,13 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
     max_pages = page_table.shape[1]
     rep = hq // hkv
 
+    # mesh-sharded serving: the gathered K/V stay kv-head-partitioned (the
+    # pool's resident layout), so the page gather and the attention einsums
+    # below run shard-local with no pool all-gather
     k = k_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
     v = v_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
     k = jnp.repeat(k, rep, axis=2)
     v = jnp.repeat(v, rep, axis=2)
 

@@ -12,7 +12,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.kernels.paged_attn.ops import head_shard_axis
 from repro.kernels.selective_attn.ref import (
     selective_attention_paged_ref,
     selective_attention_ref,
@@ -55,9 +58,21 @@ def selective_attention_paged_call(q, k_pool, v_pool, page_table, q_pos,
     # padding query rows: q_pos 0 yields a garbage-but-finite row that the
     # caller slices off (their K/V never reach the pool)
     q_pos_p = _pad_to(q_pos, 1, bq, value=0)
-    out = selective_attention_paged_pallas(
-        qt, k_pool, v_pool, page_table, q_pos_p, lengths, window=window,
-        block_q=bq, interpret=interpret)
+    fn = functools.partial(selective_attention_paged_pallas, window=window,
+                           block_q=bq, interpret=interpret)
+    mesh, ax = head_shard_axis(hq, k_pool.shape[2])
+    if mesh is not None:
+        # mesh-sharded serving: the paged prefill kernel is embarrassingly
+        # parallel across kv-head shards (see paged_attn.ops) — run it
+        # per-device under shard_map instead of asking GSPMD to partition
+        # the pallas call
+        fn = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(None, ax, None, None), P(None, None, ax, None),
+                      P(None, None, ax, None), P(None, None), P(None, None),
+                      P(None)),
+            out_specs=P(None, ax, None, None), check_rep=False)
+    out = fn(qt, k_pool, v_pool, page_table, q_pos_p, lengths)
     return jnp.moveaxis(out[:, :, :sq, :], 1, 2)
 
 

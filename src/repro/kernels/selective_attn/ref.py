@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.launch.pspec import shard
+
 INVALID_POS = jnp.iinfo(jnp.int32).max
 
 
@@ -39,8 +41,12 @@ def selective_attention_paged_ref(q, k_pool, v_pool, page_table, q_pos,
     max_pages = page_table.shape[1]
     rep = hq // hkv
 
+    # mesh-sharded serving: keep the page gather kv-head-partitioned so the
+    # paged prefill attention runs shard-local (no pool all-gather)
     k = k_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
     v = v_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
     k = jnp.moveaxis(jnp.repeat(k, rep, axis=2), 2, 1)   # (B, Hq, Skv, Dh)
     v = jnp.moveaxis(jnp.repeat(v, rep, axis=2), 2, 1)
 

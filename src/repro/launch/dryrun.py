@@ -1,24 +1,28 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run driver.
 
 For every (architecture × input shape) this lowers AND compiles the
 appropriate step function (train / prefill / decode / mpic_prefill) under
 the production mesh — 16×16 single-pod and 2×16×16 multi-pod — proving the
 sharding config is coherent, and extracts memory / cost / collective data
-for the roofline table.
+for the roofline table.  ``--serving-selftest`` AOT-lowers the *serving*
+step (paged decode / paged selective prefill over the sharded KV pool) on
+the 16×16 mesh and asserts kv-heads land on the ``model`` axis — without
+materializing a single array.
 
-The XLA_FLAGS line above MUST precede any jax import (device count locks on
-first init); it lives ONLY here — smoke tests and benches see 1 device.
+``_force_host_devices`` (called from the ``main()`` entry path only) sets
+``XLA_FLAGS`` before the first backend initialization; the module itself is
+safely importable — tests, benches and the serving engine keep seeing the
+real device count.
 
 Usage:
   python -m repro.launch.dryrun --arch yi-9b --shape train_4k
   python -m repro.launch.dryrun --all --out results/dryrun.json
   python -m repro.launch.dryrun --all --multi-pod
+  python -m repro.launch.dryrun --serving-selftest
 """
 import argparse
 import json
+import os
 import time
 import traceback
 
@@ -27,9 +31,35 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.launch import specs as S
-from repro.launch.mesh import activation_rules, make_production_mesh
+from repro.launch.mesh import (
+    activation_rules,
+    make_production_mesh,
+    serving_rules,
+)
 from repro.launch.pspec import use_policy
 from repro.roofline.analysis import Roofline, collective_bytes, model_flops
+
+
+def _force_host_devices(n: int = 512) -> None:
+    """Request ``n`` placeholder host devices for the production meshes.
+
+    MUST run before jax initializes its backend (the count locks on first
+    device query) — so it is called from the ``main()``/selftest entry
+    paths only, never at import time: any test importing this module would
+    otherwise lock the device count for its whole process.
+    """
+    import re
+    cur = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", cur)
+    if m is None:
+        os.environ["XLA_FLAGS"] = (
+            cur + f" --xla_force_host_platform_device_count={n}").strip()
+    elif int(m.group(1)) < n:
+        # a smaller exported count (e.g. the README's 4-device sharded
+        # serving recipe) cannot hold the 16×16 mesh — raise it rather
+        # than failing later with an opaque mesh-shape error
+        os.environ["XLA_FLAGS"] = cur.replace(
+            m.group(0), f"--xla_force_host_platform_device_count={n}")
 
 
 def _lower_compile(cfg, shape, kind, mesh, multi_pod):
@@ -158,6 +188,80 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return out
 
 
+# ---------------------------------------------------------------------------
+# mesh-sharded serving step: AOT lowering + sharding assertions
+# ---------------------------------------------------------------------------
+
+def lower_serving(cfg, kind: str, mesh, *, slots: int = 16,
+                  kv_len: int = 256):
+    """AOT-lower the sharded serving step on ``mesh`` (no arrays).
+
+    Params come from ``jax.eval_shape``; inputs are ShapeDtypeStructs from
+    :func:`repro.launch.specs.serving_input_specs`.  The jit gets explicit
+    *input* shardings only — output shardings are left to GSPMD, so the
+    compiled object proves propagation (the pool must come back kv-head-
+    sharded for the donated engine step to keep it resident).
+    """
+    model, fn = S.make_serving_step_fn(cfg, kind)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    psh = S.to_shardings(S.param_pspecs(params_shapes, mesh, fsdp=False),
+                         mesh)
+    args, in_sh = S.serving_input_specs(cfg, mesh, slots=slots,
+                                        kv_len=kv_len, kind=kind)
+    with use_policy(mesh, serving_rules()):
+        lowered = jax.jit(fn, in_shardings=(psh,) + tuple(in_sh)).lower(
+            params_shapes, *args)
+    return lowered
+
+
+def serving_selftest(*, verbose: bool = True) -> int:
+    """Prove the serving shardings on the abstract 16×16 production mesh.
+
+    Lowers + compiles ``serve_decode`` and ``serve_prefill`` for a tiny
+    TP-divisible config (16 kv heads on the 16-way ``model`` axis) and
+    asserts, from the **compiled** shardings, that the KV pool stays
+    kv-head-partitioned through the step — in and out.  ShapeDtypeStruct
+    end to end: no array is ever materialized.
+    """
+    from repro.configs.base import ModelConfig
+    _force_host_devices()
+    cfg = ModelConfig(name="serve-selftest", arch_type="dense",
+                      num_layers=2, d_model=128, num_heads=16,
+                      num_kv_heads=16, head_dim=8, d_ff=256,
+                      vocab_size=2048, param_dtype="float32",
+                      compute_dtype="float32")
+    mesh = make_production_mesh()
+    assert mesh.devices.shape == (16, 16)
+
+    def pool_axis(sharding):
+        # kv heads live on dim 3 of (L, P, ps, Hkv, Dh)
+        return getattr(sharding, "spec", P())[3] if len(
+            getattr(sharding, "spec", P())) > 3 else None
+
+    for kind in ("serve_decode", "serve_prefill"):
+        t0 = time.time()
+        compiled = lower_serving(cfg, kind, mesh).compile()
+        in_sh = jax.tree_util.tree_leaves(
+            compiled.input_shardings[0],
+            is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        out_sh = compiled.output_shardings
+        # outputs: (logits, pool_k, pool_v) — GSPMD must keep the pool
+        # partitioned on 'model' (nothing pinned the outputs)
+        for pool_out in out_sh[1:]:
+            assert pool_axis(pool_out) == "model", (
+                f"{kind}: pool left the step with sharding "
+                f"{getattr(pool_out, 'spec', pool_out)} — kv heads must "
+                f"stay on the 'model' axis")
+        n_model = sum(1 for s in in_sh
+                      if "model" in str(getattr(s, "spec", "")))
+        if verbose:
+            print(f"[{kind}] 16x16 mesh: pool kv-heads on 'model' in+out, "
+                  f"{n_model} model-sharded param leaves, "
+                  f"compile={time.time() - t0:.1f}s", flush=True)
+    print("serving selftest OK")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -168,7 +272,14 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--serving-selftest", action="store_true",
+                    help="AOT-lower the sharded serving step on the 16x16 "
+                         "mesh and assert the pool shardings (no arrays)")
     args = ap.parse_args()
+
+    if args.serving_selftest:
+        return serving_selftest()
+    _force_host_devices()
 
     results = []
     if args.out and os.path.exists(args.out):

@@ -19,6 +19,26 @@ def batch_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
+def make_serving_mesh(*, data: int = 1, model: int = 0):
+    """Mesh for the mesh-sharded serving engine.
+
+    Defaults to all visible devices on the ``model`` (tensor-parallel) axis
+    — decode batches are small, so TP is the serving-side win (head-sharded
+    KV pool + attention).  ``data`` carves out a replica axis for the
+    decode-slot batch.
+    """
+    n = len(jax.devices())
+    model = model or max(n // max(data, 1), 1)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def serving_rules() -> dict:
+    """Logical-axis rules for the serving path: heads / kv-heads / mlp /
+    vocab tensor-parallel on ``model``, batch-of-slots on ``data``, no
+    sequence sharding (decode reads one token per slot)."""
+    return activation_rules()
+
+
 def activation_rules(*, multi_pod: bool = False, shard_kv_seq: bool = False,
                      seq_parallel: bool = False) -> dict:
     """Logical-name -> mesh-axis rules for `repro.launch.pspec.shard`.

@@ -44,6 +44,20 @@ def resolve(*logical_axes) -> P:
     return P(*(rules.get(a) if a is not None else None for a in logical_axes))
 
 
+def axis_divides(mesh, axes, dim: int) -> bool:
+    """True iff ``dim`` is divisible by the product of the named mesh axes
+    (``axes``: one name or a tuple).  THE divisibility rule — every guard
+    that decides sharded-vs-replicated (``shard`` below, ``specs._guard``,
+    ``ServingSharding.axis``, the kernels' ``head_shard_axis``) goes
+    through here so the decisions cannot drift apart."""
+    names = axes if isinstance(axes, tuple) else (axes,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for n in names:
+        total *= sizes[n]
+    return dim % total == 0
+
+
 def shard(x, *logical_axes):
     pol = current_policy()
     if pol is None:
@@ -52,14 +66,7 @@ def shard(x, *logical_axes):
     spec = [rules.get(a) if a is not None else None for a in logical_axes]
     # drop mappings that do not divide the dimension (e.g. 4 kv heads on a
     # 16-way model axis) — XLA requires even divisibility
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     for i, s in enumerate(spec):
-        if s is None:
-            continue
-        names = s if isinstance(s, tuple) else (s,)
-        total = 1
-        for n in names:
-            total *= axis_sizes[n]
-        if x.shape[i] % total != 0:
+        if s is not None and not axis_divides(mesh, s, x.shape[i]):
             spec[i] = None
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -4,6 +4,14 @@ Boots an MPIC engine for the chosen architecture (reduced config on CPU),
 feeds it a synthetic multimodal request stream, and prints the TTFT /
 throughput report.  The production-mesh variant of the same step functions
 is what launch/dryrun.py lowers.
+
+Every engine knob is drivable from the CLI: ``--no-paged`` /
+``--no-pipelined`` select the dense / sequential baselines,
+``--prefill-chunk`` chunks long prompts across steps, and ``--mesh DxM``
+(e.g. ``--mesh 1x4``, or ``--mesh auto`` for all visible devices on the
+tensor-parallel axis) runs the mesh-sharded serving path — pair it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to try it on a
+CPU-only box.
 """
 from __future__ import annotations
 
@@ -17,6 +25,17 @@ from repro.models import build_model
 from repro.serving import EngineConfig, MPICEngine, Request
 
 
+def parse_mesh(spec: str):
+    """'none' -> None; 'auto' -> all devices on model; 'DxM' -> that mesh."""
+    from repro.launch.mesh import make_serving_mesh
+    if spec in ("none", ""):
+        return None
+    if spec == "auto":
+        return make_serving_mesh()
+    data, model = (int(x) for x in spec.lower().split("x"))
+    return make_serving_mesh(data=data, model=model)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llava-1.6-7b")
@@ -27,13 +46,33 @@ def main():
     ap.add_argument("--mpic-k", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq-len", type=int, default=512)
+    ap.add_argument("--paged", dest="paged", action="store_true",
+                    default=True, help="pool-backed decode path (default)")
+    ap.add_argument("--no-paged", dest="paged", action="store_false",
+                    help="dense batch-cache baseline")
+    ap.add_argument("--pipelined", dest="pipelined", action="store_true",
+                    default=True, help="pipelined admission (default)")
+    ap.add_argument("--no-pipelined", dest="pipelined",
+                    action="store_false",
+                    help="sequential admission baseline")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help=">0: chunk long prefills across engine steps")
+    ap.add_argument("--mesh", default="none",
+                    help="'none' (default), 'auto', or 'DxM' data×model "
+                         "mesh for tensor-parallel serving (e.g. 1x4)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = MPICEngine(model, params,
-                     EngineConfig(max_seq_len=512, decode_slots=args.slots))
+    mesh = parse_mesh(args.mesh)
+    eng = MPICEngine(
+        model, params,
+        EngineConfig(max_seq_len=args.max_seq_len, decode_slots=args.slots,
+                     paged=args.paged, pipelined=args.pipelined,
+                     prefill_chunk_tokens=args.prefill_chunk),
+        mesh=mesh)
 
     dialogues = make_dialogues(n=args.requests, n_images=2,
                                d_model=cfg.d_model, media_len=24,
@@ -51,7 +90,10 @@ def main():
                            max_new_tokens=args.max_new_tokens,
                            policy=args.policy, policy_kwargs=kw))
     done = eng.run()
-    print(f"\narch={cfg.name} policy={args.policy}")
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape) if mesh \
+        else "unsharded"
+    print(f"\narch={cfg.name} policy={args.policy} paged={args.paged} "
+          f"pipelined={args.pipelined} mesh={mesh_desc}")
     for r in done:
         print(f"  {r.req_id}: ttft={r.ttft * 1e3:7.0f} ms  "
               f"reused={r.prefill_stats.get('n_reused', 0):4d}  "

@@ -15,6 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch.mesh import batch_axes
+from repro.launch.pspec import axis_divides
 from repro.models.layers import _dtype
 from repro.models.model import build_model
 from repro.training.optimizer import AdamW
@@ -87,18 +88,8 @@ def _path_str(path) -> str:
 
 def _guard(spec: P, shape, mesh) -> P:
     """Drop mesh axes that do not evenly divide the dim (e.g. 49155 vocab)."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    out = []
-    for i, s in enumerate(spec):
-        if s is None:
-            out.append(None)
-            continue
-        names = s if isinstance(s, tuple) else (s,)
-        total = 1
-        for n in names:
-            total *= sizes[n]
-        out.append(s if shape[i] % total == 0 else None)
-    return P(*out)
+    return P(*(s if s is not None and axis_divides(mesh, s, shape[i])
+               else None for i, s in enumerate(spec)))
 
 
 def param_pspecs(param_shapes, mesh, *, fsdp: bool = False,
@@ -316,6 +307,98 @@ def _cache_specs(cfg, mesh, batch, kv_len, batch_spec, kv_seq_spec):
         add("cross_v", (L, batch, cfg.encoder_seq, cfg.num_kv_heads,
                         cfg.head_dim), cd)
     return cache, sh
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded serving step (paged decode / paged selective prefill)
+# ---------------------------------------------------------------------------
+
+SERVE_PAGE_SIZE = 16
+
+
+def make_serving_step_fn(cfg: ModelConfig, kind: str):
+    """The serving engine's donated step as a pure fn for AOT lowering.
+
+    ``serve_decode`` is ``MPICEngine._paged_decode_fn`` (one token for every
+    decode slot against the shared page pool); ``serve_prefill`` is the
+    :class:`~repro.core.paged_prefill.PagedPrefiller` step.  Both take the
+    pool buffers first so callers can donate/shard them; both use the
+    ``ref`` kernel backend, whose gathers/einsums GSPMD partitions along
+    the annotated head axes (the pallas backend is dispatched per-shard via
+    shard_map at run time instead — see ``kernels/paged_attn/ops``).
+    Returns ``(model, fn)``.
+    """
+    model = build_model(cfg)
+    from repro.models import transformer as tf
+
+    if kind == "serve_decode":
+        def fn(params, pool_k, pool_v, token, position, page_table,
+               lengths, write_pages, write_offs):
+            x = model.embed(params, token, positions=position)
+            return tf.decode_paged(
+                params, cfg, x, position, pool_k, pool_v, page_table,
+                lengths, write_pages, write_offs, backend="ref")
+        return model, fn
+
+    if kind == "serve_prefill":
+        def fn(params, pool_k, pool_v, sel_tokens, sel_pos, page_table,
+               lengths, write_pages, write_offs):
+            x = model.embed(params, sel_tokens, positions=sel_pos)
+            return tf.selective_prefill_paged(
+                params, cfg, x, sel_pos, pool_k, pool_v, page_table,
+                lengths, write_pages, write_offs, backend="ref")
+        return model, fn
+
+    raise ValueError(kind)
+
+
+def serving_input_specs(cfg: ModelConfig, mesh, *, slots: int, kv_len: int,
+                        kind: str, page_size: int = SERVE_PAGE_SIZE,
+                        sel_frac: float = 0.125):
+    """ShapeDtypeStructs + NamedShardings for the serving step inputs.
+
+    The shardings come from the engine's own plan
+    (``serving/sharding.ServingSharding`` — imported locally to avoid the
+    launch↔serving module cycle), so the dry-run proves the layout the
+    engine actually serves with: a pool-spec change there changes what the
+    16×16 selftest asserts.  Nothing here allocates device memory.
+    """
+    from repro.serving.sharding import ServingSharding
+    sh = ServingSharding(mesh, cfg)
+    cd = _dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    pages_per_slot = -(-kv_len // page_size)
+    num_pages = slots * pages_per_slot + 1          # + scratch page
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    pool = sds((cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+                cfg.head_dim), cd)
+    pool_sh = sh.pool()
+    table = sds((slots, pages_per_slot), i32)
+    vec = sds((slots,), i32)
+
+    if kind == "serve_decode":
+        tok = sds((slots, 1), i32)
+        b2, b1 = sh.batched(slots, 2), sh.batched(slots, 1)
+        args = (pool, pool, tok, tok, table, vec, vec, vec)
+        shardings = (pool_sh, pool_sh, b2, b2, b2, b1, b1, b1)
+        return args, shardings
+
+    if kind == "serve_prefill":
+        # one admission: batch 1 (replicated), selection padded to its
+        # power-of-two bucket like core/paged_prefill
+        s_sel = max(int(kv_len * sel_frac), 1)
+        sel = sds((1, s_sel), i32)
+        wps = sds((1, s_sel), i32)
+        args = (pool, pool, sel, sel, sds((1, pages_per_slot), i32),
+                sds((1,), i32), wps, wps)
+        rep2, rep1 = sh.batched(1, 2), sh.batched(1, 1)
+        shardings = (pool_sh, pool_sh, rep2, rep2, rep2, rep1, rep2, rep2)
+        return args, shardings
+
+    raise ValueError(kind)
 
 
 # ---------------------------------------------------------------------------

@@ -386,8 +386,16 @@ def decode_paged(params: dict, cfg, embeds: jnp.ndarray,
         lp, pk, pv = xs
         h = rmsnorm(lp["attn_norm"], xc, cfg.rms_norm_eps)
         q, k_new, v_new = attention_qkv(lp["attn"], cfg, h, positions)
+        # mesh-sharded serving: new-token K/V and the pool pages stay
+        # kv-head-partitioned, so the write and the attention below are
+        # shard-local (pspec identity when no policy is active)
+        q = shard(q, "batch", "seq", "heads", None)
+        k_new = shard(k_new, "batch", "seq", "kv_heads", None)
+        v_new = shard(v_new, "batch", "seq", "kv_heads", None)
         pk = pk.at[write_pages, write_offs].set(k_new[:, 0].astype(pk.dtype))
         pv = pv.at[write_pages, write_offs].set(v_new[:, 0].astype(pv.dtype))
+        pk = shard(pk, None, None, "kv_heads", None)
+        pv = shard(pv, None, None, "kv_heads", None)
         o = paged_attention_call(q[:, 0], pk, pv, page_table, lengths,
                                  window=cfg.sliding_window,
                                  backend=backend, interpret=interpret)
@@ -440,8 +448,13 @@ def selective_prefill_paged(params: dict, cfg, embeds: jnp.ndarray,
         lp, pk, pv = xs
         h = rmsnorm(lp["attn_norm"], xc, cfg.rms_norm_eps)
         q, k_new, v_new = attention_qkv(lp["attn"], cfg, h, sel_positions)
+        q = shard(q, "batch", "seq", "heads", None)
+        k_new = shard(k_new, "batch", "seq", "kv_heads", None)
+        v_new = shard(v_new, "batch", "seq", "kv_heads", None)
         pk = pk.at[write_pages, write_offs].set(k_new.astype(pk.dtype))
         pv = pv.at[write_pages, write_offs].set(v_new.astype(pv.dtype))
+        pk = shard(pk, None, None, "kv_heads", None)
+        pv = shard(pv, None, None, "kv_heads", None)
         o = selective_attention_paged_call(
             q, pk, pv, page_table, sel_positions, lengths,
             window=cfg.sliding_window, backend=backend, interpret=interpret)

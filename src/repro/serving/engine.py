@@ -41,9 +41,22 @@ power-of-two bucket, the page table to the live page bucket, so
 varying-length traffic reuses a warm compile cache with zero host
 round-trips between link and first token.  Other policies (and chunked
 prefills) keep the dense per-request cache + splice fallback.
+
+**Mesh-sharded serving** (``MPICEngine(..., mesh=...)``): the engine serves
+tensor-parallel across a ``data × model`` mesh.  Params get MaxText-style
+TP shardings (``launch/specs.param_pspecs``), the KV pool is head-sharded
+on ``model`` (``serving/sharding.ServingSharding``), every donated jit
+carries explicit in/out shardings so GSPMD keeps the pool resident and
+partitioned for the engine's lifetime, and each step runs under the
+``launch/pspec`` logical-axis policy so the model's ``shard()``
+annotations (heads / kv_heads on ``model``, batch-of-slots on ``data``)
+and the Pallas kernels' shard_map dispatch activate.  The same code path
+runs unsharded when no mesh is given — every mapping is
+divisibility-guarded per axis.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -54,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.library import KVLibrary
-from repro.cache.paged import PagedConfig, PagedKVPool, pool_link
+from repro.cache.paged import PagedConfig, PagedKVPool
 from repro.cache.transfer import ParallelLoader, PrefetchHandle
 from repro.core.linker import bucket, precompute_media_kv
 from repro.core.paged_prefill import PagedPrefiller
@@ -69,6 +82,7 @@ from repro.serving.scheduler import (
     ChunkedPrefillTask,
     PipelinedScheduler,
 )
+from repro.serving.sharding import ServingSharding
 
 
 @dataclasses.dataclass
@@ -96,10 +110,12 @@ class EngineConfig:
 
 # -- jit'd, donated cache-mutation helpers ----------------------------------
 # Each is ONE device call that updates the (donated) cache/pool in place —
-# replacing the seed's per-key host-side splice loops.
+# replacing the seed's per-key host-side splice loops.  The impls are
+# module-level; unsharded engines share the module-level jits below, while
+# a mesh-sharded engine compiles its own instances with the batch-cache
+# shardings pinned on the outputs (see MPICEngine.__init__).
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _dense_splice(bc: dict, rc: dict, slot) -> dict:
+def _dense_splice_impl(bc: dict, rc: dict, slot) -> dict:
     """Splice a per-request cache ``rc`` into batch cache ``bc`` at ``slot``
     (a traced scalar: one compilation covers every slot)."""
     out = dict(bc)
@@ -112,10 +128,8 @@ def _dense_splice(bc: dict, rc: dict, slot) -> dict:
     return out
 
 
-@functools.partial(jax.jit, donate_argnums=(0,),
-                   static_argnames=("theta", "relink"))
-def _dense_link(bc: dict, k_seg, v_seg, off, slot, *, theta: float,
-                relink: bool) -> dict:
+def _dense_link_impl(bc: dict, k_seg, v_seg, off, slot, *, theta: float,
+                     relink: bool) -> dict:
     """Link one MRAG segment at position ``off`` into ``bc`` at ``slot``."""
     length = k_seg.shape[1]
     idx = off + jnp.arange(length, dtype=jnp.int32)
@@ -128,13 +142,36 @@ def _dense_link(bc: dict, k_seg, v_seg, off, slot, *, theta: float,
     return out
 
 
+_dense_splice = functools.partial(jax.jit, donate_argnums=(0,))(
+    _dense_splice_impl)
+_dense_link = functools.partial(jax.jit, donate_argnums=(0,),
+                                static_argnames=("theta", "relink"))(
+    _dense_link_impl)
+
+
 class MPICEngine:
     def __init__(self, model: Model, params, engine_cfg: EngineConfig = None,
                  *, static_library: Optional[KVLibrary] = None,
-                 dynamic_library: Optional[KVLibrary] = None):
+                 dynamic_library: Optional[KVLibrary] = None,
+                 mesh=None, shard_rules: Optional[dict] = None):
+        """``mesh``: optional :class:`jax.sharding.Mesh` (axes ``data`` ×
+        ``model``, e.g. ``repro.launch.mesh.make_serving_mesh``) — the
+        engine then serves tensor-parallel: params are committed to
+        MaxText-style TP shardings, the KV pool is head-sharded on the
+        ``model`` axis, and every donated jit (decode, paged prefill,
+        splice, link) carries explicit in/out shardings so GSPMD keeps the
+        pool resident and partitioned.  ``shard_rules`` overrides the
+        logical-axis rules (default ``repro.launch.mesh.serving_rules``)."""
         self.model = model
-        self.params = params
         self.cfg = engine_cfg or EngineConfig()
+        self.sharding = None
+        self._param_sh = None
+        if mesh is not None:
+            self.sharding = ServingSharding(mesh, model.cfg,
+                                            rules=shard_rules)
+            self._param_sh = self.sharding.params(params)
+            params = jax.device_put(params, self._param_sh)
+        self.params = params
         self.static_lib = static_library or KVLibrary()
         self.dynamic_lib = dynamic_library or KVLibrary(shared=True)
         self.retriever = Retriever()
@@ -158,10 +195,12 @@ class MPICEngine:
             self._pages_per_slot = -(-self.cfg.max_seq_len // ps)
             num_pages = self.cfg.num_pages or (
                 self.cfg.decode_slots * self._pages_per_slot + 1)
+            pool_sh = self.sharding.pool() if self.sharding else None
             self.pool = PagedKVPool(PagedConfig(
                 num_pages=num_pages, page_size=ps,
                 num_layers=mcfg.num_layers, num_kv_heads=mcfg.num_kv_heads,
-                head_dim=mcfg.head_dim, dtype=mcfg.compute_dtype))
+                head_dim=mcfg.head_dim, dtype=mcfg.compute_dtype),
+                sharding=pool_sh)
             # scratch page: absorbs padding writes (splice tails, idle
             # slots) so real pages are never aliased
             self._scratch_page = int(self.pool.alloc("__scratch__", 1)[0])
@@ -171,8 +210,21 @@ class MPICEngine:
             self._paged_backend = resolve_backend(self.cfg.paged_backend)
             self._batch_cache = None
             donate = (1, 2) if self.cfg.donate_decode else ()
+            jit_kw = {}
+            if self.sharding:
+                # explicit in/out shardings: the pool enters AND leaves the
+                # step head-sharded (donation keeps it in place), host-built
+                # operands go batch-on-data or replicated, logits come back
+                # replicated over vocab for the host-side sampler
+                B = self.cfg.decode_slots
+                tok = self.sharding.batched(B, 2)
+                vec = self.sharding.batched(B, 1)
+                jit_kw = dict(
+                    in_shardings=(self._param_sh, pool_sh, pool_sh,
+                                  tok, tok, tok, vec, vec, vec),
+                    out_shardings=(tok, pool_sh, pool_sh))
             self._decode_jit = jax.jit(self._paged_decode_fn,
-                                       donate_argnums=donate)
+                                       donate_argnums=donate, **jit_kw)
             # paged prefill: mpic/cacheblend link + selective-prefill
             # straight into pool pages through one bucketed, donated jit
             self._prefiller = None
@@ -181,13 +233,38 @@ class MPICEngine:
                     model, self.pool, self._scratch_page,
                     backend=self._paged_backend,
                     interpret=jax.default_backend() != "tpu",
-                    bucket_min=self.cfg.prefill_bucket_min)
+                    bucket_min=self.cfg.prefill_bucket_min,
+                    sharding=self.sharding, param_shardings=self._param_sh)
+            self._splice_jit = self._link_jit = None
         else:
             self.pool = None
             self._prefiller = None
             self._batch_cache = model.make_cache(self.cfg.decode_slots,
                                                  self.cfg.max_seq_len)
-            self._decode_jit = jax.jit(self._decode_step_fn)
+            if self.sharding:
+                cache_sh = self.sharding.dense_cache(self.cfg.decode_slots,
+                                                     self._batch_cache)
+                self._batch_cache = jax.device_put(self._batch_cache,
+                                                   cache_sh)
+                tok = self.sharding.batched(self.cfg.decode_slots, 2)
+                self._decode_jit = jax.jit(
+                    self._decode_step_fn,
+                    in_shardings=(self._param_sh, cache_sh, tok, tok),
+                    out_shardings=(tok, cache_sh))
+                # per-engine dense splice/link with the cache sharding
+                # pinned on the outputs (the module-level jits stay
+                # unsharded — compile caches must not mix constraints)
+                self._splice_jit = jax.jit(
+                    _dense_splice_impl, donate_argnums=(0,),
+                    out_shardings=cache_sh)
+                self._link_jit = jax.jit(
+                    _dense_link_impl, donate_argnums=(0,),
+                    static_argnames=("theta", "relink"),
+                    out_shardings=cache_sh)
+            else:
+                self._decode_jit = jax.jit(self._decode_step_fn)
+                self._splice_jit = _dense_splice
+                self._link_jit = _dense_link
 
     @property
     def waiting(self):
@@ -228,10 +305,19 @@ class MPICEngine:
     # ------------------------------------------------------------------
     # engine step: advance chunked prefills, admit, decode running slots
     # ------------------------------------------------------------------
+    def _shard_ctx(self):
+        """Logical-axis policy for the mesh-sharded engine: every jit traced
+        inside a step (decode, paged prefill, policies' dense fallbacks)
+        sees the mesh rules, so the model's ``shard()`` annotations and the
+        kernels' shard_map dispatch activate.  Identity without a mesh."""
+        return (self.sharding.activate() if self.sharding
+                else contextlib.nullcontext())
+
     def step(self) -> None:
-        self._advance_prefills()
-        self._admit()
-        self._decode()
+        with self._shard_ctx():
+            self._advance_prefills()
+            self._admit()
+            self._decode()
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         steps = 0
@@ -398,7 +484,7 @@ class MPICEngine:
         elif self._use_paged:
             self._splice_paged(req.slot, result.cache, req.cur_len + 1)
         else:
-            self._batch_cache = _dense_splice(
+            self._batch_cache = self._splice_jit(
                 self._batch_cache, result.cache,
                 jnp.asarray(req.slot, jnp.int32))
 
@@ -447,15 +533,14 @@ class MPICEngine:
                 self._set_page_row(req.slot, pages)
                 ps = self.cfg.page_size
                 t = off + np.arange(length)
-                self.pool.k, self.pool.v = pool_link(
-                    self.pool.k, self.pool.v,
+                self.pool.link_write(
                     jnp.asarray(self._page_tables[req.slot][t // ps]),
                     jnp.asarray((t % ps).astype(np.int32)),
                     jnp.asarray(entry.k), jnp.asarray(entry.v),
                     jnp.full((length,), off, jnp.int32),
                     theta=cfg.rope_theta, relink=relink)
             else:
-                self._batch_cache = _dense_link(
+                self._batch_cache = self._link_jit(
                     self._batch_cache, jnp.asarray(entry.k),
                     jnp.asarray(entry.v), jnp.asarray(off, jnp.int32),
                     jnp.asarray(req.slot, jnp.int32),
