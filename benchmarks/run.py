@@ -28,8 +28,9 @@ def main() -> None:
                             fig4_attention_sparsity, fig6_overlap_serving,
                             fig6_parallel_transfer, fig8_kv_distance,
                             fig9_main_comparison, fig10_sensitivity,
-                            fig_decode_paged, fig_prefill_paged,
-                            fig_sharded_serving, roofline_table)
+                            fig_cluster_throughput, fig_decode_paged,
+                            fig_prefill_paged, fig_sharded_serving,
+                            roofline_table)
     suite = {
         "fig3": fig3_prefix_vs_fullreuse.main,
         "fig4": fig4_attention_sparsity.main,
@@ -41,6 +42,7 @@ def main() -> None:
         "ablation_mpic_k": ablation_mpic_k.main,
         "decode_paged": fig_decode_paged.main,
         "prefill_paged": fig_prefill_paged.main,
+        "cluster_throughput": fig_cluster_throughput.main,
         "sharded_serving": fig_sharded_serving.main,
         "roofline": roofline_table.main,
     }

@@ -8,6 +8,27 @@ Entries live on a tier: HBM (device arrays) → HOST (numpy) → DISK
 (npz in a spool dir).  A single image KV can reach ~1 GB at
 LLaVA scale (paper §4.1), so HBM capacity is tight and entries demote under
 pressure; expired entries are deleted (the Fig. 6 "m misses" path).
+
+**Multi-replica serving** (``serving/cluster.py``): one library is shared by
+N engine replicas.  Two seams make that safe and useful:
+
+  * **Per-replica HBM accounting** — the HBM tier models *device* residency,
+    and each replica is its own device.  A ``get(..., replica=r)`` marks the
+    entry HBM-warm *on replica r* (``Entry.hbm_replicas``), each replica's
+    holdings are LRU-rebalanced against ``hbm_capacity`` independently, and
+    demoting replica A's copy never evicts replica B's hot set.  The
+    cache-affinity router reads this map (``warmth``/``peek_tier`` with
+    ``replica=``) to route requests where their media KV is already warm.
+    With ``replica=None`` everywhere (single engine) the behavior is exactly
+    the legacy single-device accounting.
+  * **Pinning** — ``_rebalance`` used to be able to spool an entry to disk
+    (nulling ``k``/``v``) *between* a concurrent reader receiving it from
+    ``get`` and consuming its arrays at link time.  Entries handed out by
+    the serving path are now pinned (``get(pin=True)``/``try_pin``/
+    ``unpin``, held by
+    ``PrefetchHandle`` until the engine finalizes the prefill) and
+    ``_spool`` skips pinned entries the same way it skips mid-materialize
+    ones.
 """
 from __future__ import annotations
 
@@ -47,6 +68,13 @@ class Entry:
     # real field: a disk-tier entry that never went through ``_spool`` (e.g.
     # constructed directly, or a crash-recovered spool file) still has nbytes.
     _nbytes: int = 0
+    # replica id -> last_used on that replica: which engine replicas hold
+    # this entry HBM-resident (cluster serving; empty on a single engine)
+    hbm_replicas: Dict = dataclasses.field(default_factory=dict)
+    # pin count: >0 means a consumer received this entry from ``get`` and is
+    # still reading its arrays — ``_spool`` must not null them (guarded by
+    # the library lock)
+    _pins: int = 0
     # serializes concurrent ``materialize`` calls from ParallelLoader workers
     _mlock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
@@ -64,24 +92,28 @@ class Entry:
 
     def materialize(self) -> "Entry":
         with self._mlock:
-            if self.tier == TIER_DISK and self.k is None and self.qk is None:
-                with np.load(self.path) as z:
-                    if "qk" in z:
-                        self.qk = QuantizedKV(z["qk"], z["qk_scale"])
-                        self.qv = QuantizedKV(z["qv"], z["qv_scale"])
-                    else:
-                        self.k, self.v = z["k"], z["v"]
-                # the KV now lives in host memory: flip the tier so capacity
-                # accounting sees the resident bytes and _rebalance can
-                # demote it again under pressure (the spool file is
-                # rewritten then) — otherwise every accessed disk entry
-                # would stay resident forever, invisible to the caps
-                self.tier = TIER_HOST
-            if self.qk is not None and self.k is None:
-                # dequantize at link time (int8 storage, fp compute)
-                self.k = dequantize_kv(self.qk)
-                self.v = dequantize_kv(self.qv)
+            self._materialize_locked()
         return self
+
+    def _materialize_locked(self) -> None:
+        """Body of :meth:`materialize`; caller holds ``_mlock``."""
+        if self.tier == TIER_DISK and self.k is None and self.qk is None:
+            with np.load(self.path) as z:
+                if "qk" in z:
+                    self.qk = QuantizedKV(z["qk"], z["qk_scale"])
+                    self.qv = QuantizedKV(z["qv"], z["qv_scale"])
+                else:
+                    self.k, self.v = z["k"], z["v"]
+            # the KV now lives in host memory: flip the tier so capacity
+            # accounting sees the resident bytes and _rebalance can
+            # demote it again under pressure (the spool file is
+            # rewritten then) — otherwise every accessed disk entry
+            # would stay resident forever, invisible to the caps
+            self.tier = TIER_HOST
+        if self.qk is not None and self.k is None:
+            # dequantize at link time (int8 storage, fp compute)
+            self.k = dequantize_kv(self.qk)
+            self.v = dequantize_kv(self.qv)
 
 
 class KVLibrary:
@@ -118,16 +150,28 @@ class KVLibrary:
             e.qk, e.qv = quantize_kv(e.k), quantize_kv(e.v)
             e.k = e.v = None
         with self._lock:
-            self._entries[self._key(user_id, media_id)] = e
+            key = self._key(user_id, media_id)
+            # a put over an existing key must evict the old entry, or its
+            # spool file is orphaned on disk forever
+            if key in self._entries:
+                self._evict(key)
+            self._entries[key] = e
             self._rebalance()
         return e
 
-    def get(self, user_id: str, media_id: str) -> Optional[Entry]:
+    def get(self, user_id: str, media_id: str, *, replica=None,
+            pin: bool = False) -> Optional[Entry]:
         """Lookup honouring user scoping and expiry (step ③).
 
         The library lock covers only the lookup; the (potentially slow) disk
         read in ``materialize`` runs outside it so ParallelLoader workers can
         fetch different entries concurrently (per-entry lock inside).
+
+        ``replica``: cluster serving — mark the entry HBM-warm on that
+        engine replica (per-replica accounting, see module docstring).
+        ``pin``: bump the entry's pin count so ``_rebalance`` cannot spool
+        its arrays out from under the caller; the caller (normally a
+        :class:`~repro.cache.transfer.PrefetchHandle`) must ``unpin``.
         """
         with self._lock:
             e = self._entries.get(self._key(user_id, media_id))
@@ -140,6 +184,34 @@ class KVLibrary:
         was_disk = e.tier == TIER_DISK
         try:
             e.materialize()
+            if was_disk or replica is not None or pin:
+                # the promotion made KV resident: enforce the caps now, or
+                # a get-only serving phase would grow host memory
+                # unboundedly.  Holding e._mlock makes the non-blocking
+                # _spool skip the entry we are about to hand out (no one
+                # blocks on _mlock while holding _lock, so this ordering
+                # cannot deadlock).
+                with e._mlock:
+                    # a rebalance may have spooled the entry in the gap
+                    # after materialize released _mlock — reload before
+                    # pinning/marking, or we would hand out nulled arrays
+                    e._materialize_locked()
+                    with self._lock:
+                        if pin:
+                            e._pins += 1
+                        changed = was_disk
+                        if replica is not None:
+                            # the link step copies this KV to replica's
+                            # device: it is now HBM-warm there (and only
+                            # there)
+                            changed |= (replica not in e.hbm_replicas
+                                        or e.tier != TIER_HBM)
+                            e.hbm_replicas[replica] = time.time()
+                            e.tier = TIER_HBM
+                        # pinning alone moves no bytes — only re-scan the
+                        # library when residency/accounting actually changed
+                        if changed:
+                            self._rebalance()
         except FileNotFoundError:
             # spool file gone: either a concurrent _evict won the race, or
             # something external (tmp reaper) deleted it.  Drop the zombie
@@ -150,20 +222,69 @@ class KVLibrary:
                 if self._entries.get(key) is e:
                     self._entries.pop(key)
             return None
-        if was_disk:
-            # the promotion made KV resident: enforce the caps now, or a
-            # get-only serving phase would grow host memory unboundedly.
-            # Holding e._mlock makes the non-blocking _spool skip the entry
-            # we are about to hand out (no one blocks on _mlock while
-            # holding _lock, so this ordering cannot deadlock).
-            with e._mlock:
-                with self._lock:
-                    self._rebalance()
         return e
 
-    def peek_tier(self, user_id: str, media_id: str) -> Optional[str]:
-        e = self._entries.get(self._key(user_id, media_id))
-        return None if e is None or time.time() > e.expires else e.tier
+    # -- cluster seams (per-replica warmth, pinning) --------------------------
+    def touch(self, user_id: str, media_id: str, replica) -> None:
+        """Mark an entry HBM-warm on ``replica`` without a full ``get`` —
+        used when a deduplicated loader fetch issued by one replica is
+        consumed (linked) by another."""
+        with self._lock:
+            e = self._entries.get(self._key(user_id, media_id))
+            if e is None or time.time() > e.expires:
+                return
+            if e.k is None and e.qk is None:
+                return      # spooled since the gather: HBM claim would lie
+            e.last_used = time.time()
+            fresh = replica not in e.hbm_replicas or e.tier != TIER_HBM
+            e.hbm_replicas[replica] = e.last_used
+            e.tier = TIER_HBM
+            if fresh:       # already-warm touches move no accounting
+                self._rebalance()
+
+    def try_pin(self, entry: Entry) -> bool:
+        """Pin ``entry`` if its arrays are still resident; False if a
+        rebalance spooled it since it was handed out (caller must then
+        re-``get(pin=True)``, which re-materializes and pins atomically).
+        ``_spool`` checks pins under the same lock, so a successful pin
+        guarantees the arrays stay."""
+        with self._lock:
+            if entry.k is None and entry.qk is None:
+                return False
+            entry._pins += 1
+            return True
+
+    def unpin(self, entry: Entry) -> None:
+        with self._lock:
+            entry._pins = max(0, entry._pins - 1)
+            if entry._pins == 0:
+                self._rebalance()   # deferred demotions can proceed now
+
+    def warmth(self, user_id: str, media_ids, replica) -> Dict[str, int]:
+        """Per-replica tier histogram over ``media_ids`` — the affinity
+        router's scoring input: ``{"hbm": n, "host": n, "disk": n,
+        "miss": n}`` as seen from ``replica``."""
+        counts = {TIER_HBM: 0, TIER_HOST: 0, TIER_DISK: 0, "miss": 0}
+        for mid in media_ids:
+            tier = self.peek_tier(user_id, mid, replica=replica)
+            counts[tier if tier in counts else "miss"] += 1
+        return counts
+
+    def peek_tier(self, user_id: str, media_id: str, *,
+                  replica=None) -> Optional[str]:
+        with self._lock:
+            e = self._entries.get(self._key(user_id, media_id))
+            if e is None or time.time() > e.expires:
+                return None
+            if replica is None:
+                return e.tier
+            # per-replica view: HBM only if THIS replica holds it; an entry
+            # HBM-warm on another replica is still host-resident RAM here
+            if replica in e.hbm_replicas:
+                return TIER_HBM
+            if e.k is not None or e.qk is not None:
+                return TIER_HOST
+            return e.tier if e.tier == TIER_DISK else TIER_HOST
 
     def delete(self, user_id: str, media_id: str) -> None:
         with self._lock:
@@ -196,8 +317,12 @@ class KVLibrary:
         lock (a loader worker can hold it for a whole disk read — blocking
         here would stall every library operation).  An entry being
         materialized right now is by definition hot: skip it and let
-        ``_rebalance`` pick the next LRU victim.
+        ``_rebalance`` pick the next LRU victim.  Same for a *pinned* entry:
+        a consumer received it from ``get`` and is still reading its arrays
+        — nulling ``k``/``v`` under it would crash the link step.
         """
+        if e._pins > 0:
+            return False
         if not e._mlock.acquire(blocking=False):
             return False
         try:
@@ -223,10 +348,33 @@ class KVLibrary:
         return True
 
     def _rebalance(self) -> None:
-        """Demote LRU entries when a tier exceeds capacity."""
+        """Demote LRU entries when a tier exceeds capacity.
+
+        Runs in three passes.  The per-replica pass first: each replica's
+        device budget is its own, so replica r exceeding ``hbm_capacity``
+        drops *r's hold* on its LRU entries — never another replica's.  An
+        entry whose last hold drops falls back to HOST.  Then the legacy
+        global HBM pass (entries with no replica holds — the single-engine
+        accounting) and the HOST→DISK spool pass, unchanged.
+        """
+        holders: Dict = {}
+        for e in self._entries.values():
+            for r in e.hbm_replicas:
+                holders.setdefault(r, []).append(e)
+        for r, held in holders.items():
+            used = sum(e.nbytes for e in held)
+            held.sort(key=lambda e: e.hbm_replicas[r])
+            for e in held:
+                if used <= self.hbm_capacity:
+                    break
+                del e.hbm_replicas[r]
+                if not e.hbm_replicas:
+                    e.tier = TIER_HOST
+                used -= e.nbytes
         for tier, cap, demote in ((TIER_HBM, self.hbm_capacity, TIER_HOST),
                                   (TIER_HOST, self.host_capacity, TIER_DISK)):
-            live = [(k, e) for k, e in self._entries.items() if e.tier == tier]
+            live = [(k, e) for k, e in self._entries.items()
+                    if e.tier == tier and not e.hbm_replicas]
             used = sum(e.nbytes for _, e in live)
             live.sort(key=lambda kv: kv[1].last_used)
             for k, e in live:
@@ -235,7 +383,7 @@ class KVLibrary:
                 freed = e.nbytes
                 if demote == TIER_DISK:
                     if not self._spool(k, e):
-                        continue        # mid-materialize: next LRU victim
+                        continue        # mid-materialize/pinned: next victim
                 else:
                     e.tier = TIER_HOST
                 used -= freed
@@ -244,9 +392,15 @@ class KVLibrary:
     def stats(self) -> dict:
         with self._lock:
             by_tier: Dict[str, int] = {}
+            by_replica: Dict[str, int] = {}
             for e in self._entries.values():
                 by_tier[e.tier] = by_tier.get(e.tier, 0) + e.nbytes
-            return {"entries": len(self._entries), "bytes_by_tier": by_tier}
+                for r in e.hbm_replicas:
+                    by_replica[r] = by_replica.get(r, 0) + e.nbytes
+            out = {"entries": len(self._entries), "bytes_by_tier": by_tier}
+            if by_replica:
+                out["hbm_bytes_by_replica"] = by_replica
+            return out
 
 
 class SimulatedLatencyLibrary(KVLibrary):
@@ -267,11 +421,15 @@ class SimulatedLatencyLibrary(KVLibrary):
         self.tier_latency_s = dict(tier_latency_s or {})
         self.get_log: list = []      # (media_id, t_start, t_end)
 
-    def get(self, user_id: str, media_id: str) -> Optional[Entry]:
+    def get(self, user_id: str, media_id: str, *, replica=None,
+            pin: bool = False) -> Optional[Entry]:
         t0 = time.perf_counter()
-        delay = self.tier_latency_s.get(self.peek_tier(user_id, media_id), 0.0)
+        # replica-aware latency: media already HBM-warm on THIS replica
+        # loads for free — the cache-affinity router's measurable edge
+        tier = self.peek_tier(user_id, media_id, replica=replica)
+        delay = self.tier_latency_s.get(tier, 0.0)
         if delay:
             time.sleep(delay)
-        e = super().get(user_id, media_id)
+        e = super().get(user_id, media_id, replica=replica, pin=pin)
         self.get_log.append((media_id, t0, time.perf_counter()))
         return e

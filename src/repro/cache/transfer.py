@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -72,6 +73,7 @@ class LoadRecord:
     future: Optional[cf.Future] = None
     t_start: float = 0.0                  # worker actually began the fetch
     t_end: float = 0.0                    # worker finished (hit or miss)
+    replica: Optional[int] = None         # replica whose prefetch issued it
 
     @property
     def busy_s(self) -> float:
@@ -91,12 +93,14 @@ class PrefetchHandle:
     """
 
     def __init__(self, loader: "ParallelLoader", user_id: str,
-                 records: Dict[str, LoadRecord]):
+                 records: Dict[str, LoadRecord], *, replica=None):
         self._loader = loader
         self.user_id = user_id
         self.records = records
+        self.replica = replica     # engine replica consuming these entries
         self.blocked_s = 0.0      # wall time a consumer spent waiting in get()
         self.blocked_intervals: List[Tuple[float, float]] = []
+        self._pinned: Dict[str, Entry] = {}   # released after the prefill
 
     # -- gather-at-link-time ------------------------------------------------
     def _revalidate(self, media_id: str,
@@ -111,17 +115,31 @@ class PrefetchHandle:
             return None
         if entry.k is not None and time.time() <= entry.expires:
             return entry
-        return self._loader.library.get(self.user_id, media_id)
+        return self._loader.library.get(self.user_id, media_id,
+                                        replica=self.replica)
 
     def get(self, media_id: str, timeout: float = 60.0) -> Optional[Entry]:
         """Entry for ``media_id`` (None on miss), blocking if still loading.
 
         Ids that were never prefetched fall back to a synchronous library
         get, so the handle is a drop-in ``entries`` mapping for the linker.
+
+        The returned entry is **pinned** (one pin per media id, taken
+        atomically with the residency check — a rebalance can never spool
+        the arrays between hand-out and pin) so the link step can read them
+        safely; the engine calls :meth:`release` when the prefill is
+        finalized or aborted.  On a cluster, the gather also marks the
+        entry HBM-warm on this handle's replica when the fetch was
+        deduplicated onto another replica's in-flight load.
         """
+        lib = self._loader.library
         rec = self.records.get(media_id)
         if rec is None:
-            return self._loader.library.get(self.user_id, media_id)
+            # never prefetched: one synchronous get that materializes,
+            # marks warmth, and pins in a single locked section
+            entry = lib.get(self.user_id, media_id, replica=self.replica,
+                            pin=True)
+            return self._adopt(media_id, entry)
         # only a gather that actually waits counts as blocked time —
         # re-gathers of completed futures must not pollute the TTFT
         # breakdown or the overlap subtraction
@@ -132,7 +150,45 @@ class PrefetchHandle:
             t1 = time.perf_counter()
             self.blocked_s += t1 - t0
             self.blocked_intervals.append((t0, t1))
-        return self._revalidate(media_id, entry)
+        entry = self._revalidate(media_id, entry)
+        if entry is None:
+            return None
+        if lib.try_pin(entry):
+            # the fetch may have been issued by (or dedup'd onto) another
+            # replica's prefetch — mark warmth for the CONSUMING replica
+            if self.replica is not None and rec.replica != self.replica:
+                lib.touch(self.user_id, media_id, self.replica)
+            return self._adopt(media_id, entry)
+        # spooled between the fetch and the gather: re-get atomically
+        # (materialize + warmth + pin under the entry/library locks)
+        entry = lib.get(self.user_id, media_id, replica=self.replica,
+                        pin=True)
+        return self._adopt(media_id, entry)
+
+    def _adopt(self, media_id: str, entry: Optional[Entry]
+               ) -> Optional[Entry]:
+        """Track exactly ONE held pin per media id.  ``entry`` arrives
+        already pinned (or None); a re-gather drops the surplus pin, and a
+        *different* entry object (the library re-created the key since the
+        last gather) replaces the old pin."""
+        lib = self._loader.library
+        if entry is None:
+            return None
+        old = self._pinned.get(media_id)
+        if old is entry:
+            lib.unpin(entry)            # surplus pin from this re-gather
+        else:
+            if old is not None:
+                lib.unpin(old)
+            self._pinned[media_id] = entry
+        return entry
+
+    def release(self) -> None:
+        """Unpin every entry this handle handed out (idempotent)."""
+        lib = self._loader.library
+        while self._pinned:
+            _, entry = self._pinned.popitem()
+            lib.unpin(entry)
 
     def wait(self, timeout: float = 60.0) -> Dict[str, Optional[Entry]]:
         return {mid: self.get(mid, timeout=timeout) for mid in self.records}
@@ -182,35 +238,85 @@ _TIER_RANK = {TIER_DISK: 0, TIER_HOST: 1, TIER_HBM: 2, None: 3}
 
 
 class ParallelLoader:
-    """Overlap real library fetches with caller compute."""
+    """Overlap real library fetches with caller compute.
 
-    def __init__(self, library: KVLibrary, max_workers: int = 4):
+    One loader can be **shared by several engine replicas**
+    (``serving/cluster.py``): each replica's scheduler issues per-request
+    prefetches tagged with its ``replica`` id, and concurrent fetches for
+    the *same* ``(user, media)`` are deduplicated onto one in-flight
+    :class:`LoadRecord` — one disk read (and one simulated-latency sleep)
+    serves every replica that asked while it was in flight.  Per-replica
+    HBM warmth is still attributed correctly: the consuming handle marks it
+    at gather time (``library.touch``), not at fetch time.
+    """
+
+    def __init__(self, library: KVLibrary, max_workers: int = 4, *,
+                 replica=None):
         self.library = library
+        self.replica = replica            # default tag for issued fetches
         self.pool = cf.ThreadPoolExecutor(max_workers=max_workers)
+        self._inflight: Dict[Tuple[str, str], LoadRecord] = {}
+        self._ilock = threading.Lock()
+        self.dedup_hits = 0               # fetches served by in-flight loads
 
     def prefetch(self, user_id: str, media_ids: Sequence[str]
                  ) -> Dict[str, cf.Future]:
-        return {mid: self.pool.submit(self.library.get, user_id, mid)
-                for mid in media_ids}
+        """Bare-futures variant (demo/benchmark API): shares the handle
+        path's issue order and in-flight dedup, but the gathered entries
+        are NOT pinned — single-threaded consumers only.  Serving code uses
+        :meth:`prefetch_handle`."""
+        handle = self.prefetch_handle(user_id, media_ids)
+        return {mid: rec.future for mid, rec in handle.records.items()}
 
-    def prefetch_handle(self, user_id: str,
-                        media_ids: Sequence[str]) -> PrefetchHandle:
-        """Issue fetches (disk first) and return a :class:`PrefetchHandle`."""
-        tiers = {mid: self.library.peek_tier(user_id, mid)
+    def prefetch_handle(self, user_id: str, media_ids: Sequence[str], *,
+                        replica=None) -> PrefetchHandle:
+        """Issue fetches (disk first) and return a :class:`PrefetchHandle`.
+
+        A fetch already in flight for the same ``(user, media)`` — from
+        this or any other replica's prefetch — is reused instead of
+        double-issued.
+        """
+        replica = self.replica if replica is None else replica
+        tiers = {mid: self.library.peek_tier(user_id, mid, replica=replica)
                  for mid in media_ids}
         ordered = sorted(dict.fromkeys(media_ids),
                          key=lambda m: _TIER_RANK.get(tiers[m], 3))
         records: Dict[str, LoadRecord] = {}
-        for mid in ordered:
-            rec = LoadRecord(mid)
-            rec.future = self.pool.submit(self._timed_get, user_id, rec)
-            records[mid] = rec
-        return PrefetchHandle(self, user_id, records)
+        fresh: List[Tuple[str, LoadRecord]] = []
+        with self._ilock:
+            for mid in ordered:
+                rec = self._inflight.get((user_id, mid))
+                if rec is not None:
+                    self.dedup_hits += 1
+                else:
+                    # submit while holding the lock so no other thread ever
+                    # sees a registered record without a future (submit only
+                    # enqueues — it cannot re-enter _ilock)
+                    rec = LoadRecord(mid, replica=replica)
+                    rec.future = self.pool.submit(self._timed_get, user_id,
+                                                  rec, replica)
+                    self._inflight[(user_id, mid)] = rec
+                    fresh.append((mid, rec))
+                records[mid] = rec
+        # done-callbacks OUTSIDE the lock: an already-finished future runs
+        # the callback synchronously here, and _retire needs _ilock
+        for mid, rec in fresh:
+            rec.future.add_done_callback(
+                lambda _f, key=(user_id, mid), r=rec: self._retire(key, r))
+        return PrefetchHandle(self, user_id, records, replica=replica)
 
-    def _timed_get(self, user_id: str, rec: LoadRecord) -> Optional[Entry]:
+    def _retire(self, key, rec: LoadRecord) -> None:
+        """Drop a finished fetch from the dedup window (identity-guarded:
+        never pop a newer in-flight record that reused the key)."""
+        with self._ilock:
+            if self._inflight.get(key) is rec:
+                del self._inflight[key]
+
+    def _timed_get(self, user_id: str, rec: LoadRecord,
+                   replica=None) -> Optional[Entry]:
         rec.t_start = time.perf_counter()
         try:
-            return self.library.get(user_id, rec.media_id)
+            return self.library.get(user_id, rec.media_id, replica=replica)
         finally:
             rec.t_end = time.perf_counter()
 

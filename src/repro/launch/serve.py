@@ -1,17 +1,24 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Boots an MPIC engine for the chosen architecture (reduced config on CPU),
-feeds it a synthetic multimodal request stream, and prints the TTFT /
-throughput report.  The production-mesh variant of the same step functions
-is what launch/dryrun.py lowers.
+Boots an MPIC engine — or, with ``--replicas N``, a data-parallel
+:class:`~repro.serving.cluster.MPICCluster` — for the chosen architecture
+(reduced config on CPU), feeds it a synthetic multimodal request stream,
+and prints the TTFT / throughput report.  The production-mesh variant of
+the same step functions is what launch/dryrun.py lowers.
 
 Every engine knob is drivable from the CLI: ``--no-paged`` /
 ``--no-pipelined`` select the dense / sequential baselines,
-``--prefill-chunk`` chunks long prompts across steps, and ``--mesh DxM``
+``--prefill-chunk`` chunks long prompts across steps, ``--mesh DxM``
 (e.g. ``--mesh 1x4``, or ``--mesh auto`` for all visible devices on the
 tensor-parallel axis) runs the mesh-sharded serving path — pair it with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to try it on a
-CPU-only box.
+CPU-only box — and ``--replicas N --router {random,least_loaded,affinity}``
+serves the request stream through the routed replica fleet.
+
+``--policy`` takes a comma-separated trace cycled over the request stream
+(e.g. ``--policy mpic,full_recompute``).  An unknown policy name in the
+trace fails *that request* with a per-request error and the server keeps
+serving — it does not hard-exit the run.
 """
 from __future__ import annotations
 
@@ -22,7 +29,13 @@ import jax
 from repro.configs import get_smoke_config
 from repro.data import image_embeds, make_dialogues
 from repro.models import build_model
-from repro.serving import EngineConfig, MPICEngine, Request
+from repro.serving import (
+    ClusterConfig,
+    EngineConfig,
+    MPICCluster,
+    MPICEngine,
+    Request,
+)
 
 
 def parse_mesh(spec: str):
@@ -41,8 +54,10 @@ def main():
     ap.add_argument("--arch", default="llava-1.6-7b")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--policy", default="mpic",
-                    choices=["mpic", "prefix_caching", "full_reuse",
-                             "cacheblend", "full_recompute"])
+                    help="policy per request, comma-separated trace cycled "
+                         "over the stream (mpic, prefix_caching, full_reuse,"
+                         " cacheblend, full_recompute); unknown names fail "
+                         "per-request, not the server")
     ap.add_argument("--mpic-k", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -61,18 +76,29 @@ def main():
     ap.add_argument("--mesh", default="none",
                     help="'none' (default), 'auto', or 'DxM' data×model "
                          "mesh for tensor-parallel serving (e.g. 1x4)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1: serve through an MPICCluster of N "
+                         "data-parallel engine replicas")
+    ap.add_argument("--router", default="affinity",
+                    choices=["random", "least_loaded", "affinity"],
+                    help="cluster routing policy (with --replicas > 1)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mesh = parse_mesh(args.mesh)
-    eng = MPICEngine(
-        model, params,
-        EngineConfig(max_seq_len=args.max_seq_len, decode_slots=args.slots,
-                     paged=args.paged, pipelined=args.pipelined,
-                     prefill_chunk_tokens=args.prefill_chunk),
-        mesh=mesh)
+    engine_cfg = EngineConfig(
+        max_seq_len=args.max_seq_len, decode_slots=args.slots,
+        paged=args.paged, pipelined=args.pipelined,
+        prefill_chunk_tokens=args.prefill_chunk)
+    if args.replicas > 1:
+        eng = MPICCluster(model, params, engine_cfg,
+                          ClusterConfig(replicas=args.replicas,
+                                        router=args.router),
+                          mesh=mesh)
+    else:
+        eng = MPICEngine(model, params, engine_cfg, mesh=mesh)
 
     dialogues = make_dialogues(n=args.requests, n_images=2,
                                d_model=cfg.d_model, media_len=24,
@@ -84,20 +110,29 @@ def main():
                 eng.upload("u1", mid, image_embeds(mid, 24, cfg.d_model))
                 seen.add(mid)
 
-    kw = {"k": args.mpic_k} if args.policy == "mpic" else {}
-    for d in dialogues:
+    policies = [p.strip() for p in args.policy.split(",") if p.strip()]
+    if not policies:
+        ap.error("--policy needs at least one policy name")
+    for i, d in enumerate(dialogues):
+        policy = policies[i % len(policies)]
+        kw = {"k": args.mpic_k} if policy == "mpic" else {}
         eng.submit(Request(prompt=d.prompt,
                            max_new_tokens=args.max_new_tokens,
-                           policy=args.policy, policy_kwargs=kw))
+                           policy=policy, policy_kwargs=kw))
     done = eng.run()
     mesh_desc = "x".join(str(s) for s in mesh.devices.shape) if mesh \
         else "unsharded"
     print(f"\narch={cfg.name} policy={args.policy} paged={args.paged} "
-          f"pipelined={args.pipelined} mesh={mesh_desc}")
+          f"pipelined={args.pipelined} mesh={mesh_desc} "
+          f"replicas={args.replicas}"
+          + (f" router={args.router}" if args.replicas > 1 else ""))
     for r in done:
+        rep = f" replica={r.replica}" if args.replicas > 1 else ""
         print(f"  {r.req_id}: ttft={r.ttft * 1e3:7.0f} ms  "
               f"reused={r.prefill_stats.get('n_reused', 0):4d}  "
-              f"tokens={len(r.output_tokens)}")
+              f"tokens={len(r.output_tokens)}{rep}")
+    for r in eng.failed:
+        print(f"  {r.req_id}: FAILED — {r.error}")
     for k, v in eng.report().items():
         print(f"  {k}: {v}")
 

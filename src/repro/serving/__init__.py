@@ -1,6 +1,17 @@
+from repro.serving.cluster import ClusterConfig, MPICCluster
 from repro.serving.engine import EngineConfig, MPICEngine
 from repro.serving.request import Request, State
 from repro.serving.retriever import Retriever
+from repro.serving.router import (
+    ROUTERS,
+    AffinityRouter,
+    LeastLoadedRouter,
+    RandomRouter,
+    ReplicaView,
+    Router,
+    RoutingDecision,
+    make_router,
+)
 from repro.serving.scheduler import (
     ChunkedPrefillTask,
     PipelinedScheduler,
@@ -9,5 +20,8 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "EngineConfig", "MPICEngine", "Request", "State", "Retriever",
+    "ClusterConfig", "MPICCluster",
+    "ROUTERS", "Router", "RandomRouter", "LeastLoadedRouter",
+    "AffinityRouter", "ReplicaView", "RoutingDecision", "make_router",
     "ChunkedPrefillTask", "PipelinedScheduler", "WaitingQueue",
 ]

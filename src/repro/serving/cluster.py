@@ -1,0 +1,243 @@
+"""Data-parallel serving cluster — N engine replicas, one KV library.
+
+The first subsystem *above* the engine: :class:`MPICCluster` owns N
+:class:`~repro.serving.engine.MPICEngine` replicas (each with its own
+``PagedKVPool``, decode slots, and ``PipelinedScheduler``) behind a shared,
+thread-safe :class:`~repro.cache.library.KVLibrary` and a single
+:class:`~repro.cache.transfer.ParallelLoader` whose worker pool scales with
+the replica count (each replica models a device/host with its own transfer
+bandwidth).  Requests enter through a pluggable router
+(``serving/router.py``: ``random`` / ``least_loaded`` / ``affinity``) and
+the replicas are stepped round-robin, so one Python driver serves the whole
+fleet:
+
+  * **Cache-affinity routing** — the shared library tracks which replica
+    holds each media KV HBM-warm (per-replica accounting, see
+    ``cache/library.py``); the affinity router sends requests where their
+    media already is, which is where MPIC's position-independent reuse
+    pays off at fleet scale.
+  * **Admission backpressure** — a replica whose waiting queue is at
+    ``max_queue_per_replica`` is ineligible; when every replica is
+    saturated, requests hold in the cluster's own pending queue and are
+    dispatched as replicas drain (so routing decisions are made against
+    *fresh* load/warmth state, not at a stale submit time).
+  * **Shared load stream** — per-replica prefetches are issued on the
+    shared loader tagged with the replica id; concurrent fetches of the
+    same ``(user, media)`` are deduplicated onto one in-flight read.
+  * **Aggregated report** — per-replica TTFT/decode/scheduler breakdowns
+    plus routing behavior (decisions per replica, cache-hit tiers per
+    router policy).
+
+Token parity: a request produces identical tokens whichever replica serves
+it — replicas share the model/params, decode is per-slot independent, and
+sampling is seeded per request (``Request.seed``), never per replica.
+``benchmarks/fig_cluster_throughput.py`` asserts this against the
+single-engine path and measures the throughput scaling + the affinity
+router's cache-hit edge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.cache.library import KVLibrary
+from repro.cache.transfer import ParallelLoader
+from repro.serving.engine import EngineConfig, MPICEngine
+from repro.serving.request import Request
+from repro.serving.retriever import Retriever
+from repro.serving.router import (
+    RoutingDecision,
+    make_router,
+    replica_view,
+)
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    replicas: int = 2
+    router: str = "least_loaded"     # random | least_loaded | affinity
+    router_seed: int = 0
+    max_queue_per_replica: int = 4   # admission backpressure threshold
+    loader_workers_per_replica: int = 4
+
+
+class MPICCluster:
+    """N data-parallel ``MPICEngine`` replicas behind one KV library."""
+
+    def __init__(self, model, params, engine_cfg: EngineConfig = None,
+                 cluster_cfg: ClusterConfig = None, *,
+                 static_library: Optional[KVLibrary] = None,
+                 dynamic_library: Optional[KVLibrary] = None,
+                 mesh=None):
+        self.cfg = cluster_cfg or ClusterConfig()
+        assert self.cfg.replicas >= 1
+        self.static_lib = static_library or KVLibrary()
+        self.dynamic_lib = dynamic_library or KVLibrary(shared=True)
+        self.retriever = Retriever()
+        self.loader = ParallelLoader(
+            self.static_lib,
+            max_workers=self.cfg.loader_workers_per_replica
+            * self.cfg.replicas)
+        self.router = make_router(self.cfg.router,
+                                  seed=self.cfg.router_seed)
+        self.engines: List[MPICEngine] = [
+            MPICEngine(model, params, engine_cfg,
+                       static_library=self.static_lib,
+                       dynamic_library=self.dynamic_lib,
+                       loader=self.loader, retriever=self.retriever,
+                       replica_id=i, mesh=mesh)
+            for i in range(self.cfg.replicas)
+        ]
+        self._share_jits()
+        self._pending: deque = deque()   # backpressured, not yet routed
+        self.decisions: List[RoutingDecision] = []
+        self._rr = 0                     # round-robin step offset
+        self._closed = False
+
+    def _share_jits(self) -> None:
+        """Replicas are identical (same model/params/config), so their
+        decode and paged-prefill steps share ONE compiled function instead
+        of tracing per replica — the pool buffers are per-call donated
+        arguments, not captures.  Mesh-sharded engines keep their own jits
+        (shardings are pinned per instance).  Side effect: prefill traces
+        all accrue on replica 0's counter (the shared jit's bound step fn)
+        — read compile counts via :attr:`prefill_trace_count`, not from
+        replicas 1..N."""
+        first = self.engines[0]
+        if first.sharding is not None:
+            return
+        for eng in self.engines[1:]:
+            eng._decode_jit = first._decode_jit
+            if eng._prefiller is not None and first._prefiller is not None:
+                eng._prefiller._jit = first._prefiller._jit
+
+    # ------------------------------------------------------------------
+    # workflow ①: upload — libraries and retriever are shared, so one
+    # precompute serves every replica
+    # ------------------------------------------------------------------
+    def upload(self, user_id: str, media_id: str, embeds, *,
+               ttl: float = float("inf"), dynamic: bool = False) -> None:
+        self.engines[0].upload(user_id, media_id, embeds, ttl=ttl,
+                               dynamic=dynamic)
+
+    # ------------------------------------------------------------------
+    # workflow ②: submit → route (or hold under backpressure)
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> Request:
+        if self._closed:
+            raise RuntimeError("cluster is draining/closed")
+        self._pending.append(request)
+        self._dispatch()
+        return request
+
+    def _eligible(self) -> List[MPICEngine]:
+        cap = self.cfg.max_queue_per_replica
+        return [e for e in self.engines
+                if len(e.scheduler.queue) < cap]
+
+    def _dispatch(self) -> None:
+        """Route pending requests onto replicas with queue headroom."""
+        while self._pending:
+            eligible = self._eligible()
+            if not eligible:
+                return                    # backpressure: hold in _pending
+            req = self._pending.popleft()
+            views = [replica_view(e, self.static_lib, req)
+                     for e in eligible]
+            decision = self.router.route(req, views)
+            self.decisions.append(decision)
+            req.replica = decision.replica
+            self.engines[decision.replica].submit(req)
+
+    # ------------------------------------------------------------------
+    # stepping: one cluster step = route + one engine step per replica,
+    # rotating the start replica so no replica systematically prefills
+    # first (admission fairness across the fleet)
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        self._dispatch()
+        n = len(self.engines)
+        for i in range(n):
+            eng = self.engines[(self._rr + i) % n]
+            if eng.has_work:
+                eng.step()
+            self._dispatch()     # freed capacity is routed immediately
+        self._rr = (self._rr + 1) % n
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self._pending or any(e.has_work for e in self.engines)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    def drain(self, max_steps: int = 10_000) -> List[Request]:
+        """Stop accepting new requests and serve everything in flight."""
+        self._closed = True
+        return self.run(max_steps)
+
+    def close(self) -> None:
+        self._closed = True
+        self.loader.close()
+
+    # ------------------------------------------------------------------
+    @property
+    def prefill_trace_count(self) -> int:
+        """Cluster-wide paged-prefill retraces.  The prefill jit is shared
+        across replicas (``_share_jits``), so every compile lands on
+        replica 0's counter."""
+        return self.engines[0].prefill_trace_count
+
+    @property
+    def pending(self) -> int:
+        """Requests held back by cluster-wide admission backpressure."""
+        return len(self._pending)
+
+    @property
+    def finished(self) -> List[Request]:
+        done = [r for e in self.engines for r in e.finished]
+        done.sort(key=lambda r: r.t_done)
+        return done
+
+    @property
+    def failed(self) -> List[Request]:
+        return [r for e in self.engines for r in e.failed]
+
+    # ------------------------------------------------------------------
+    def report(self) -> dict:
+        done = self.finished
+        per_replica = {e.replica_id: e.report() for e in self.engines}
+        routed: Dict[int, int] = {}
+        tiers: Dict[str, int] = {}
+        for d in self.decisions:
+            routed[d.replica] = routed.get(d.replica, 0) + 1
+            for tier, n in d.warmth.items():
+                tiers[tier] = tiers.get(tier, 0) + n
+        n_media = sum(tiers.values())
+        out = {
+            "replicas": len(self.engines),
+            "router": self.router.name,
+            "requests": len(done),
+            "failed": len(self.failed),
+            "pending": len(self._pending),
+            "total_tokens": sum(len(r.output_tokens) for r in done),
+            "routing": {
+                "decisions": len(self.decisions),
+                "per_replica": routed,
+                "media_tiers": tiers,
+                "hbm_hit_rate": (tiers.get("hbm", 0) / n_media
+                                 if n_media else 0.0),
+            },
+            "loader_dedup_hits": self.loader.dedup_hits,
+            "library": self.static_lib.stats(),
+            "per_replica": per_replica,
+        }
+        if done:
+            ttfts = [r.ttft for r in done]
+            out["mean_ttft_s"] = float(np.mean(ttfts))
+            out["p90_ttft_s"] = float(np.percentile(ttfts, 90))
+        return out

@@ -96,6 +96,7 @@ class EngineConfig:
     prefetch_depth: int = 2         # queued requests with loads in flight
     prefill_chunk_tokens: int = 0   # >0: chunk long prefills across steps
     pipelined: bool = True          # False → sequential admission baseline
+    queue_aging_s: float = 0.0      # >0: priority aging (anti-starvation)
     # -- paged decode path -------------------------------------------------
     paged: bool = True              # pool-backed decode (attention archs)
     page_size: int = 16             # tokens per KV page
@@ -153,7 +154,10 @@ class MPICEngine:
     def __init__(self, model: Model, params, engine_cfg: EngineConfig = None,
                  *, static_library: Optional[KVLibrary] = None,
                  dynamic_library: Optional[KVLibrary] = None,
-                 mesh=None, shard_rules: Optional[dict] = None):
+                 mesh=None, shard_rules: Optional[dict] = None,
+                 replica_id: Optional[int] = None,
+                 loader: Optional[ParallelLoader] = None,
+                 retriever: Optional[Retriever] = None):
         """``mesh``: optional :class:`jax.sharding.Mesh` (axes ``data`` ×
         ``model``, e.g. ``repro.launch.mesh.make_serving_mesh``) — the
         engine then serves tensor-parallel: params are committed to
@@ -161,9 +165,19 @@ class MPICEngine:
         ``model`` axis, and every donated jit (decode, paged prefill,
         splice, link) carries explicit in/out shardings so GSPMD keeps the
         pool resident and partitioned.  ``shard_rules`` overrides the
-        logical-axis rules (default ``repro.launch.mesh.serving_rules``)."""
+        logical-axis rules (default ``repro.launch.mesh.serving_rules``).
+
+        **Shared-library (cluster) mode** — ``serving/cluster.py`` runs N
+        engines as data-parallel replicas: pass a shared ``static_library``
+        / ``dynamic_library`` / ``loader`` / ``retriever`` plus a distinct
+        ``replica_id`` per engine.  Library fetches are then tagged with
+        the replica id (per-replica HBM warmth for the affinity router,
+        cross-replica fetch dedup on the shared loader).  With
+        ``replica_id=None`` (default) every library interaction keeps the
+        legacy single-engine semantics."""
         self.model = model
         self.cfg = engine_cfg or EngineConfig()
+        self.replica_id = replica_id
         self.sharding = None
         self._param_sh = None
         if mesh is not None:
@@ -174,13 +188,15 @@ class MPICEngine:
         self.params = params
         self.static_lib = static_library or KVLibrary()
         self.dynamic_lib = dynamic_library or KVLibrary(shared=True)
-        self.retriever = Retriever()
+        self.retriever = retriever if retriever is not None else Retriever()
         self.prefix_store = PrefixStore()
-        self.loader = ParallelLoader(self.static_lib)
+        self.loader = loader if loader is not None else ParallelLoader(
+            self.static_lib, replica=replica_id)
         self.scheduler = PipelinedScheduler(
             self.loader, prefetch_depth=self.cfg.prefetch_depth,
             pipelined=self.cfg.pipelined,
-            prefetch_filter=self._policy_consumes_entries)
+            prefetch_filter=self._policy_consumes_entries,
+            replica=replica_id, aging_s=self.cfg.queue_aging_s)
 
         self.running: List[Optional[Request]] = [None] * self.cfg.decode_slots
         self.finished: List[Request] = []
@@ -382,6 +398,17 @@ class MPICEngine:
     def _begin_prefill(self, req: Request,
                        slot: int, handle: Optional[PrefetchHandle]) -> None:
         policy_name = self._resolve_policy(req)
+        if policy_name not in POLICIES:
+            # a bad policy name in one request (e.g. a typo in a request
+            # trace) must fail THAT request with a clear error and keep the
+            # engine serving — not hard-exit the whole run
+            req.state = State.FAILED
+            req.error = (f"unknown policy {req.policy!r} "
+                         f"(known: {sorted(POLICIES)})")
+            self.failed.append(req)
+            if handle is not None:
+                handle.release()
+            return
         req.slot = slot
         req.state = State.PREFILLING
         self.running[slot] = req
@@ -424,8 +451,8 @@ class MPICEngine:
                     prefix_store=self.prefix_store,
                     entries=handle, paged=paged_ctx, **req.policy_kwargs)
             self._finalize_prefill(req, result, handle)
-        except BaseException:
-            self._abort_prefill(slot)
+        except BaseException as exc:
+            self._abort_prefill(slot, handle=handle, error=repr(exc))
             raise
 
     def _advance_prefills(self) -> None:
@@ -435,11 +462,14 @@ class MPICEngine:
                 if done:
                     del self._prefill_tasks[slot]
                     self._finalize_prefill(task.req, task.result, task.handle)
-            except BaseException:
-                self._abort_prefill(slot)
+            except BaseException as exc:
+                self._abort_prefill(slot, handle=task.handle,
+                                    error=repr(exc))
                 raise
 
-    def _abort_prefill(self, slot: int) -> None:
+    def _abort_prefill(self, slot: int,
+                       handle: Optional[PrefetchHandle] = None,
+                       error: Optional[str] = None) -> None:
         """Free a slot whose prefill raised, so capacity is not leaked.
 
         The request goes terminal (FAILED, in ``self.failed``) rather than
@@ -447,11 +477,14 @@ class MPICEngine:
         must not retry forever, and a caller that catches the exception from
         ``step()``/``run()`` can inspect/resubmit it explicitly.
         """
+        if handle is not None:
+            handle.release()
         self._prefill_tasks.pop(slot, None)
         req = self.running[slot]
         if req is not None:
             req.slot = -1
             req.state = State.FAILED
+            req.error = error
             self.failed.append(req)
             # drop the sampling generator too: a resubmit must reproduce
             # from Request.seed, not resume an advanced stream
@@ -474,6 +507,10 @@ class MPICEngine:
         req.cur_len = req.prompt.total_len
         req.state = State.RUNNING
         self.scheduler.account(req, handle, result.stats.get("wall_s", 0.0))
+        if handle is not None:
+            # entries are consumed (linked/spliced): release the pins so the
+            # shared library may demote them again under pressure
+            handle.release()
 
         # splice the request cache into the batch cache / page pool at
         # `slot` (paged: pages were reserved at _begin_prefill).  A paged
@@ -519,32 +556,38 @@ class MPICEngine:
         cfg = self.model.cfg
         relink = bool(cfg.rope_theta) and not cfg.learned_pos_emb
         for media_id, score in hits:
-            entry = self.dynamic_lib.get(req.prompt.user_id, media_id)
+            # pinned for the duration of the link: a concurrent replica's
+            # rebalance must not spool the arrays while we scatter them
+            entry = self.dynamic_lib.get(req.prompt.user_id, media_id,
+                                         replica=self.replica_id, pin=True)
             if entry is None:
                 continue
-            length = entry.k.shape[1]
-            off = req.cur_len
-            if off + length + 1 >= self.cfg.max_seq_len:
-                break
-            if self._use_paged:
-                pages = self.pool.extend(req.req_id, length, off)
-                if pages is None:           # pool full: stop linking
+            try:
+                length = entry.k.shape[1]
+                off = req.cur_len
+                if off + length + 1 >= self.cfg.max_seq_len:
                     break
-                self._set_page_row(req.slot, pages)
-                ps = self.cfg.page_size
-                t = off + np.arange(length)
-                self.pool.link_write(
-                    jnp.asarray(self._page_tables[req.slot][t // ps]),
-                    jnp.asarray((t % ps).astype(np.int32)),
-                    jnp.asarray(entry.k), jnp.asarray(entry.v),
-                    jnp.full((length,), off, jnp.int32),
-                    theta=cfg.rope_theta, relink=relink)
-            else:
-                self._batch_cache = self._link_jit(
-                    self._batch_cache, jnp.asarray(entry.k),
-                    jnp.asarray(entry.v), jnp.asarray(off, jnp.int32),
-                    jnp.asarray(req.slot, jnp.int32),
-                    theta=cfg.rope_theta, relink=relink)
+                if self._use_paged:
+                    pages = self.pool.extend(req.req_id, length, off)
+                    if pages is None:           # pool full: stop linking
+                        break
+                    self._set_page_row(req.slot, pages)
+                    ps = self.cfg.page_size
+                    t = off + np.arange(length)
+                    self.pool.link_write(
+                        jnp.asarray(self._page_tables[req.slot][t // ps]),
+                        jnp.asarray((t % ps).astype(np.int32)),
+                        jnp.asarray(entry.k), jnp.asarray(entry.v),
+                        jnp.full((length,), off, jnp.int32),
+                        theta=cfg.rope_theta, relink=relink)
+                else:
+                    self._batch_cache = self._link_jit(
+                        self._batch_cache, jnp.asarray(entry.k),
+                        jnp.asarray(entry.v), jnp.asarray(off, jnp.int32),
+                        jnp.asarray(req.slot, jnp.int32),
+                        theta=cfg.rope_theta, relink=relink)
+            finally:
+                self.dynamic_lib.unpin(entry)
             req.cur_len += length
             req.linked_media.append(media_id)
 
@@ -671,13 +714,41 @@ class MPICEngine:
             bc["pos"] = bc["pos"].at[slot].set(INVALID_POS)
 
     # ------------------------------------------------------------------
+    # cluster hooks: external drivers (serving/cluster.py) poll these to
+    # route and to apply admission backpressure across replicas
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        """Anything queued, prefilling, or decoding on this replica?"""
+        return bool(self.scheduler.queue
+                    or any(r is not None for r in self.running))
+
+    def load_info(self) -> dict:
+        """Instantaneous load snapshot for routing/backpressure decisions."""
+        if self._use_paged:
+            free_pages = self.pool.free_pages
+            total_pages = self.pool.cfg.num_pages
+        else:
+            free_pages = total_pages = 0
+        return {
+            "replica": self.replica_id,
+            "free_slots": sum(1 for r in self.running if r is None),
+            "queue_depth": len(self.scheduler.queue),
+            "prefills_inflight": len(self._prefill_tasks),
+            "free_pages": free_pages,
+            "total_pages": total_pages,
+        }
+
+    # ------------------------------------------------------------------
     def report(self) -> dict:
         done = self.finished
         if not done:
             return {}
         ttfts = [r.ttft for r in done]
         return {
+            "replica": self.replica_id,
             "requests": len(done),
+            "failed": len(self.failed),
             "mean_ttft_s": float(np.mean(ttfts)),
             "p90_ttft_s": float(np.percentile(ttfts, 90)),
             "total_tokens": sum(len(r.output_tokens) for r in done),

@@ -40,6 +40,8 @@ class Request:
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     cur_len: int = 0                 # tokens currently in this request's cache
     slot: int = -1                   # decode batch slot
+    replica: int = -1                # engine replica (cluster routing)
+    error: Optional[str] = None      # why the request FAILED (per-request)
 
     # metrics
     t_arrival: float = dataclasses.field(default_factory=time.perf_counter)

@@ -1,0 +1,163 @@
+"""Pluggable request routing for the data-parallel serving cluster.
+
+A router picks which engine replica serves a request, given a per-request
+snapshot of every *eligible* replica (``ReplicaView``: free decode slots,
+free pool pages, queue depth, and the per-replica warmth of the request's
+media ids in the shared KV library).  Three policies:
+
+  * ``random`` — seeded uniform choice; the baseline the benchmark
+    (``benchmarks/fig_cluster_throughput.py``) measures the others against.
+  * ``least_loaded`` — most spare serving capacity wins: free decode slots,
+    free page fraction, minus queue depth.
+  * ``cache-affinity`` — score replicas by how much of the request's media
+    KV is already warm *on that replica* (HBM via the library's per-replica
+    accounting, host-resident as a weaker signal), tie-broken by load.
+    MPIC's position-independent reuse only compounds at fleet scale if
+    requests land where their media KV is — or can cheaply be — resident
+    (EPIC 2024 / MiniPIC 2025 frame PIC as exactly this routing problem).
+
+Every decision is recorded (``RoutingDecision``) so the cluster ``report()``
+can aggregate routing behavior and cache-hit tiers per policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cache.library import TIER_HBM, TIER_HOST
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class ReplicaView:
+    """Snapshot of one eligible replica at routing time."""
+    replica_id: int
+    free_slots: int
+    queue_depth: int
+    free_pages: int
+    total_pages: int
+    warmth: Dict[str, int]      # tier -> count over THIS request's media ids
+
+    @property
+    def load_score(self) -> float:
+        """Higher = more spare capacity."""
+        pages = (self.free_pages / self.total_pages
+                 if self.total_pages else 1.0)
+        return self.free_slots + pages - 0.5 * self.queue_depth
+
+
+@dataclasses.dataclass
+class RoutingDecision:
+    """One routed request — kept by the cluster for ``report()``."""
+    req_id: str
+    policy: str
+    replica: int
+    scores: Dict[int, float]    # replica -> routing score (empty for random)
+    warmth: Dict[str, int]      # chosen replica's media-tier histogram
+
+
+class Router:
+    """Base router: subclasses implement :meth:`choose`."""
+
+    name = "?"
+
+    def choose(self, req: Request, views: List[ReplicaView]
+               ) -> Tuple[int, Dict[int, float]]:
+        raise NotImplementedError
+
+    def route(self, req: Request, views: List[ReplicaView]
+              ) -> RoutingDecision:
+        assert views, "router needs at least one eligible replica"
+        replica, scores = self.choose(req, views)
+        warmth = next(v.warmth for v in views if v.replica_id == replica)
+        return RoutingDecision(req_id=req.req_id, policy=self.name,
+                               replica=replica, scores=scores,
+                               warmth=dict(warmth))
+
+
+class RandomRouter(Router):
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+
+    def choose(self, req, views):
+        return views[int(self._rng.integers(len(views)))].replica_id, {}
+
+
+class LeastLoadedRouter(Router):
+    name = "least_loaded"
+
+    def choose(self, req, views):
+        scores = {v.replica_id: v.load_score for v in views}
+        # deterministic: highest capacity, lowest replica id on ties
+        best = max(views, key=lambda v: (scores[v.replica_id],
+                                         -v.replica_id))
+        return best.replica_id, scores
+
+
+class AffinityRouter(Router):
+    """Warmth-weighted routing with load tie-break.
+
+    ``w_hbm``/``w_host`` weight per-replica HBM hits vs host-resident hits
+    (any replica can load host entries, only the holder skips the transfer
+    entirely).  The load score is scaled down so it only decides between
+    equally-warm replicas — affinity never sends a request to a saturated
+    replica, because the cluster only offers eligible (non-backpressured)
+    views.
+    """
+
+    name = "affinity"
+
+    def __init__(self, w_hbm: float = 2.0, w_host: float = 1.0,
+                 w_load: float = 0.01):
+        self.w_hbm = w_hbm
+        self.w_host = w_host
+        self.w_load = w_load
+
+    def choose(self, req, views):
+        scores = {
+            v.replica_id: (self.w_hbm * v.warmth.get(TIER_HBM, 0)
+                           + self.w_host * v.warmth.get(TIER_HOST, 0)
+                           + self.w_load * v.load_score)
+            for v in views
+        }
+        best = max(views, key=lambda v: (scores[v.replica_id],
+                                         -v.replica_id))
+        return best.replica_id, scores
+
+
+ROUTERS = {
+    "random": RandomRouter,
+    "least_loaded": LeastLoadedRouter,
+    "affinity": AffinityRouter,
+}
+
+
+def make_router(name: str, *, seed: int = 0,
+                **kwargs) -> Router:
+    """Instantiate a routing policy by name (clear error on unknowns)."""
+    if name not in ROUTERS:
+        raise ValueError(
+            f"unknown router policy {name!r} (known: {sorted(ROUTERS)})")
+    if name == "random":
+        return RandomRouter(seed=seed, **kwargs)
+    return ROUTERS[name](**kwargs)
+
+
+def replica_view(engine, library, req: Request,
+                 warmth: Optional[Dict[str, int]] = None) -> ReplicaView:
+    """Build one replica's view for a request from its engine hooks."""
+    info = engine.load_info()
+    if warmth is None:
+        media = [seg.media_id for _, seg in req.prompt.media_segments()]
+        warmth = library.warmth(req.prompt.user_id, media,
+                                engine.replica_id)
+    return ReplicaView(replica_id=info["replica"],
+                       free_slots=info["free_slots"],
+                       queue_depth=info["queue_depth"],
+                       free_pages=info["free_pages"],
+                       total_pages=info["total_pages"],
+                       warmth=warmth)

@@ -47,21 +47,50 @@ from repro.serving.request import Request, State
 
 
 class WaitingQueue:
-    """Priority waiting queue: higher ``Request.priority`` first, FIFO ties."""
+    """Priority waiting queue: higher ``Request.priority`` first, FIFO ties.
 
-    def __init__(self):
-        self._heap: List[Tuple[int, int, Request]] = []
+    ``aging_s`` > 0 enables **priority aging** (anti-starvation): a queued
+    request's effective priority grows by one level per ``aging_s`` seconds
+    waited, so a burst of high-priority (or slow-loading, repeatedly
+    re-queued-behind) traffic cannot starve older low-priority requests —
+    after ``(Δpriority · aging_s)`` they outrank the burst.  Admission
+    order is computed at pop/peek time (O(n) scan; the waiting window is
+    small under cluster backpressure).  ``aging_s=0`` (default) keeps the
+    exact static heap behavior.
+    """
+
+    def __init__(self, aging_s: float = 0.0):
+        self.aging_s = float(aging_s)
+        self._heap: List[Tuple[int, int, float, Request]] = []
         self._seq = itertools.count()
 
     def push(self, req: Request) -> None:
-        heapq.heappush(self._heap, (-req.priority, next(self._seq), req))
+        item = (-req.priority, next(self._seq), time.perf_counter(), req)
+        if self.aging_s > 0:
+            self._heap.append(item)     # plain list: order decided at pop
+        else:
+            heapq.heappush(self._heap, item)
+
+    def _aged_key(self, item, now: float):
+        neg_pri, seq, t_enq, _ = item
+        return (neg_pri - (now - t_enq) / self.aging_s, seq)
 
     def pop(self) -> Request:
-        return heapq.heappop(self._heap)[2]
+        if self.aging_s > 0:
+            now = time.perf_counter()
+            i = min(range(len(self._heap)),
+                    key=lambda j: self._aged_key(self._heap[j], now))
+            return self._heap.pop(i)[3]
+        return heapq.heappop(self._heap)[3]
 
     def peek(self, n: int) -> List[Request]:
         """The next ``n`` requests in admission order (without popping)."""
-        return [item[2] for item in heapq.nsmallest(n, self._heap)]
+        if self.aging_s > 0:
+            now = time.perf_counter()
+            order = sorted(self._heap,
+                           key=lambda it: self._aged_key(it, now))
+            return [item[3] for item in order[:n]]
+        return [item[3] for item in heapq.nsmallest(n, self._heap)]
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -70,7 +99,7 @@ class WaitingQueue:
         return bool(self._heap)
 
     def __iter__(self):
-        return iter(item[2] for item in sorted(self._heap))
+        return iter(item[3] for item in sorted(self._heap))
 
 
 def _media_ids(req: Request) -> List[str]:
@@ -87,16 +116,20 @@ class PipelinedScheduler:
 
     def __init__(self, loader: ParallelLoader, *, prefetch_depth: int = 2,
                  pipelined: bool = True, max_intervals: int = 1024,
-                 prefetch_filter=None):
+                 prefetch_filter=None, replica=None, aging_s: float = 0.0):
         self.loader = loader
         self.prefetch_depth = prefetch_depth
         self.pipelined = pipelined
+        # engine replica this scheduler admits for: prefetches issued on a
+        # cluster-shared loader are tagged with it (per-replica HBM warmth
+        # + fetch dedup across replicas)
+        self.replica = replica
         # predicate(req) -> bool: will this request's (resolved) policy ever
         # gather library entries?  Set by the engine so requests destined for
         # full-recompute/prefix policies don't occupy loader workers with
         # fetches nobody consumes (and don't pollute the load metrics)
         self.prefetch_filter = prefetch_filter
-        self.queue = WaitingQueue()
+        self.queue = WaitingQueue(aging_s=aging_s)
         self._handles: Dict[str, PrefetchHandle] = {}
         # engine-global compute intervals (prefill chunks + decode steps);
         # bounded: old intervals can't overlap new loads
@@ -133,7 +166,8 @@ class PipelinedScheduler:
 
     def _issue(self, req: Request) -> PrefetchHandle:
         handle = self.loader.prefetch_handle(req.prompt.user_id,
-                                             _media_ids(req))
+                                             _media_ids(req),
+                                             replica=self.replica)
         self._recent_handles.append(handle)
         return handle
 
@@ -221,6 +255,7 @@ class PipelinedScheduler:
             "waiting": len(self.queue),
             "pipelined": self.pipelined,
             "prefetch_depth": self.prefetch_depth,
+            "aging_s": self.queue.aging_s,
             "chunked_prefills": sum(
                 1 for r in finished if r.prefill_stats.get("chunks", 1) > 1),
             "mean_queue_wait_s": float(np.mean(

@@ -1,0 +1,279 @@
+"""Data-parallel serving cluster: routing, backpressure, parity, fairness."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cache import SimulatedLatencyLibrary, TIER_HBM, TIER_HOST
+from repro.configs import get_smoke_config
+from repro.core import Prompt, media_segment, text_segment
+from repro.data import image_embeds
+from repro.serving import (
+    ClusterConfig,
+    EngineConfig,
+    MPICCluster,
+    MPICEngine,
+    ReplicaView,
+    Request,
+    WaitingQueue,
+    make_router,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_smoke_config("llava-1.6-7b")
+    from repro.models import build_model
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, seed, media=("A", "B"), user_id="u1"):
+    r = np.random.default_rng(seed)
+    segs = [text_segment(r.integers(8, 200, 5))]
+    for mid in media:
+        segs.append(media_segment(mid, image_embeds(mid, 16, cfg.d_model)))
+        segs.append(text_segment(r.integers(8, 200, 4)))
+    return Prompt(segs, user_id=user_id)
+
+
+def _upload_all(target, cfg, media=("A", "B"), user_id="u1"):
+    for mid in media:
+        target.upload(user_id, mid, image_embeds(mid, 16, cfg.d_model))
+
+
+def _serve(target, cfg, seeds, **req_kw):
+    reqs = [target.submit(Request(prompt=_prompt(cfg, s), max_new_tokens=4,
+                                  policy="mpic", policy_kwargs={"k": 4},
+                                  **req_kw))
+            for s in seeds]
+    target.run()
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# router units
+# ---------------------------------------------------------------------------
+
+def _view(rid, *, slots=2, queue=0, pages=8, total=8, hbm=0, host=0):
+    return ReplicaView(replica_id=rid, free_slots=slots, queue_depth=queue,
+                       free_pages=pages, total_pages=total,
+                       warmth={TIER_HBM: hbm, TIER_HOST: host,
+                               "disk": 0, "miss": 0})
+
+
+def test_least_loaded_router_picks_spare_capacity():
+    router = make_router("least_loaded")
+    views = [_view(0, slots=0, queue=3), _view(1, slots=2, queue=0),
+             _view(2, slots=1, queue=1)]
+    d = router.route(Request(prompt=None), views)
+    assert d.replica == 1
+    assert d.scores[1] > d.scores[2] > d.scores[0]
+
+
+def test_affinity_router_prefers_warm_replica_then_load():
+    router = make_router("affinity")
+    # replica 2 holds both media HBM-warm → wins despite a deeper queue
+    views = [_view(0, slots=2, hbm=0, host=2), _view(1, slots=2, hbm=1,
+                                                     host=1),
+             _view(2, slots=1, queue=2, hbm=2, host=0)]
+    assert router.route(Request(prompt=None), views).replica == 2
+    # all equally cold → load decides
+    views = [_view(0, slots=0, queue=2, host=2), _view(1, slots=2, host=2)]
+    assert router.route(Request(prompt=None), views).replica == 1
+
+
+def test_random_router_seeded_and_unknown_name():
+    picks = [make_router("random", seed=7).route(
+        Request(prompt=None), [_view(0), _view(1), _view(2)]).replica
+        for _ in range(2)]
+    assert picks[0] == picks[1]              # same seed → same stream
+    with pytest.raises(ValueError, match="unknown router"):
+        make_router("bogus")
+
+
+# ---------------------------------------------------------------------------
+# cluster end-to-end
+# ---------------------------------------------------------------------------
+
+def test_cluster_tokens_match_single_engine(model_and_params):
+    """Greedy tokens are replica-independent: a 2-replica cluster serves the
+    same stream token-identically to one engine (incl. an MRAG request)."""
+    cfg, m, params = model_and_params
+    ecfg = EngineConfig(max_seq_len=128, decode_slots=2)
+
+    def serve(target):
+        _upload_all(target, cfg)
+        target.upload("*", "RAG1", image_embeds("RAG1", 12, cfg.d_model),
+                      dynamic=True)
+        reqs = [Request(prompt=_prompt(cfg, s), max_new_tokens=4,
+                        policy="mpic", policy_kwargs={"k": 4})
+                for s in range(4)]
+        reqs[1].retrieval_query = image_embeds("RAG1", 12,
+                                               cfg.d_model).mean(0)
+        for r in reqs:
+            target.submit(r)
+        target.run()
+        return reqs
+
+    ref = serve(MPICEngine(m, params, ecfg))
+    got = serve(MPICCluster(m, params, ecfg,
+                            ClusterConfig(replicas=2,
+                                          router="least_loaded")))
+    for a, b in zip(ref, got):
+        assert a.output_tokens == b.output_tokens
+        assert b.replica in (0, 1)
+    assert "RAG1" in got[1].linked_media
+    # both replicas actually served something
+    assert len({b.replica for b in got}) == 2
+
+
+def test_cluster_seed_parity_across_routers(model_and_params):
+    """Sampling is seeded per REQUEST, so a request's tokens are identical
+    whichever replica (and routing policy) serves it."""
+    cfg, m, params = model_and_params
+    ecfg = EngineConfig(max_seq_len=128, decode_slots=2, greedy=False,
+                        temperature=0.8, top_k=8)
+    outs = []
+    for router in (None, "random", "affinity"):
+        if router is None:
+            target = MPICEngine(m, params, ecfg)
+        else:
+            target = MPICCluster(m, params, ecfg,
+                                 ClusterConfig(replicas=2, router=router,
+                                               router_seed=3))
+        _upload_all(target, cfg)
+        reqs = _serve(target, cfg, seeds=range(3), seed=1234)
+        outs.append([r.output_tokens for r in reqs])
+        assert all(len(t) == 4 for t in outs[-1])
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_affinity_routes_to_warm_replica(model_and_params):
+    """Wave 1 warms media on some replica; wave 2 re-referencing the same
+    media must land on the warm replica (hbm-warm decisions)."""
+    cfg, m, params = model_and_params
+    cluster = MPICCluster(m, params,
+                          EngineConfig(max_seq_len=128, decode_slots=2),
+                          ClusterConfig(replicas=2, router="affinity"))
+    _upload_all(cluster, cfg)
+    _serve(cluster, cfg, seeds=range(2))          # wave 1: warms media
+    lib = cluster.static_lib
+    warm = {r: lib.warmth("u1", ["A", "B"], r)[TIER_HBM] for r in (0, 1)}
+    warm_replica = max(warm, key=warm.get)
+    assert warm[warm_replica] == 2                # both media warm there
+
+    n0 = len(cluster.decisions)
+    _serve(cluster, cfg, seeds=range(10, 14))     # wave 2: same media
+    wave2 = cluster.decisions[n0:]
+    assert all(d.replica == warm_replica for d in wave2)
+    assert all(d.warmth[TIER_HBM] == 2 for d in wave2)
+    assert cluster.report()["routing"]["hbm_hit_rate"] > 0.5
+
+
+def test_cluster_backpressure_holds_pending(model_and_params):
+    """With every replica's queue at cap, submits hold in the cluster's
+    pending queue (and still serve to completion as capacity frees)."""
+    cfg, m, params = model_and_params
+    cluster = MPICCluster(m, params,
+                          EngineConfig(max_seq_len=128, decode_slots=1),
+                          ClusterConfig(replicas=2,
+                                        max_queue_per_replica=1))
+    _upload_all(cluster, cfg)
+    reqs = [cluster.submit(Request(prompt=_prompt(cfg, s), max_new_tokens=2,
+                                   policy="mpic", policy_kwargs={"k": 4}))
+            for s in range(8)]
+    # 2 replicas × (1 queued + in-flight admissions) < 8 → some held back
+    assert cluster.pending > 0
+    for e in cluster.engines:
+        assert len(e.scheduler.queue) <= 1
+    done = cluster.drain()
+    assert len(done) == 8
+    assert all(len(r.output_tokens) == 2 for r in reqs)
+    assert cluster.pending == 0
+    with pytest.raises(RuntimeError, match="draining"):
+        cluster.submit(reqs[0])
+
+
+def test_unknown_policy_fails_request_keeps_serving(model_and_params):
+    """A bad policy name in the request trace fails THAT request with a
+    clear error; the rest of the stream still serves (engine + cluster)."""
+    cfg, m, params = model_and_params
+    for target in (MPICEngine(m, params,
+                              EngineConfig(max_seq_len=128, decode_slots=2)),
+                   MPICCluster(m, params,
+                               EngineConfig(max_seq_len=128, decode_slots=2),
+                               ClusterConfig(replicas=2))):
+        _upload_all(target, cfg)
+        good = [Request(prompt=_prompt(cfg, s), max_new_tokens=2,
+                        policy="mpic", policy_kwargs={"k": 4})
+                for s in (0, 1)]
+        bad = Request(prompt=_prompt(cfg, 2), max_new_tokens=2,
+                      policy="totally-bogus")
+        for r in (good[0], bad, good[1]):
+            target.submit(r)
+        target.run()
+        assert [len(r.output_tokens) for r in good] == [2, 2]
+        assert bad.error is not None and "totally-bogus" in bad.error
+        assert bad in target.failed and not bad.output_tokens
+
+
+# ---------------------------------------------------------------------------
+# fairness: aging under a slow-loading burst
+# ---------------------------------------------------------------------------
+
+def test_waiting_queue_aging_beats_priority_burst():
+    q = WaitingQueue(aging_s=0.01)
+    old_low = Request(prompt=None, priority=0)
+    q.push(old_low)
+    time.sleep(0.05)                      # waits 5 aging periods → +5 levels
+    burst = [Request(prompt=None, priority=3) for _ in range(4)]
+    for r in burst:
+        q.push(r)
+    assert q.pop() is old_low             # aged past the burst
+    assert q.pop() is burst[0]            # FIFO within the burst
+
+    q0 = WaitingQueue()                   # aging off: strict priority
+    q0.push(old_low)
+    time.sleep(0.02)
+    q0.push(burst[0])
+    assert q0.pop() is burst[0]
+
+
+def test_slow_media_burst_does_not_starve_queue(model_and_params):
+    """Scheduler fairness under fan-out: a burst of higher-priority
+    requests whose media loads are slow must not starve a waiting
+    low-priority request when aging is enabled — it is admitted before the
+    burst drains."""
+    cfg, m, params = model_and_params
+    lib = SimulatedLatencyLibrary(
+        tier_latency_s={TIER_HBM: 0.15, TIER_HOST: 0.15},
+        spool_dir="/tmp/mpic_spool_fairness")
+    eng = MPICEngine(m, params,
+                     EngineConfig(max_seq_len=128, decode_slots=1,
+                                  prefetch_depth=1, queue_aging_s=0.05),
+                     static_library=lib)
+    _upload_all(eng, cfg, media=[f"S{i}" for i in range(6)])
+    # low-priority request first ...
+    low = eng.submit(Request(prompt=_prompt(cfg, 0, media=("S0",)),
+                             max_new_tokens=1, policy="mpic",
+                             policy_kwargs={"k": 4}, priority=0))
+    # ... then a CONTINUING burst of high-priority slow-loading requests,
+    # one arriving per engine step (each admission blocks ≥0.15 s on its
+    # media load, so without aging the stream outranks `low` forever)
+    burst = []
+    for i in range(5):
+        burst.append(eng.submit(Request(prompt=_prompt(cfg, 10 + i,
+                                                       media=(f"S{i + 1}",)),
+                                        max_new_tokens=1, policy="mpic",
+                                        policy_kwargs={"k": 4}, priority=5)))
+        eng.step()
+    eng.run()
+    assert low.done and all(b.done for b in burst)
+    # aging (+1 level / 50 ms waited) lifts the old request past the
+    # priority-5 newcomers once it has waited 5·50 ms — i.e. after ~2 burst
+    # admissions, well before the burst ends
+    later_than_low = sum(1 for b in burst if b.t_admitted > low.t_admitted)
+    assert later_than_low >= 2, \
+        "aged low-priority request was starved behind the whole burst"

@@ -146,8 +146,9 @@ def test_prefetch_handle_revalidates_stale_entries(tmp_path):
     loader = ParallelLoader(lib)
     h = loader.prefetch_handle("u", ["m"])
     h.wait()
+    h.release()     # unpin: a released entry is fair demotion game again
     key = lib._key("u", "m")
-    lib._spool(key, lib._entries[key])        # demoted during the queue wait
+    assert lib._spool(key, lib._entries[key])  # demoted during queue wait
     e = h.get("m")
     assert e is not None and e.k is not None  # re-materialized at link time
     np.testing.assert_array_equal(e.k, k)
@@ -157,6 +158,132 @@ def test_prefetch_handle_revalidates_stale_entries(tmp_path):
     h2.wait()
     lib._entries[lib._key("u", "x")].expires = time.time() - 1
     assert h2.get("x") is None                # expired while queued → miss
+    loader.close()
+
+
+def test_pinned_entry_survives_rebalance(tmp_path):
+    """A pinned (handed-out) entry must keep its arrays through capacity
+    pressure; unpinning makes it demotable again."""
+    k, v = _kv(1 << 14)
+    per = k.nbytes + v.nbytes
+    lib = KVLibrary(hbm_capacity=per, host_capacity=1,  # host tier: spool
+                    spool_dir=str(tmp_path))
+    e = lib.put("u", "hot", k, v)              # fits: stays put
+    assert lib.try_pin(e)
+    lib.put("u", "other", k, v)                # HBM pressure → demote "hot"
+    assert e.tier == TIER_HOST                 # tier moved ...
+    assert e.k is not None                     # ... but pinned: not spooled
+    lib.unpin(e)                               # unpin re-runs the rebalance
+    assert e.k is None and e.tier == TIER_DISK  # released: demoted
+
+
+def test_library_concurrent_hammer(tmp_path):
+    """Regression for the _rebalance-vs-get race: reader threads doing
+    pinned gets (and consuming ``entry.k`` afterwards, like the link step)
+    while writers force tier rebalances must never observe nulled arrays
+    nor crash."""
+    import threading
+
+    k, v = _kv(1 << 13)
+    per = k.nbytes + v.nbytes
+    lib = KVLibrary(hbm_capacity=2 * per, host_capacity=2 * per,
+                    spool_dir=str(tmp_path))
+    ids = [f"m{i}" for i in range(6)]
+    for m in ids:
+        lib.put("u", m, k, v)
+
+    errors = []
+    stop = threading.Event()
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            m = ids[int(rng.integers(len(ids)))]
+            e = lib.get("u", m, pin=True)
+            if e is None:
+                # legal transient: a writer's re-put evicted the entry (and
+                # its spool file) mid-materialize — get heals to a miss
+                continue
+            try:
+                if e.k is None:          # spooled under the reader
+                    errors.append(f"{m}: k nulled while pinned")
+                else:
+                    _ = e.k.sum()        # actually consume the array
+            finally:
+                lib.unpin(e)
+
+    def writer(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            m = ids[int(rng.integers(len(ids)))]
+            lib.put("u", m, k, v)        # re-put → evict + rebalance
+
+    threads = [threading.Thread(target=reader, args=(i,)) for i in range(4)]
+    threads += [threading.Thread(target=writer, args=(100 + i,))
+                for i in range(2)]
+    for t in threads:
+        t.start()
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not any(t.is_alive() for t in threads), "library deadlocked"
+    assert not errors, errors[:5]
+    # all pins released → pressure can demote again
+    with lib._lock:
+        lib._rebalance()
+    assert all(e._pins == 0 for e in lib._entries.values())
+
+
+def test_per_replica_hbm_accounting(tmp_path):
+    """One replica's HBM pressure demotes ITS LRU holds only — another
+    replica's hot set stays warm (the cluster-affinity seam)."""
+    k, v = _kv(1 << 13)
+    per = k.nbytes + v.nbytes
+    lib = KVLibrary(hbm_capacity=2 * per, host_capacity=64 << 20,
+                    spool_dir=str(tmp_path))
+    for m in ("a", "b", "c"):
+        lib.put("u", m, k, v)
+
+    assert lib.get("u", "a", replica=0) is not None
+    assert lib.get("u", "b", replica=1) is not None
+    assert lib.peek_tier("u", "a", replica=0) == TIER_HBM
+    assert lib.peek_tier("u", "a", replica=1) == TIER_HOST  # not ITS copy
+    time.sleep(0.01)
+    # replica 0 warms two more entries: its budget (2 entries) evicts its
+    # LRU hold on "a" — replica 1's hold on "b" must be untouched
+    assert lib.get("u", "b", replica=0) is not None
+    time.sleep(0.01)
+    assert lib.get("u", "c", replica=0) is not None
+    assert lib.peek_tier("u", "a", replica=0) == TIER_HOST   # demoted
+    assert lib.peek_tier("u", "b", replica=1) == TIER_HBM    # survives
+    assert lib.peek_tier("u", "b", replica=0) == TIER_HBM
+    assert lib.peek_tier("u", "c", replica=0) == TIER_HBM
+    w = lib.warmth("u", ["a", "b", "c", "ghost"], replica=0)
+    assert w == {TIER_HBM: 2, TIER_HOST: 1, TIER_DISK: 0, "miss": 1}
+
+
+def test_loader_inflight_dedup(tmp_path):
+    """Concurrent prefetches of the same (user, media) — from any replica —
+    share ONE in-flight fetch instead of double-issuing it."""
+    from repro.cache import SimulatedLatencyLibrary, TIER_HBM as _HBM
+    lib = SimulatedLatencyLibrary(tier_latency_s={_HBM: 0.2, TIER_HOST: 0.2},
+                                  spool_dir=str(tmp_path))
+    k, v = _kv()
+    lib.put("u", "shared", k, v)
+    loader = ParallelLoader(lib, max_workers=4)
+    h1 = loader.prefetch_handle("u", ["shared"], replica=0)
+    h2 = loader.prefetch_handle("u", ["shared"], replica=1)  # in flight
+    assert h2.records["shared"] is h1.records["shared"]
+    assert loader.dedup_hits == 1
+    assert h1.get("shared") is not None
+    assert h2.get("shared") is not None
+    # ONE library fetch (one simulated-latency sleep) served both handles
+    assert len(lib.get_log) == 1
+    h1.release(), h2.release()
+    # after the fetch retires, a new prefetch issues fresh
+    h3 = loader.prefetch_handle("u", ["shared"])
+    assert h3.records["shared"] is not h1.records["shared"]
     loader.close()
 
 
