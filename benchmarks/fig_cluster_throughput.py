@@ -25,6 +25,17 @@ prefill/decode):
 greedy tokens must equal the single plain ``MPICEngine``'s serving the same
 prompts — routing, replica count, and cache warmth must never change what
 a request decodes.
+
+**Network-tier leg** (storage-backend refactor): a second, self-contained
+comparison where the serving cluster holds NONE of the trace's media
+locally.  With ``peers=`` it pulls each block from a peer host's library
+over real localhost HTTP (``cache/net.py`` — no simulated sleeps on this
+leg); without peers it recomputes every media prefill.  Media here is
+longer (``NET_MEDIA_LEN``) — the paper-scale profile where load beats
+recompute — and the pulled KV must decode token-identical to a cluster
+that had the same blocks uploaded locally (npz → HTTP → admit is
+bit-exact).  Per-tier hit/promote/fetch-latency counters land in
+``BENCH_cluster.json`` under every leg.
 """
 from __future__ import annotations
 
@@ -60,18 +71,23 @@ MAX_NEW = scaled(3, 2)
 LOAD_DELAY_S = scaled(0.45, 0.02)
 REPLICAS = (1, 2, 4)
 ROUTERS = ("random", "affinity")
+# network leg: longer media (paper-scale-ish profile — recompute cost grows
+# with media tokens, a localhost block transfer does not)
+NET_MEDIA_LEN = scaled(192, 48)
+NET_REQUESTS = scaled(6, 2)
+NET_MEDIA_PER_REQ = 2
 
 OUT_PATH = os.environ.get(
     "MPIC_BENCH_OUT",
     "BENCH_cluster.smoke.json" if smoke() else "BENCH_cluster.json")
 
 
-def _prompt(cfg, seed, media_ids, user_id):
+def _prompt(cfg, seed, media_ids, user_id, media_len=MEDIA_LEN):
     r = np.random.default_rng(seed)
     segs = [text_segment(r.integers(8, 200, 5))]
     for mid in media_ids:
         segs.append(media_segment(mid,
-                                  image_embeds(mid, MEDIA_LEN, cfg.d_model)))
+                                  image_embeds(mid, media_len, cfg.d_model)))
         segs.append(text_segment(r.integers(8, 200, 4)))
     return Prompt(segs, user_id=user_id)
 
@@ -207,7 +223,128 @@ def run_leg(model, params, cfg, trace, replicas, router):
         "hbm_hit_rate": round(rep["routing"]["hbm_hit_rate"], 3),
         "routed_per_replica": rep["routing"]["per_replica"],
         "loader_dedup_hits": rep["loader_dedup_hits"],
+        "cache_tiers": rep["cache_tiers"],
         "tokens": [r.output_tokens for r in reqs_a + reqs_b],
+    }
+
+
+# ---------------------------------------------------------------------------
+# network-tier leg: affinity-miss → peer pull vs recompute
+# ---------------------------------------------------------------------------
+
+def _net_trace(cfg):
+    """NET_REQUESTS prompts over distinct long media, all owned by one user
+    (the cross-host case: the media KV exists — on the OTHER host)."""
+    prompts, media_ids = [], []
+    for i in range(NET_REQUESTS):
+        ids = [f"net-m{i}-{j}" for j in range(NET_MEDIA_PER_REQ)]
+        media_ids.extend(ids)
+        prompts.append(_prompt(cfg, 700 + i, ids, "nu",
+                               media_len=NET_MEDIA_LEN))
+    return prompts, media_ids
+
+
+def _net_engine_cfg():
+    return EngineConfig(max_seq_len=1024, decode_slots=2, prefetch_depth=3)
+
+
+def _serve_net_wave(cluster, cfg, prompts):
+    """Warm the jits outside the timed window, then serve the wave."""
+    cluster.upload("w", "net-warm",
+                   image_embeds("net-warm", NET_MEDIA_LEN, cfg.d_model))
+    warm = Request(prompt=_prompt(cfg, 2, ["net-warm"] * NET_MEDIA_PER_REQ,
+                                  "w", media_len=NET_MEDIA_LEN),
+                   max_new_tokens=MAX_NEW, policy="mpic",
+                   policy_kwargs={"k": 4})
+    cluster.submit(warm)
+    cluster.run()
+    for e in cluster.engines:
+        e.finished.clear()
+    reqs = [Request(prompt=p, max_new_tokens=MAX_NEW, policy="mpic",
+                    policy_kwargs={"k": 4}) for p in prompts]
+    t0 = time.perf_counter()
+    for r in reqs:
+        cluster.submit(r)
+    cluster.run()
+    wall = time.perf_counter() - t0
+    return reqs, wall
+
+
+def run_network_legs(model, params, cfg):
+    """Three matched clusters over one wave: media uploaded **locally**
+    (the parity oracle), media pulled from a **peer** host over HTTP, and
+    media **recomputed** from embeds (no cache anywhere).  Real transfers
+    vs real compute — no simulated latency on any of the three."""
+    from repro.cache import KVLibrary, KVPeerServer
+    prompts, media_ids = _net_trace(cfg)
+
+    def _cluster(static_lib=None, peers=None):
+        return MPICCluster(
+            model, params, _net_engine_cfg(),
+            ClusterConfig(replicas=2, router="affinity", router_seed=0,
+                          max_queue_per_replica=8, peers=peers),
+            static_library=static_lib)
+
+    # leg 0 — local: every block uploaded into the serving cluster (the
+    # baseline MPIC reuse path; its tokens are the parity oracle)
+    local = _cluster()
+    for mid in media_ids:
+        local.upload("nu", mid, image_embeds(mid, NET_MEDIA_LEN,
+                                             cfg.d_model))
+    reqs_local, wall_local = _serve_net_wave(local, cfg, prompts)
+    local.close()
+
+    # source host: owns every block (spool-dir library behind a peer
+    # server); built by one plain engine's upload/precompute path
+    src = MPICEngine(model, params, _net_engine_cfg(),
+                     static_library=KVLibrary(
+                         spool_dir="/tmp/mpic_spool_net_src"))
+    for mid in media_ids:
+        src.upload("nu", mid, image_embeds(mid, NET_MEDIA_LEN, cfg.d_model))
+    server = KVPeerServer(src.static_lib)
+
+    # leg 1 — peer pull: the serving cluster holds NOTHING locally; every
+    # affinity miss pulls the peer's block over localhost HTTP
+    pull = _cluster(static_lib=KVLibrary(
+        spool_dir="/tmp/mpic_spool_net_pull"), peers=[server.address])
+    reqs_pull, wall_pull = _serve_net_wave(pull, cfg, prompts)
+    pull_rep = pull.report()
+    pull.close()
+    server.close()
+
+    # leg 2 — recompute: no local blocks, no peers → full media prefill
+    recomp = _cluster(static_lib=KVLibrary(
+        spool_dir="/tmp/mpic_spool_net_recomp"))
+    reqs_recomp, wall_recomp = _serve_net_wave(recomp, cfg, prompts)
+    recomp_rep = recomp.report()
+    recomp.close()
+
+    # parity: a pulled block must decode exactly like the local upload
+    # (npz → HTTP → admit is bit-exact).  The recompute leg legitimately
+    # differs: exact prefill vs position-independent reuse.
+    assert ([r.output_tokens for r in reqs_pull]
+            == [r.output_tokens for r in reqs_local]), \
+        "network-pulled KV broke token parity vs local upload"
+    net = pull_rep["cache_tiers"]["network"]
+    assert net["fetches"] == len(media_ids), \
+        f"expected one pull per block, got {net['fetches']}"
+    assert net["promotes"] == len(media_ids)
+    return {
+        "requests": NET_REQUESTS,
+        "media_blocks": len(media_ids),
+        "media_len": NET_MEDIA_LEN,
+        "wall_local_s": round(wall_local, 3),
+        "wall_peer_pull_s": round(wall_pull, 3),
+        "wall_recompute_s": round(wall_recomp, 3),
+        "pull_vs_recompute_speedup": round(wall_recomp / wall_pull, 2),
+        "mean_ttft_pull_ms": round(
+            1e3 * float(np.mean([r.ttft for r in reqs_pull])), 1),
+        "mean_ttft_recompute_ms": round(
+            1e3 * float(np.mean([r.ttft for r in reqs_recomp])), 1),
+        "network_fetch_s": net["fetch_s"],
+        "pull_cache_tiers": pull_rep["cache_tiers"],
+        "recompute_cache_tiers": recomp_rep["cache_tiers"],
+        "token_parity_pull_vs_local": True,
     }
 
 
@@ -251,13 +388,22 @@ def main():
         assert scaling >= 1.5, \
             f"4-replica throughput scaling {scaling} < 1.5x"
 
+    net = run_network_legs(model, params, cfg)
+    print(f"  network tier: pull {net['wall_peer_pull_s']}s vs recompute "
+          f"{net['wall_recompute_s']}s "
+          f"({net['pull_vs_recompute_speedup']}x)", flush=True)
+    if not smoke():
+        assert net["wall_peer_pull_s"] < net["wall_recompute_s"], \
+            "peer pull must beat recompute at the paper-scale load profile"
+
     for r in rows:
         r["ttft_ms"] = r["wave_b_mean_ttft_ms"]   # emit() CSV contract
     emit(rows, "cluster")
     out = {"bench": "cluster_throughput", "rows": rows,
            "scaling_4x_vs_1x_affinity": scaling,
            "scaling_4x_vs_1x_random": scaling_random,
-           "affinity_hbm_edge_at_4x": affinity_edge}
+           "affinity_hbm_edge_at_4x": affinity_edge,
+           "network_tier": net}
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[cluster] scaling 4x/1x: affinity {scaling}x, random "

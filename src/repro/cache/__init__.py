@@ -1,12 +1,24 @@
-from repro.cache.library import (
-    Entry,
-    KVLibrary,
-    SimulatedLatencyLibrary,
+from repro.cache.backends import (
     TIER_BW,
     TIER_DISK,
     TIER_HBM,
     TIER_HOST,
+    TIER_NETWORK,
+    BlockMetadata,
+    DiskBackend,
+    KVPayload,
+    MemoryBackend,
+    NetworkBackend,
+    StorageBackend,
+    content_key,
+    scope_digest,
 )
+from repro.cache.library import (
+    Entry,
+    KVLibrary,
+    SimulatedLatencyLibrary,
+)
+from repro.cache.net import DictBlockStore, KVPeerServer, PeerTransport
 from repro.cache.paged import PagedConfig, PagedKVPool
 from repro.cache.transfer import (
     LoadRecord,
@@ -18,7 +30,10 @@ from repro.cache.transfer import (
 
 __all__ = [
     "Entry", "KVLibrary", "SimulatedLatencyLibrary",
-    "TIER_BW", "TIER_DISK", "TIER_HBM", "TIER_HOST",
+    "TIER_BW", "TIER_DISK", "TIER_HBM", "TIER_HOST", "TIER_NETWORK",
+    "StorageBackend", "MemoryBackend", "DiskBackend", "NetworkBackend",
+    "BlockMetadata", "KVPayload", "content_key", "scope_digest",
+    "KVPeerServer", "PeerTransport", "DictBlockStore",
     "PagedConfig", "PagedKVPool",
     "LoadRecord", "ParallelLoader", "PrefetchHandle", "TransferPlan",
     "plan_transfers",

@@ -1,0 +1,537 @@
+"""Storage backends for the tiered KV library (memory / disk / network).
+
+MPIC's central bet (§3–4) is that position-independent KV blocks can live
+on *slow* media because loading overlaps recompute.  This module is the
+seam that makes "slow media" pluggable: every tier implements one
+:class:`StorageBackend` contract (``put`` / ``get`` / ``delete`` /
+``contains`` / ``stats``) over content-hash block keys, and
+:class:`~repro.cache.library.KVLibrary` becomes a pure tier orchestrator
+(promote on hit, demote on pressure, pin/unpin spanning tiers) that never
+touches a file or socket itself.
+
+Three backends ship here:
+
+* :class:`MemoryBackend` — resident blocks (HBM device arrays + host
+  numpy).  Owns the HBM/host byte budgets and the per-replica LRU
+  accounting that used to live inline in ``Entry``/``_rebalance``.
+* :class:`DiskBackend` — the npz spool directory (wire format owned by
+  ``cache/quant.py``, so quantized blocks spool int8).  Reads are
+  verified against the content hash in the block key: a truncated or
+  corrupt file is deleted and reported as a miss, never surfaced as data.
+* :class:`NetworkBackend` — peer fetch over the small HTTP transport in
+  ``cache/net.py`` (timeout + single retry, checksum-verified bodies), so
+  a cluster replica that misses memory *and* disk pulls a peer's spooled
+  block instead of recomputing.
+
+**Key space.**  Block keys are content hashes salted with the owning
+scope: ``sha1(stored arrays)[:32] + "-" + sha1(repr(scope))[:8]``.  The
+content half makes disk/network reads self-verifying (the reader recomputes
+the hash over what it loaded); the scope salt preserves the library's user
+isolation — two users uploading identical media get distinct keys, so
+neither can observe or delete the other's block.  Hashes cover the
+*stored* arrays (int8 + scales when quantized), so verification works on
+exactly the bytes a backend persists.
+
+**Adding a backend** (see docs/ARCHITECTURE.md for the walkthrough):
+subclass :class:`StorageBackend`, implement the five methods over your
+medium using :func:`payload_to_bytes` / :func:`payload_from_bytes` for
+serialization, add a tier constant + bandwidth to ``TIER_BW``, and teach
+``KVLibrary._fetch_into`` where your tier sits in the fetch order.
+Backends are storage only — eviction policy, pinning, TTLs, and locking
+all stay in the library, so a backend never needs its own concurrency
+story beyond an internal lock around its counters.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import hashlib
+import io
+import os
+import threading
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cache.quant import QuantizedKV, spool_payload, unspool_payload
+
+TIER_HBM = "hbm"
+TIER_HOST = "host"
+TIER_DISK = "disk"
+TIER_NETWORK = "network"
+
+# simulated per-tier load bandwidths (bytes/s) for the transfer scheduler;
+# real loads go through numpy / the peer transport regardless.  Network sits
+# below disk: a 10 GbE peer link (~1.25 GB/s) is the paper's worst tier that
+# still beats recompute at LLaVA scale (Fig. 6).
+TIER_BW = {TIER_HBM: float("inf"), TIER_HOST: 80e9,
+           TIER_DISK: 3.5e9, TIER_NETWORK: 1.25e9}
+
+
+# ---------------------------------------------------------------------------
+# payload + metadata
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVPayload:
+    """The movable bytes of one KV block.
+
+    Either the fp arrays (``k``/``v``), the int8 storage (``qk``/``qv``),
+    or both (a dequantized quantized block holds both until demotion).
+    Backends serialize the *stored* form (int8 wins when present) through
+    ``cache/quant.py``'s spool wire format.
+    """
+    k: Optional[np.ndarray] = None       # (L, S, Hkv, Dh)
+    v: Optional[np.ndarray] = None
+    qk: Optional[QuantizedKV] = None
+    qv: Optional[QuantizedKV] = None
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes — both copies count (capacity must see the sum)."""
+        total = 0
+        if self.qk is not None:
+            total += self.qk.nbytes + self.qv.nbytes
+        if self.k is not None:
+            total += self.k.nbytes + self.v.nbytes
+        return total
+
+    @property
+    def stored_nbytes(self) -> int:
+        """Bytes a backend persists: int8 storage when present, else fp."""
+        if self.qk is not None:
+            return self.qk.nbytes + self.qv.nbytes
+        if self.k is not None:
+            return self.k.nbytes + self.v.nbytes
+        return 0
+
+    def stored_arrays(self) -> Tuple[np.ndarray, ...]:
+        """The arrays that actually hit the medium, in hash order."""
+        if self.qk is not None:
+            return (self.qk.q, self.qk.scale, self.qv.q, self.qv.scale)
+        return (self.k, self.v)
+
+    @property
+    def dtype(self) -> Optional[str]:
+        if self.k is not None:
+            return str(self.k.dtype)
+        if self.qk is not None:
+            return str(self.qk.q.dtype)
+        return None
+
+    @property
+    def shape(self) -> Optional[Tuple[int, ...]]:
+        if self.k is not None:
+            return tuple(self.k.shape)
+        if self.qk is not None:
+            return tuple(self.qk.q.shape)
+        return None
+
+
+@dataclasses.dataclass
+class BlockMetadata:
+    """Per-block bookkeeping the orchestrator needs without the payload.
+
+    Lives on the library's ``Entry`` and travels (partially) with network
+    fetches.  Mutation contract: every field here is guarded by the
+    *library* lock — backends treat metadata as read-only hints.
+    """
+    media_id: str
+    key: Optional[str] = None          # content-hash block key (see content_key)
+    ident: Optional[str] = None        # scope digest — network/spool address
+    nbytes: int = 0                    # stored bytes once known (survives spool)
+    dtype: Optional[str] = None
+    shape: Optional[Tuple[int, ...]] = None
+    tier: str = TIER_HBM
+    pins: int = 0                      # >0: a consumer is reading the arrays
+    # replica id -> last_used on that replica (per-replica HBM warmth)
+    hbm_replicas: Dict = dataclasses.field(default_factory=dict)
+    created: float = 0.0
+    last_used: float = 0.0             # last touch, any replica
+    expires: float = float("inf")
+
+
+def content_key(payload: KVPayload, scope) -> str:
+    """Content-hash block key: ``sha1(stored arrays)[:32]-sha1(scope)[:8]``.
+
+    Hashes the *stored* arrays (int8 + scales when quantized) so a disk or
+    network reader can re-verify exactly the bytes it loaded.  The scope
+    salt keeps user isolation: identical content under different scopes
+    yields different keys (no cross-user dedup, hence no cross-user
+    observe/delete channel).
+    """
+    h = hashlib.sha1()
+    for a in payload.stored_arrays():
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return f"{h.hexdigest()[:32]}-{scope_digest(scope)[:8]}"
+
+
+def scope_digest(scope) -> str:
+    """Stable digest of a library scope key (``(user_id, media_id)``).
+
+    Used as the spool filename and the network block address (``ident``).
+    A stable hash, not ``hash()``: PYTHONHASHSEED randomization would
+    orphan spool files across restarts and break cross-host addressing.
+    """
+    return hashlib.sha1(repr(scope).encode()).hexdigest()[:24]
+
+
+def verify_payload(payload: KVPayload, key: str) -> bool:
+    """Recompute the content half of ``key`` over ``payload``'s stored
+    arrays.  True iff the bytes read back are the bytes that were hashed
+    at ``put`` time — the disk/network corruption guard."""
+    h = hashlib.sha1()
+    for a in payload.stored_arrays():
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return key.split("-")[0] == h.hexdigest()[:32]
+
+
+def payload_to_bytes(payload: KVPayload) -> bytes:
+    """Serialize a payload to the npz spool wire format (network bodies)."""
+    buf = io.BytesIO()
+    spool_payload(buf, payload)
+    return buf.getvalue()
+
+
+def payload_from_bytes(data: bytes) -> KVPayload:
+    """Parse spool-wire bytes back into a payload.  Raises on truncated or
+    non-npz input — callers map that to a tier miss."""
+    fields = unspool_payload(io.BytesIO(data))
+    return KVPayload(**fields)
+
+
+# ---------------------------------------------------------------------------
+# the backend contract
+# ---------------------------------------------------------------------------
+
+class StorageBackend(abc.ABC):
+    """One storage tier behind the KV library.
+
+    Contract (all methods thread-safe; keys are opaque strings — the
+    library uses :func:`content_key` values):
+
+    * ``put(key, payload, meta=None)`` — persist; overwrite is idempotent.
+    * ``get(key)`` — return a :class:`KVPayload` or ``None``.  **Never
+      raises for data-level failures**: a corrupt, truncated, or
+      unreachable block is a miss (counted in ``stats()``), so the caller
+      falls back to the next tier or to recompute.
+    * ``delete(key)`` — idempotent; missing keys are a no-op.
+    * ``contains(key)`` — cheap existence probe (no payload transfer).
+    * ``stats()`` — counter snapshot: ``hits``/``misses``/``puts``/
+      ``deletes``/``bytes_read``/``bytes_written``/``fetch_s`` (cumulative
+      in-backend fetch seconds) plus backend-specific extras.
+
+    Backends hold **no policy**: eviction, pinning, TTLs, promotion order
+    and all cross-tier locking live in :class:`~repro.cache.library.\
+KVLibrary`.  A backend only needs an internal lock around its own
+    counters/index (``self._lock`` here).
+    """
+
+    name: str = "?"
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counters: Dict[str, float] = {
+            "hits": 0, "misses": 0, "puts": 0, "deletes": 0,
+            "bytes_read": 0, "bytes_written": 0, "fetch_s": 0.0,
+        }
+
+    def _count(self, **kv) -> None:
+        with self._lock:
+            for k, n in kv.items():
+                self.counters[k] = self.counters.get(k, 0) + n
+
+    @abc.abstractmethod
+    def put(self, key: str, payload: KVPayload,
+            meta: Optional[BlockMetadata] = None) -> None: ...
+
+    @abc.abstractmethod
+    def get(self, key: str) -> Optional[KVPayload]: ...
+
+    @abc.abstractmethod
+    def delete(self, key: str) -> None: ...
+
+    @abc.abstractmethod
+    def contains(self, key: str) -> bool: ...
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = dict(self.counters)
+        out["backend"] = self.name
+        return out
+
+
+# ---------------------------------------------------------------------------
+# memory
+# ---------------------------------------------------------------------------
+
+class MemoryBackend(StorageBackend):
+    """Resident tier: HBM device arrays + host numpy, plus the byte budgets.
+
+    Holds ``(payload, meta)`` by block key and owns what used to be inline
+    in the library: the HBM/host capacities and the per-replica LRU
+    accounting.  ``demote_replicas`` implements the cluster rule — each
+    replica's device budget is its own, so replica r over budget drops *r's
+    hold* on r's LRU blocks, never another replica's; a block whose last
+    hold drops falls back to host tier.
+
+    Locking: the store dict and counters are guarded by the backend lock,
+    but metadata mutation (``demote_replicas``) must run under the
+    *library* lock — the library is the only writer of ``BlockMetadata``.
+    """
+
+    name = TIER_HBM  # resident tier; hosts both "hbm" and "host" accounting
+
+    def __init__(self, *, hbm_capacity: int = 2 << 30,
+                 host_capacity: int = 16 << 30):
+        super().__init__()
+        self.hbm_capacity = hbm_capacity
+        self.host_capacity = host_capacity
+        self._store: Dict[str, Tuple[KVPayload, Optional[BlockMetadata]]] = {}
+
+    def put(self, key: str, payload: KVPayload,
+            meta: Optional[BlockMetadata] = None) -> None:
+        with self._lock:
+            self._store[key] = (payload, meta)
+        self._count(puts=1, bytes_written=payload.nbytes)
+
+    def get(self, key: str) -> Optional[KVPayload]:
+        with self._lock:
+            hit = self._store.get(key)
+        if hit is None:
+            self._count(misses=1)
+            return None
+        self._count(hits=1, bytes_read=hit[0].nbytes)
+        return hit[0]
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            existed = self._store.pop(key, None) is not None
+        if existed:
+            self._count(deletes=1)
+
+    def contains(self, key: str) -> bool:
+        with self._lock:
+            return key in self._store
+
+    # -- accounting helpers (called by the library under ITS lock) ---------
+    def demote_replicas(self, metas: Iterable[BlockMetadata],
+                        nbytes_of) -> int:
+        """Per-replica LRU pass: for every replica over ``hbm_capacity``,
+        drop that replica's hold on its least-recently-used blocks until it
+        fits.  ``nbytes_of(meta)`` supplies live resident bytes (payloads
+        outlive metadata snapshots).  Returns the number of holds dropped.
+        Caller holds the library lock (metadata writer)."""
+        holders: Dict = {}
+        for m in metas:
+            for r in m.hbm_replicas:
+                holders.setdefault(r, []).append(m)
+        dropped = 0
+        for r, held in holders.items():
+            used = sum(nbytes_of(m) for m in held)
+            held.sort(key=lambda m: m.hbm_replicas[r])
+            for m in held:
+                if used <= self.hbm_capacity:
+                    break
+                del m.hbm_replicas[r]
+                if not m.hbm_replicas:
+                    m.tier = TIER_HOST
+                used -= nbytes_of(m)
+                dropped += 1
+        return dropped
+
+    def stats(self) -> dict:
+        out = super().stats()
+        with self._lock:
+            out["blocks"] = len(self._store)
+            out["resident_bytes"] = sum(p.nbytes
+                                        for p, _ in self._store.values())
+        out["hbm_capacity"] = self.hbm_capacity
+        out["host_capacity"] = self.host_capacity
+        return out
+
+
+# ---------------------------------------------------------------------------
+# disk
+# ---------------------------------------------------------------------------
+
+class DiskBackend(StorageBackend):
+    """Spool-directory tier: one npz file per block, named by block key.
+
+    Absorbs the library's legacy ``_spool`` file handling; the wire format
+    (quantized int8 vs raw fp fields) stays in ``cache/quant.py``.  Reads
+    are verified against the content hash embedded in the key — a corrupt
+    or truncated file is unlinked and reported as a miss (``corrupt``
+    counter), so the library falls through to the network tier or to
+    recompute instead of linking garbage KV.
+    """
+
+    name = TIER_DISK
+
+    def __init__(self, spool_dir: str):
+        super().__init__()
+        self.spool_dir = spool_dir
+        os.makedirs(spool_dir, exist_ok=True)
+        self.counters["corrupt"] = 0
+
+    def path_for(self, key: str) -> str:
+        return os.path.join(self.spool_dir, f"{key}.npz")
+
+    def put(self, key: str, payload: KVPayload,
+            meta: Optional[BlockMetadata] = None) -> None:
+        path = self.path_for(key)
+        spool_payload(path, payload)
+        self._count(puts=1, bytes_written=payload.stored_nbytes)
+
+    def get(self, key: str) -> Optional[KVPayload]:
+        path = self.path_for(key)
+        t0 = time.perf_counter()
+        try:
+            fields = unspool_payload(path)
+        except FileNotFoundError:
+            self._count(misses=1)
+            return None
+        except Exception:
+            # truncated zip / bad magic / short read: unlink the junk so the
+            # next fetch doesn't re-parse it, report a miss
+            self._corrupt(path)
+            return None
+        payload = KVPayload(**fields)
+        if not verify_payload(payload, key):
+            self._corrupt(path)
+            return None
+        self._count(hits=1, bytes_read=payload.stored_nbytes,
+                    fetch_s=time.perf_counter() - t0)
+        return payload
+
+    def _corrupt(self, path: str) -> None:
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        self._count(misses=1, corrupt=1)
+
+    def delete(self, key: str) -> None:
+        try:
+            os.unlink(self.path_for(key))
+        except FileNotFoundError:
+            return
+        self._count(deletes=1)
+
+    def contains(self, key: str) -> bool:
+        return os.path.exists(self.path_for(key))
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["spool_dir"] = self.spool_dir
+        return out
+
+
+# ---------------------------------------------------------------------------
+# network
+# ---------------------------------------------------------------------------
+
+class NetworkBackend(StorageBackend):
+    """Peer-fetch tier: pull blocks from other hosts' libraries over HTTP.
+
+    Wraps one :class:`~repro.cache.net.PeerTransport` per peer and tries
+    them in order.  Failure semantics (implemented in the transport, relied
+    on here): per-request timeout, a **single retry** on transient errors
+    (connect/timeout), no retry on a definitive 404, and checksum-verified
+    bodies — so the worst case is one bounded stall per peer and the
+    library falls back to recompute, never wedges.
+
+    Addressing: blocks are fetched by scope ``ident`` (the same digest the
+    spool filename used historically, so it is stable across hosts that
+    share a scope).  The content-hash key travels in the ``X-Block-Key``
+    header and the body is re-verified against it client-side.
+    """
+
+    name = TIER_NETWORK
+
+    def __init__(self, peers: Iterable = ()):
+        super().__init__()
+        # late import: cache/net.py imports nothing from here, but keep the
+        # socket machinery out of import-time for library-only users
+        from repro.cache.net import PeerTransport
+        self.transports: List = [
+            p if hasattr(p, "fetch") else PeerTransport(p) for p in peers]
+        self.counters["timeouts"] = 0
+        self.counters["retries"] = 0
+
+    def put(self, key: str, payload: KVPayload,
+            meta: Optional[BlockMetadata] = None) -> None:
+        """Publish to the first reachable peer (used by tests and by
+        explicit block export; the serving path publishes implicitly by
+        answering peer GETs from its own library)."""
+        data = payload_to_bytes(payload)
+        ttl = (meta.expires - time.time()) if meta is not None else None
+        for t in self.transports:
+            if t.push(key, data, block_key=key, ttl=ttl):
+                self._count(puts=1, bytes_written=len(data))
+                return
+
+    def get(self, key: str) -> Optional[KVPayload]:
+        t0 = time.perf_counter()
+        for t in self.transports:
+            data, hdrs = t.fetch(key)
+            self._count(retries=t.last_retries,
+                        timeouts=t.last_timeouts)
+            if data is None:
+                continue
+            try:
+                payload = payload_from_bytes(data)
+            except Exception:
+                continue        # undecodable body: treat as a peer miss
+            claimed = hdrs.get("X-Block-Key") or key
+            if not verify_payload(payload, claimed):
+                continue        # checksum mismatch: never link garbage
+            self._count(hits=1, bytes_read=len(data),
+                        fetch_s=time.perf_counter() - t0)
+            return payload
+        self._count(misses=1, fetch_s=time.perf_counter() - t0)
+        return None
+
+    def get_with_headers(self, key: str):
+        """Like :meth:`get` but also returns the peer's response headers
+        (block key, media id, remaining TTL) — the library uses these to
+        admit a fetched block it had no local entry for."""
+        t0 = time.perf_counter()
+        for t in self.transports:
+            data, hdrs = t.fetch(key)
+            self._count(retries=t.last_retries,
+                        timeouts=t.last_timeouts)
+            if data is None:
+                continue
+            try:
+                payload = payload_from_bytes(data)
+            except Exception:
+                continue
+            claimed = hdrs.get("X-Block-Key")
+            if claimed and not verify_payload(payload, claimed):
+                continue
+            self._count(hits=1, bytes_read=len(data),
+                        fetch_s=time.perf_counter() - t0)
+            return payload, hdrs
+        self._count(misses=1, fetch_s=time.perf_counter() - t0)
+        return None, {}
+
+    def delete(self, key: str) -> None:
+        for t in self.transports:
+            if t.remove(key):
+                self._count(deletes=1)
+
+    def contains(self, key: str) -> bool:
+        return any(t.probe(key) for t in self.transports)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["peers"] = [t.address for t in self.transports]
+        return out

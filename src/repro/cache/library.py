@@ -4,136 +4,277 @@ The **static library** stores KV caches of user-uploaded files, logically
 separated per user (user A cannot link user B's cache).  The **dynamic
 library** stores the MRAG corpus, shared and refreshed by the operator.
 
-Entries live on a tier: HBM (device arrays) → HOST (numpy) → DISK
-(npz in a spool dir).  A single image KV can reach ~1 GB at
-LLaVA scale (paper §4.1), so HBM capacity is tight and entries demote under
-pressure; expired entries are deleted (the Fig. 6 "m misses" path).
+Since the storage-backend refactor, :class:`KVLibrary` is a pure **tier
+orchestrator**: the bytes live in pluggable
+:class:`~repro.cache.backends.StorageBackend` tiers —
 
-**Multi-replica serving** (``serving/cluster.py``): one library is shared by
-N engine replicas.  Two seams make that safe and useful:
+    memory (HBM/host)  ⇄  disk (npz spool)  ⇄  network (peer fetch)
 
-  * **Per-replica HBM accounting** — the HBM tier models *device* residency,
-    and each replica is its own device.  A ``get(..., replica=r)`` marks the
-    entry HBM-warm *on replica r* (``Entry.hbm_replicas``), each replica's
-    holdings are LRU-rebalanced against ``hbm_capacity`` independently, and
-    demoting replica A's copy never evicts replica B's hot set.  The
-    cache-affinity router reads this map (``warmth``/``peek_tier`` with
-    ``replica=``) to route requests where their media KV is already warm.
-    With ``replica=None`` everywhere (single engine) the behavior is exactly
-    the legacy single-device accounting.
+— and the library owns only the policy: content-hash block keys, promote
+on hit, demote on pressure, pin/unpin spanning tiers, TTL expiry, and the
+per-tier hit/promote/demote counters surfaced through :meth:`stats`.  A
+single image KV can reach ~1 GB at LLaVA scale (paper §4.1), so HBM
+capacity is tight and entries demote under pressure; expired entries are
+deleted (the Fig. 6 "m misses" path).  A replica that misses memory *and*
+disk pulls a peer's spooled block over the network tier (``peers=`` /
+:meth:`connect_peers`) instead of recomputing — see
+``docs/ARCHITECTURE.md`` for the full tier state machine.
+
+**Multi-replica serving** (``serving/cluster.py``): one library is shared
+by N engine replicas.  Two seams make that safe and useful:
+
+  * **Per-replica HBM accounting** — the HBM tier models *device*
+    residency, and each replica is its own device.  A ``get(...,
+    replica=r)`` marks the entry HBM-warm *on replica r*
+    (``BlockMetadata.hbm_replicas``), each replica's holdings are
+    LRU-rebalanced against ``hbm_capacity`` independently
+    (:meth:`MemoryBackend.demote_replicas`), and demoting replica A's copy
+    never evicts replica B's hot set.  The cache-affinity router reads
+    this map (``warmth``/``peek_tier`` with ``replica=``) to route
+    requests where their media KV is already warm.  With ``replica=None``
+    everywhere (single engine) the behavior is exactly the legacy
+    single-device accounting.
   * **Pinning** — ``_rebalance`` used to be able to spool an entry to disk
     (nulling ``k``/``v``) *between* a concurrent reader receiving it from
     ``get`` and consuming its arrays at link time.  Entries handed out by
-    the serving path are now pinned (``get(pin=True)``/``try_pin``/
-    ``unpin``, held by
-    ``PrefetchHandle`` until the engine finalizes the prefill) and
-    ``_spool`` skips pinned entries the same way it skips mid-materialize
-    ones.
+    the serving path are pinned (``get(pin=True)``/``try_pin``/``unpin``,
+    held by :class:`~repro.cache.transfer.PrefetchHandle` until the engine
+    finalizes the prefill) and ``_spool`` skips pinned entries the same
+    way it skips mid-materialize ones.
+
+**Locking model** (every public method's contract references these):
+
+  * ``KVLibrary._lock`` (RLock) guards the entry map, ``_by_ident``, all
+    :class:`BlockMetadata` mutation, and pin counts.
+  * ``Entry._mlock`` serializes materialization of one entry, so N loader
+    workers fetching the same block do one disk/network read.
+  * Ordering invariant: code MAY take ``_lock`` while holding ``_mlock``;
+    nothing may **block** on ``_mlock`` while holding ``_lock`` (``_spool``
+    and ``_evict`` use a non-blocking acquire / no acquire).  Slow I/O
+    (disk read, peer fetch) therefore never stalls library operations.
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
 import os
 import threading
 import time
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.cache.quant import QuantizedKV, dequantize_kv, quantize_kv
+from repro.cache.backends import (
+    TIER_BW,
+    TIER_DISK,
+    TIER_HBM,
+    TIER_HOST,
+    TIER_NETWORK,
+    BlockMetadata,
+    DiskBackend,
+    KVPayload,
+    MemoryBackend,
+    NetworkBackend,
+    content_key,
+    payload_to_bytes,
+    scope_digest,
+)
+from repro.cache.quant import (      # noqa: F401  (re-export: legacy imports)
+    QuantizedKV,
+    dequantize_kv,
+    quantize_kv,
+    unspool_payload,
+)
 
-TIER_HBM = "hbm"
-TIER_HOST = "host"
-TIER_DISK = "disk"
-
-# simulated per-tier load bandwidths (bytes/s) for the transfer scheduler;
-# real loads go through numpy/np.load regardless
-TIER_BW = {TIER_HBM: float("inf"), TIER_HOST: 80e9, TIER_DISK: 3.5e9}
+__all__ = [
+    "TIER_HBM", "TIER_HOST", "TIER_DISK", "TIER_NETWORK", "TIER_BW",
+    "Entry", "KVLibrary", "SimulatedLatencyLibrary",
+]
 
 
-@dataclasses.dataclass
 class Entry:
-    media_id: str
-    k: np.ndarray            # (L, S, Hkv, Dh)
-    v: np.ndarray
-    tier: str = TIER_HBM
-    created: float = 0.0
-    last_used: float = 0.0
-    expires: float = float("inf")
-    path: Optional[str] = None   # disk spool path
-    qk: Optional[QuantizedKV] = None   # int8 storage (quantized library)
-    qv: Optional[QuantizedKV] = None
-    # byte size retained while k/v are spooled out; 0 until known.  Must be a
-    # real field: a disk-tier entry that never went through ``_spool`` (e.g.
-    # constructed directly, or a crash-recovered spool file) still has nbytes.
-    _nbytes: int = 0
-    # replica id -> last_used on that replica: which engine replicas hold
-    # this entry HBM-resident (cluster serving; empty on a single engine)
-    hbm_replicas: Dict = dataclasses.field(default_factory=dict)
-    # pin count: >0 means a consumer received this entry from ``get`` and is
-    # still reading its arrays — ``_spool`` must not null them (guarded by
-    # the library lock)
-    _pins: int = 0
-    # serializes concurrent ``materialize`` calls from ParallelLoader workers
-    _mlock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, repr=False, compare=False)
+    """One KV block as the orchestrator sees it: metadata + maybe-resident
+    payload.
+
+    The movable bytes live in :class:`~repro.cache.backends.KVPayload`
+    (``self.payload``) and the bookkeeping in
+    :class:`~repro.cache.backends.BlockMetadata` (``self.meta``); the
+    legacy flat attributes (``k``/``v``/``qk``/``qv``/``tier``/
+    ``last_used``/``hbm_replicas``/``_pins``/``_nbytes``) are forwarding
+    properties, so code and tests written against the pre-backend Entry
+    keep working unchanged.
+
+    Residency contract: ``e.k is None and e.qk is None`` ⟺ the payload
+    has been demoted out of memory (disk or network tier).  Reading the
+    arrays without pinning is only safe while holding the library lock;
+    across a lock release, hold a pin (``get(pin=True)``/``try_pin``) or
+    the arrays may be nulled by a concurrent ``_spool``.
+    """
+
+    def __init__(self, media_id: str, k=None, v=None, tier: str = TIER_HBM,
+                 created: float = 0.0, last_used: float = 0.0,
+                 expires: float = float("inf"), path: Optional[str] = None,
+                 qk: Optional[QuantizedKV] = None,
+                 qv: Optional[QuantizedKV] = None,
+                 _nbytes: int = 0, hbm_replicas: Optional[Dict] = None,
+                 _pins: int = 0):
+        self.payload = KVPayload(k=k, v=v, qk=qk, qv=qv)
+        self.meta = BlockMetadata(
+            media_id=media_id, tier=tier, created=created,
+            last_used=last_used, expires=expires, nbytes=_nbytes,
+            pins=_pins, hbm_replicas=hbm_replicas or {},
+            dtype=self.payload.dtype, shape=self.payload.shape)
+        self.path = path             # disk spool path (None until spooled)
+        self._owner: Optional["KVLibrary"] = None   # routes tier fetches
+        # serializes concurrent ``materialize`` calls from loader workers
+        self._mlock = threading.Lock()
+
+    # -- legacy flat surface (forwarding properties) -----------------------
+    media_id = property(lambda s: s.meta.media_id)
+    k = property(lambda s: s.payload.k,
+                 lambda s, x: setattr(s.payload, "k", x))
+    v = property(lambda s: s.payload.v,
+                 lambda s, x: setattr(s.payload, "v", x))
+    qk = property(lambda s: s.payload.qk,
+                  lambda s, x: setattr(s.payload, "qk", x))
+    qv = property(lambda s: s.payload.qv,
+                  lambda s, x: setattr(s.payload, "qv", x))
+    tier = property(lambda s: s.meta.tier,
+                    lambda s, x: setattr(s.meta, "tier", x))
+    created = property(lambda s: s.meta.created,
+                       lambda s, x: setattr(s.meta, "created", x))
+    last_used = property(lambda s: s.meta.last_used,
+                         lambda s, x: setattr(s.meta, "last_used", x))
+    expires = property(lambda s: s.meta.expires,
+                       lambda s, x: setattr(s.meta, "expires", x))
+    hbm_replicas = property(lambda s: s.meta.hbm_replicas,
+                            lambda s, x: setattr(s.meta, "hbm_replicas", x))
+    _pins = property(lambda s: s.meta.pins,
+                     lambda s, x: setattr(s.meta, "pins", x))
+    _nbytes = property(lambda s: s.meta.nbytes,
+                       lambda s, x: setattr(s.meta, "nbytes", x))
 
     @property
     def nbytes(self) -> int:
         """Resident bytes: a dequantized entry holds BOTH the int8 storage
-        and the fp32 compute copy, and capacity must see the sum."""
-        total = 0
-        if self.qk is not None:
-            total += self.qk.nbytes + self.qv.nbytes
-        if self.k is not None:
-            total += self.k.nbytes + self.v.nbytes
-        return total if total else self._nbytes
+        and the fp32 compute copy, and capacity must see the sum.  Falls
+        back to the stored size recorded at demotion time."""
+        total = self.payload.nbytes
+        return total if total else self.meta.nbytes
 
     def materialize(self) -> "Entry":
+        """Make the arrays resident (promote from disk/network if needed)
+        and dequantized.  Thread-safe: concurrent callers serialize on the
+        per-entry ``_mlock``, so one slow fetch serves all of them.  Raises
+        ``FileNotFoundError`` when every lower tier misses — callers treat
+        that as a cache miss and fall back to recompute."""
         with self._mlock:
             self._materialize_locked()
         return self
 
     def _materialize_locked(self) -> None:
         """Body of :meth:`materialize`; caller holds ``_mlock``."""
-        if self.tier == TIER_DISK and self.k is None and self.qk is None:
-            with np.load(self.path) as z:
-                if "qk" in z:
-                    self.qk = QuantizedKV(z["qk"], z["qk_scale"])
-                    self.qv = QuantizedKV(z["qv"], z["qv_scale"])
-                else:
-                    self.k, self.v = z["k"], z["v"]
+        if (self.tier in (TIER_DISK, TIER_NETWORK)
+                and self.k is None and self.qk is None):
+            if self._owner is not None:
+                self._owner._fetch_into(self)
+            else:
+                # direct-constructed entry (tests / crash recovery): read
+                # its spool file without backend routing
+                for f, val in unspool_payload(self.path).items():
+                    setattr(self.payload, f, val)
             # the KV now lives in host memory: flip the tier so capacity
-            # accounting sees the resident bytes and _rebalance can
-            # demote it again under pressure (the spool file is
-            # rewritten then) — otherwise every accessed disk entry
-            # would stay resident forever, invisible to the caps
+            # accounting sees the resident bytes and _rebalance can demote
+            # it again under pressure (the spool file is rewritten then) —
+            # otherwise every accessed disk entry would stay resident
+            # forever, invisible to the caps
             self.tier = TIER_HOST
         if self.qk is not None and self.k is None:
             # dequantize at link time (int8 storage, fp compute)
-            self.k = dequantize_kv(self.qk)
-            self.v = dequantize_kv(self.qv)
+            self.payload.k = dequantize_kv(self.qk)
+            self.payload.v = dequantize_kv(self.qv)
 
 
 class KVLibrary:
-    """Tiered, scoped KV store with expiry + LRU demotion."""
+    """Tiered, scoped KV store: memory ⇄ disk ⇄ network behind one policy.
+
+    Backends are public attributes (``memory``/``disk``/``network``) so
+    callers can read their counters; all *mutation* goes through the
+    library, which owns eviction, promotion, pinning, TTLs and locking
+    (see the module docstring for the lock model).
+    """
 
     def __init__(self, *, hbm_capacity: int = 2 << 30,
                  host_capacity: int = 16 << 30,
                  spool_dir: Optional[str] = None,
                  default_ttl: float = float("inf"),
                  shared: bool = False,
-                 quantize: bool = False):
-        self.hbm_capacity = hbm_capacity
-        self.host_capacity = host_capacity
+                 quantize: bool = False,
+                 peers: Optional[List[str]] = None):
         self.quantize = quantize     # int8 KV storage (cache/quant.py)
-        self.spool_dir = spool_dir or "/tmp/mpic_spool"
-        os.makedirs(self.spool_dir, exist_ok=True)
         self.default_ttl = default_ttl
         self.shared = shared          # dynamic library: no user scoping
+        self.memory = MemoryBackend(hbm_capacity=hbm_capacity,
+                                    host_capacity=host_capacity)
+        self.disk = DiskBackend(spool_dir or "/tmp/mpic_spool")
+        self.network: Optional[NetworkBackend] = None
+        if peers:
+            self.connect_peers(peers)
         self._lock = threading.RLock()
         self._entries: Dict[Tuple[str, str], Entry] = {}
+        self._by_ident: Dict[str, Tuple[str, str]] = {}
+        self._pushed: Dict[str, Tuple[bytes, dict]] = {}  # peer-PUT blocks
+        self._listeners: List[Callable] = []   # put-replacement observers
+        self._clock = threading.Lock()          # counters only
+        self._tiers = {t: {"hits": 0, "promotes": 0, "demotes": 0}
+                       for t in (TIER_HBM, TIER_HOST, TIER_DISK,
+                                 TIER_NETWORK)}
+        self._misses = 0
+
+    # -- tier plumbing ------------------------------------------------------
+    @property
+    def hbm_capacity(self) -> int:
+        return self.memory.hbm_capacity
+
+    @hbm_capacity.setter
+    def hbm_capacity(self, v: int) -> None:
+        self.memory.hbm_capacity = v
+
+    @property
+    def host_capacity(self) -> int:
+        return self.memory.host_capacity
+
+    @host_capacity.setter
+    def host_capacity(self, v: int) -> None:
+        self.memory.host_capacity = v
+
+    @property
+    def spool_dir(self) -> str:
+        return self.disk.spool_dir
+
+    def connect_peers(self, peers: List) -> None:
+        """Enable the network tier: ``peers`` are ``host:port`` addresses
+        (or ready transports) of other hosts' :class:`~repro.cache.net.\
+KVPeerServer`.  Idempotent-ish: replaces the current peer set."""
+        self.network = NetworkBackend(peers)
+
+    def add_invalidation_listener(self, fn: Callable) -> None:
+        """Register ``fn(user_id, media_id)`` to be called (outside the
+        library lock) whenever :meth:`put` replaces an existing entry —
+        the stale-fetch guard :class:`~repro.cache.transfer.ParallelLoader`
+        uses to drop in-flight dedup slots for the old identity."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _fire_invalidation(self, user_id: str, media_id: str) -> None:
+        # outside the lock: listeners (the loader) take their own locks
+        for fn in list(self._listeners):
+            try:
+                fn(user_id, media_id)
+            except Exception:
+                pass    # an observer must never break a put
+
+    def _count(self, tier: str, what: str, n: int = 1) -> None:
+        with self._clock:
+            self._tiers[tier][what] += n
 
     # -- keys ----------------------------------------------------------------
     def _key(self, user_id: str, media_id: str):
@@ -142,30 +283,74 @@ class KVLibrary:
     # -- API (workflow step ①: upload → precompute → store) -------------------
     def put(self, user_id: str, media_id: str, k: np.ndarray, v: np.ndarray,
             *, ttl: Optional[float] = None) -> Entry:
+        """Store one media KV block (replacing any previous block under the
+        same scope).  Locking: hashing/quantization run outside the lock;
+        the map swap + rebalance inside it; invalidation listeners fire
+        after release.  The returned entry is NOT pinned — re-``get`` it
+        with ``pin=True`` before reading arrays across threads."""
         now = time.time()
         e = Entry(media_id=media_id, k=np.asarray(k), v=np.asarray(v),
                   tier=TIER_HBM, created=now, last_used=now,
                   expires=now + (ttl if ttl is not None else self.default_ttl))
         if self.quantize:
-            e.qk, e.qv = quantize_kv(e.k), quantize_kv(e.v)
-            e.k = e.v = None
+            e.payload.qk = quantize_kv(e.k)
+            e.payload.qv = quantize_kv(e.v)
+            e.payload.k = e.payload.v = None
+        key = self._key(user_id, media_id)
+        e.meta.key = content_key(e.payload, key)
+        e.meta.ident = scope_digest(key)
+        e.meta.dtype, e.meta.shape = e.payload.dtype, e.payload.shape
+        e._owner = self
         with self._lock:
-            key = self._key(user_id, media_id)
             # a put over an existing key must evict the old entry, or its
             # spool file is orphaned on disk forever
-            if key in self._entries:
+            replaced = key in self._entries
+            if replaced:
                 self._evict(key)
             self._entries[key] = e
+            self._by_ident[e.meta.ident] = key
+            self.memory.put(e.meta.key, e.payload, e.meta)
             self._rebalance()
+        if replaced:
+            self._fire_invalidation(user_id, media_id)
+        return e
+
+    def register_remote(self, user_id: str, media_id: str, *,
+                        nbytes: int = 0,
+                        ttl: Optional[float] = None) -> Optional[Entry]:
+        """Register a block known to live on a peer without fetching it:
+        creates a payload-less entry at the **network tier**, so the
+        scheduler can see (and prefetch) it; the first ``get``/
+        ``materialize`` pulls the bytes.  Returns ``None`` if an entry
+        already exists under the scope (the local block wins)."""
+        if self.network is None:
+            raise RuntimeError("register_remote requires connect_peers()")
+        now = time.time()
+        key = self._key(user_id, media_id)
+        e = Entry(media_id=media_id, tier=TIER_NETWORK, created=now,
+                  last_used=now,
+                  expires=now + (ttl if ttl is not None else self.default_ttl),
+                  _nbytes=nbytes)
+        e.meta.ident = scope_digest(key)
+        e._owner = self
+        with self._lock:
+            if key in self._entries:
+                return None
+            self._entries[key] = e
+            self._by_ident[e.meta.ident] = key
         return e
 
     def get(self, user_id: str, media_id: str, *, replica=None,
             pin: bool = False) -> Optional[Entry]:
         """Lookup honouring user scoping and expiry (step ③).
 
-        The library lock covers only the lookup; the (potentially slow) disk
-        read in ``materialize`` runs outside it so ParallelLoader workers can
-        fetch different entries concurrently (per-entry lock inside).
+        The library lock covers only the lookup; the (potentially slow)
+        disk read or peer fetch in ``materialize`` runs outside it so
+        ParallelLoader workers can fetch different entries concurrently
+        (per-entry lock inside).  A scope with no local entry is tried on
+        the network tier when peers are configured (a hit admits the block
+        locally); otherwise — and on any tier-fetch failure — the result
+        is ``None`` and the caller recomputes.
 
         ``replica``: cluster serving — mark the entry HBM-warm on that
         engine replica (per-replica accounting, see module docstring).
@@ -173,18 +358,27 @@ class KVLibrary:
         its arrays out from under the caller; the caller (normally a
         :class:`~repro.cache.transfer.PrefetchHandle`) must ``unpin``.
         """
+        key = self._key(user_id, media_id)
         with self._lock:
-            e = self._entries.get(self._key(user_id, media_id))
+            e = self._entries.get(key)
+            if e is not None and time.time() > e.expires:
+                self._evict(key)
+                e = None
+            if e is not None:
+                e.last_used = time.time()
+                hit_tier = e.tier
+        if e is None:
+            e = self._network_admit(user_id, media_id)
             if e is None:
+                with self._clock:
+                    self._misses += 1
                 return None
-            if time.time() > e.expires:
-                self._evict(self._key(user_id, media_id))
-                return None
-            e.last_used = time.time()
-        was_disk = e.tier == TIER_DISK
+            hit_tier = TIER_NETWORK
+        self._count(hit_tier, "hits")
+        was_slow = hit_tier in (TIER_DISK, TIER_NETWORK)
         try:
             e.materialize()
-            if was_disk or replica is not None or pin:
+            if was_slow or replica is not None or pin:
                 # the promotion made KV resident: enforce the caps now, or
                 # a get-only serving phase would grow host memory
                 # unboundedly.  Holding e._mlock makes the non-blocking
@@ -199,13 +393,16 @@ class KVLibrary:
                     with self._lock:
                         if pin:
                             e._pins += 1
-                        changed = was_disk
+                        changed = was_slow
                         if replica is not None:
                             # the link step copies this KV to replica's
                             # device: it is now HBM-warm there (and only
                             # there)
-                            changed |= (replica not in e.hbm_replicas
-                                        or e.tier != TIER_HBM)
+                            fresh = (replica not in e.hbm_replicas
+                                     or e.tier != TIER_HBM)
+                            if fresh:
+                                self._count(TIER_HOST, "promotes")
+                            changed |= fresh
                             e.hbm_replicas[replica] = time.time()
                             e.tier = TIER_HBM
                         # pinning alone moves no bytes — only re-scan the
@@ -213,22 +410,106 @@ class KVLibrary:
                         if changed:
                             self._rebalance()
         except FileNotFoundError:
-            # spool file gone: either a concurrent _evict won the race, or
-            # something external (tmp reaper) deleted it.  Drop the zombie
-            # entry so the library heals — identity-guarded so we never pop
-            # a replacement entry that re-used the key in the meantime.
+            # every lower tier missed: spool file gone (concurrent _evict
+            # won the race / tmp reaper) or peers timed out.  Drop the
+            # zombie entry so the library heals and the caller recomputes —
+            # identity-guarded so we never pop a replacement entry that
+            # re-used the key in the meantime.
             with self._lock:
-                key = self._key(user_id, media_id)
                 if self._entries.get(key) is e:
                     self._entries.pop(key)
             return None
+        return e
+
+    # -- tier fetch routing (disk → network → miss) ---------------------------
+    def _fetch_into(self, e: Entry) -> None:
+        """Fill ``e.payload`` from the fastest lower tier that has the
+        block.  Caller holds ``e._mlock`` (never the library lock — a peer
+        fetch can take seconds).  Raises ``FileNotFoundError`` when every
+        tier misses; backends map corruption/timeouts to misses, so the
+        only failure mode callers see is "cache miss → recompute"."""
+        m = e.meta
+        if m.key is not None:
+            p = self.disk.get(m.key)    # verified read; corrupt → None
+            if p is not None:
+                self._adopt(e, p)
+                self._count(TIER_DISK, "promotes")
+                return
+        elif e.path:
+            # pre-backend entry (no content key recorded): best-effort
+            # direct read of its legacy spool file
+            try:
+                for f, val in unspool_payload(e.path).items():
+                    setattr(e.payload, f, val)
+                self._count(TIER_DISK, "promotes")
+                return
+            except FileNotFoundError:
+                pass
+        if self.network is not None and m.ident:
+            p, hdrs = self.network.get_with_headers(m.ident)
+            claimed = hdrs.get("X-Block-Key") or None
+            if p is not None and (m.key is None or claimed is None
+                                  or claimed == m.key):
+                if m.key is None:
+                    # adopt the peer's key (content-verified by the
+                    # backend); the scope salt is the ident prefix
+                    m.key = claimed or content_key(p, None)
+                self._adopt(e, p)
+                self._count(TIER_NETWORK, "promotes")
+                return
+        raise FileNotFoundError(e.path or m.ident or m.media_id)
+
+    def _adopt(self, e: Entry, p: KVPayload) -> None:
+        """Move fetched payload fields into ``e`` (caller holds ``_mlock``)
+        and register the resident bytes with the memory backend."""
+        e.payload.k, e.payload.v = p.k, p.v
+        e.payload.qk, e.payload.qv = p.qk, p.qv
+        e.meta.dtype = e.meta.dtype or e.payload.dtype
+        e.meta.shape = e.meta.shape or e.payload.shape
+        if e.meta.key is not None:
+            self.memory.put(e.meta.key, e.payload, e.meta)
+
+    def _network_admit(self, user_id: str, media_id: str) -> Optional[Entry]:
+        """Scope miss → ask the peers.  A hit creates a local host-tier
+        entry carrying the peer's content key and remaining TTL; a miss
+        (404 / timeout after one retry / checksum failure) returns None
+        and costs at most ``2 × timeout_s × peers``."""
+        if self.network is None:
+            return None
+        key = self._key(user_id, media_id)
+        ident = scope_digest(key)
+        p, hdrs = self.network.get_with_headers(ident)
+        if p is None:
+            return None
+        now = time.time()
+        try:
+            ttl = float(hdrs.get("X-TTL-Remaining", "inf"))
+        except ValueError:
+            ttl = float("inf")
+        e = Entry(media_id=media_id, tier=TIER_HOST, created=now,
+                  last_used=now, expires=now + ttl)
+        e.payload.k, e.payload.v, e.payload.qk, e.payload.qv = \
+            p.k, p.v, p.qk, p.qv
+        e.meta.key = hdrs.get("X-Block-Key") or content_key(e.payload, key)
+        e.meta.ident = ident
+        e.meta.dtype, e.meta.shape = e.payload.dtype, e.payload.shape
+        e._owner = self
+        with self._lock:
+            if key in self._entries:      # raced a concurrent put/admit:
+                return self._entries[key]  # the existing block wins
+            self._entries[key] = e
+            self._by_ident[ident] = key
+            self.memory.put(e.meta.key, e.payload, e.meta)
+            self._count(TIER_NETWORK, "promotes")
+            self._rebalance()
         return e
 
     # -- cluster seams (per-replica warmth, pinning) --------------------------
     def touch(self, user_id: str, media_id: str, replica) -> None:
         """Mark an entry HBM-warm on ``replica`` without a full ``get`` —
         used when a deduplicated loader fetch issued by one replica is
-        consumed (linked) by another."""
+        consumed (linked) by another.  Lock: entirely under the library
+        lock; never materializes."""
         with self._lock:
             e = self._entries.get(self._key(user_id, media_id))
             if e is None or time.time() > e.expires:
@@ -247,7 +528,7 @@ class KVLibrary:
         rebalance spooled it since it was handed out (caller must then
         re-``get(pin=True)``, which re-materializes and pins atomically).
         ``_spool`` checks pins under the same lock, so a successful pin
-        guarantees the arrays stay."""
+        guarantees the arrays stay until the matching :meth:`unpin`."""
         with self._lock:
             if entry.k is None and entry.qk is None:
                 return False
@@ -255,6 +536,8 @@ class KVLibrary:
             return True
 
     def unpin(self, entry: Entry) -> None:
+        """Drop one pin.  The last unpin re-runs the rebalance so demotions
+        deferred by the pin can proceed.  Never blocks on entry locks."""
         with self._lock:
             entry._pins = max(0, entry._pins - 1)
             if entry._pins == 0:
@@ -263,8 +546,13 @@ class KVLibrary:
     def warmth(self, user_id: str, media_ids, replica) -> Dict[str, int]:
         """Per-replica tier histogram over ``media_ids`` — the affinity
         router's scoring input: ``{"hbm": n, "host": n, "disk": n,
-        "miss": n}`` as seen from ``replica``."""
+        "miss": n}`` as seen from ``replica`` (plus ``"network"`` when
+        peers are configured).  Peers are NOT probed here — a routing
+        decision must stay O(lookup); only blocks already registered
+        (``register_remote`` / a previous admit) count as network-tier."""
         counts = {TIER_HBM: 0, TIER_HOST: 0, TIER_DISK: 0, "miss": 0}
+        if self.network is not None:
+            counts[TIER_NETWORK] = 0
         for mid in media_ids:
             tier = self.peek_tier(user_id, mid, replica=replica)
             counts[tier if tier in counts else "miss"] += 1
@@ -272,6 +560,9 @@ class KVLibrary:
 
     def peek_tier(self, user_id: str, media_id: str, *,
                   replica=None) -> Optional[str]:
+        """Current tier of a block without touching LRU state or fetching.
+        ``replica=`` gives that replica's view (HBM only if IT holds the
+        block).  Lock: one lookup under the library lock."""
         with self._lock:
             e = self._entries.get(self._key(user_id, media_id))
             if e is None or time.time() > e.expires:
@@ -284,9 +575,11 @@ class KVLibrary:
                 return TIER_HBM
             if e.k is not None or e.qk is not None:
                 return TIER_HOST
-            return e.tier if e.tier == TIER_DISK else TIER_HOST
+            return (e.tier if e.tier in (TIER_DISK, TIER_NETWORK)
+                    else TIER_HOST)
 
     def delete(self, user_id: str, media_id: str) -> None:
+        """Remove a block from every tier (idempotent)."""
         with self._lock:
             self._evict(self._key(user_id, media_id))
 
@@ -299,50 +592,125 @@ class KVLibrary:
                 self._evict(k)
         return len(dead)
 
+    # -- peer-server source protocol (KVPeerServer duck type) ------------------
+    def export_block(self, ident: str):
+        """Serve one block to a peer: ``(npz bytes, headers)`` or ``None``.
+
+        Resident blocks are pinned for the serialization (so ``_spool``
+        cannot null the arrays mid-encode) and spooled blocks are served
+        straight from their disk file — the spool wire format IS the wire
+        format.  Lock: lookup + pin under the library lock, the byte work
+        outside it."""
+        with self._lock:
+            key = self._by_ident.get(ident)
+            e = self._entries.get(key) if key is not None else None
+            if e is None or time.time() > e.expires:
+                pushed = self._pushed.get(ident)
+                return (pushed[0], dict(pushed[1])) if pushed else None
+            ttl = e.expires - time.time()
+            headers = {"X-Media-Id": e.media_id,
+                       "X-TTL-Remaining": repr(max(0.0, ttl))}
+            if e.meta.key:
+                headers["X-Block-Key"] = e.meta.key
+            resident = e.k is not None or e.qk is not None
+            if resident:
+                e._pins += 1
+            path = e.path
+        try:
+            if resident:
+                return payload_to_bytes(e.payload), headers
+            if not path:
+                return None
+            with open(path, "rb") as f:
+                return f.read(), headers
+        except FileNotFoundError:
+            return None
+        finally:
+            if resident:
+                self.unpin(e)
+
+    def admit_block(self, ident: str, data: bytes, headers: dict) -> None:
+        """Accept a peer's PUT (push replication).  Kept out of the entry
+        map — scope keys cannot be reversed from an ident — but served
+        back by :meth:`export_block`, so a pushed block is immediately
+        fetchable by every other peer."""
+        with self._lock:
+            self._pushed[ident] = (data, dict(headers))
+
+    def delete_block(self, ident: str) -> None:
+        """Peer-initiated delete: evicts the addressed entry from the map
+        and every backend (library lock held; idempotent)."""
+        with self._lock:
+            self._pushed.pop(ident, None)
+            key = self._by_ident.get(ident)
+            if key is not None:
+                self._evict(key)
+
+    def has_block(self, ident: str) -> bool:
+        """HEAD-probe support: unexpired entry or pushed block present
+        (library lock held, no payload touched)."""
+        with self._lock:
+            if ident in self._pushed:
+                return True
+            key = self._by_ident.get(ident)
+            e = self._entries.get(key) if key is not None else None
+            return e is not None and time.time() <= e.expires
+
     # -- tier management -------------------------------------------------------
     def _evict(self, key) -> None:
-        # no e._mlock here: callers hold the library lock, and waiting on a
-        # loader worker mid-np.load would stall every library operation.  A
-        # concurrent materialize either already has the fd open (POSIX unlink
-        # is safe) or hits FileNotFoundError, which its callers treat as a
-        # miss.
+        """Remove one entry from the map and every backend.  Caller holds
+        the library lock.  No ``e._mlock`` here: waiting on a loader worker
+        mid-read would stall every library operation.  A concurrent
+        materialize either already has the fd open (POSIX unlink is safe)
+        or hits FileNotFoundError, which its callers treat as a miss."""
         e = self._entries.pop(key, None)
-        if e is not None and e.path and os.path.exists(e.path):
-            os.unlink(e.path)
+        if e is None:
+            return
+        m = e.meta
+        if m.ident and self._by_ident.get(m.ident) == key:
+            self._by_ident.pop(m.ident, None)
+        if m.key:
+            self.memory.delete(m.key)
+            self.disk.delete(m.key)
+        if e.path and os.path.exists(e.path):
+            os.unlink(e.path)    # legacy-named spool files
 
     def _spool(self, key, e: Entry) -> bool:
-        """Demote one entry to disk; returns False if it is in active use.
+        """Demote one entry to the disk tier; returns False if it is in
+        active use.
 
-        Callers hold the library lock, so we must never *wait* on the entry
-        lock (a loader worker can hold it for a whole disk read — blocking
-        here would stall every library operation).  An entry being
-        materialized right now is by definition hot: skip it and let
-        ``_rebalance`` pick the next LRU victim.  Same for a *pinned* entry:
-        a consumer received it from ``get`` and is still reading its arrays
-        — nulling ``k``/``v`` under it would crash the link step.
+        Callers hold the library lock, so we must never *wait* on the
+        entry lock (a loader worker can hold it for a whole disk read —
+        blocking here would stall every library operation).  An entry
+        being materialized right now is by definition hot: skip it and let
+        ``_rebalance`` pick the next LRU victim.  Same for a *pinned*
+        entry: a consumer received it from ``get`` and is still reading
+        its arrays — nulling ``k``/``v`` under it would crash the link
+        step.
         """
         if e._pins > 0:
             return False
         if not e._mlock.acquire(blocking=False):
             return False
         try:
-            # stable digest, not hash(): PYTHONHASHSEED randomization would
-            # orphan spool files across restarts, and a 48-bit truncation
-            # could collide two (user, media) keys onto one file — serving
-            # one user another user's KV
-            digest = hashlib.sha1(repr(key).encode()).hexdigest()[:24]
-            path = os.path.join(self.spool_dir, f"{digest}.npz")
-            if e.qk is not None:
-                np.savez(path, qk=e.qk.q, qk_scale=e.qk.scale,
-                         qv=e.qv.q, qv_scale=e.qv.scale)
-                e._nbytes = e.qk.nbytes + e.qv.nbytes
-                e.qk = e.qv = None
-            else:
-                np.savez(path, k=e.k, v=e.v)
-                e._nbytes = e.k.nbytes + e.v.nbytes
-            e.path = path
-            e.k = e.v = None
+            m = e.meta
+            if m.key is None:
+                # content-hash key: stable digest, not hash() —
+                # PYTHONHASHSEED randomization would orphan spool files
+                # across restarts, and the scope salt keeps two users'
+                # identical media on distinct files
+                m.key = content_key(e.payload, key)
+            if m.ident is None:
+                m.ident = scope_digest(key)
+                self._by_ident.setdefault(m.ident, key)
+            self.disk.put(m.key, e.payload)     # int8 form wins when present
+            m.nbytes = e.payload.stored_nbytes
+            e.path = self.disk.path_for(m.key)
+            self.memory.delete(m.key)
+            e.payload.k = e.payload.v = None
+            e.payload.qk = e.payload.qv = None
             e.tier = TIER_DISK
+            self._count(TIER_HOST, "demotes")
         finally:
             e._mlock.release()
         return True
@@ -350,34 +718,28 @@ class KVLibrary:
     def _rebalance(self) -> None:
         """Demote LRU entries when a tier exceeds capacity.
 
-        Runs in three passes.  The per-replica pass first: each replica's
-        device budget is its own, so replica r exceeding ``hbm_capacity``
-        drops *r's hold* on its LRU entries — never another replica's.  An
-        entry whose last hold drops falls back to HOST.  Then the legacy
-        global HBM pass (entries with no replica holds — the single-engine
-        accounting) and the HOST→DISK spool pass, unchanged.
-        """
-        holders: Dict = {}
-        for e in self._entries.values():
-            for r in e.hbm_replicas:
-                holders.setdefault(r, []).append(e)
-        for r, held in holders.items():
-            used = sum(e.nbytes for e in held)
-            held.sort(key=lambda e: e.hbm_replicas[r])
-            for e in held:
-                if used <= self.hbm_capacity:
-                    break
-                del e.hbm_replicas[r]
-                if not e.hbm_replicas:
-                    e.tier = TIER_HOST
-                used -= e.nbytes
-        for tier, cap, demote in ((TIER_HBM, self.hbm_capacity, TIER_HOST),
-                                  (TIER_HOST, self.host_capacity, TIER_DISK)):
-            live = [(k, e) for k, e in self._entries.items()
-                    if e.tier == tier and not e.hbm_replicas]
-            used = sum(e.nbytes for _, e in live)
-            live.sort(key=lambda kv: kv[1].last_used)
-            for k, e in live:
+        Runs in three passes.  The per-replica pass first
+        (:meth:`MemoryBackend.demote_replicas`): each replica's device
+        budget is its own, so replica r exceeding ``hbm_capacity`` drops
+        *r's hold* on its LRU entries — never another replica's.  An entry
+        whose last hold drops falls back to HOST.  Then the legacy global
+        HBM pass (entries with no replica holds — the single-engine
+        accounting) and the HOST→DISK spool pass.  Caller holds the
+        library lock."""
+        live = list(self._entries.values())
+        nb = {id(e.meta): e.nbytes for e in live}
+        dropped = self.memory.demote_replicas(
+            (e.meta for e in live), lambda m: nb[id(m)])
+        if dropped:
+            self._count(TIER_HBM, "demotes", dropped)
+        for tier, cap, demote in (
+                (TIER_HBM, self.memory.hbm_capacity, TIER_HOST),
+                (TIER_HOST, self.memory.host_capacity, TIER_DISK)):
+            cands = [(k, e) for k, e in self._entries.items()
+                     if e.tier == tier and not e.hbm_replicas]
+            used = sum(e.nbytes for _, e in cands)
+            cands.sort(key=lambda kv: kv[1].last_used)
+            for k, e in cands:
                 if used <= cap:
                     break
                 freed = e.nbytes
@@ -386,10 +748,16 @@ class KVLibrary:
                         continue        # mid-materialize/pinned: next victim
                 else:
                     e.tier = TIER_HOST
+                    self._count(TIER_HBM, "demotes")
                 used -= freed
 
     # -- introspection -----------------------------------------------------------
     def stats(self) -> dict:
+        """Counter snapshot: entry/byte census by tier plus the per-tier
+        hit/promote/demote counters and each backend's fetch counters
+        (``fetches``/``fetch_misses``/``fetch_s``, disk ``corrupt``,
+        network ``timeouts``/``retries``).  The ``network`` tier appears
+        only when peers are configured."""
         with self._lock:
             by_tier: Dict[str, int] = {}
             by_replica: Dict[str, int] = {}
@@ -400,7 +768,23 @@ class KVLibrary:
             out = {"entries": len(self._entries), "bytes_by_tier": by_tier}
             if by_replica:
                 out["hbm_bytes_by_replica"] = by_replica
-            return out
+        with self._clock:
+            tiers = {t: dict(c) for t, c in self._tiers.items()
+                     if t != TIER_NETWORK or self.network is not None}
+            out["misses"] = self._misses
+        for tier, backend in ((TIER_DISK, self.disk),
+                              (TIER_NETWORK, self.network)):
+            if backend is None or tier not in tiers:
+                continue
+            b = backend.stats()
+            tiers[tier]["fetches"] = b["hits"]
+            tiers[tier]["fetch_misses"] = b["misses"]
+            tiers[tier]["fetch_s"] = round(b["fetch_s"], 6)
+            for extra in ("corrupt", "timeouts", "retries"):
+                if extra in b:
+                    tiers[tier][extra] = b[extra]
+        out["tiers"] = tiers
+        return out
 
 
 class SimulatedLatencyLibrary(KVLibrary):
@@ -409,10 +793,11 @@ class SimulatedLatencyLibrary(KVLibrary):
     Smoke-scale KV entries load from disk in microseconds, which hides the
     load/compute overlap the scheduler exists to exploit.  This subclass
     sleeps ``tier_latency_s[tier]`` per get (modelling paper-scale ~1 GB
-    entries over the Fig. 6 tier bandwidths) and records every fetch
-    interval so benchmarks/tests can assert that loads genuinely interleave
-    with compute.  The sleep happens outside any lock, so concurrent loader
-    workers overlap exactly as real disk reads would.
+    entries over the Fig. 6 tier bandwidths — including ``"network"`` for
+    peer pulls) and records every fetch interval so benchmarks/tests can
+    assert that loads genuinely interleave with compute.  The sleep
+    happens outside any lock, so concurrent loader workers overlap exactly
+    as real disk reads would.
     """
 
     def __init__(self, *, tier_latency_s: Optional[Dict[str, float]] = None,

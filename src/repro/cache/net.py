@@ -1,0 +1,280 @@
+"""Peer block transport for the network KV tier (stdlib HTTP, no deps).
+
+One host's :class:`~repro.cache.library.KVLibrary` exports its spooled
+blocks through a :class:`KVPeerServer`; another host's
+:class:`~repro.cache.backends.NetworkBackend` pulls them with a
+:class:`PeerTransport`.  The protocol is four verbs on one resource:
+
+    GET    /blocks/<ident>   -> 200 npz body | 404
+    HEAD   /blocks/<ident>   -> 200 | 404          (cheap contains-probe)
+    PUT    /blocks/<ident>   -> 204                (push/export a block)
+    DELETE /blocks/<ident>   -> 204
+
+``<ident>`` is the scope digest (``backends.scope_digest``) — stable
+across hosts that share a ``(user, media)`` scope, and exactly the digest
+the spool filename has always used.  Response headers carry what the
+receiving library needs to re-admit the block:
+
+    X-Block-Key      content-hash block key (client re-verifies the body)
+    X-Media-Id       media id for the new Entry
+    X-TTL-Remaining  seconds of TTL left at the serving host ("inf" ok)
+    X-Body-Sha1      sha1 of the raw body (transport-level integrity)
+
+Failure contract (what the library's fallback-to-recompute relies on):
+every request has a hard ``timeout``; transient failures (connect refused,
+timeout, 5xx) get **one** retry; a 404 is a definitive miss and is never
+retried.  ``PeerTransport`` never raises for data-plane failures — it
+returns ``(None, {})`` and the caller moves to the next peer or recomputes.
+
+``KVPeerServer`` is a daemon-threaded ``ThreadingHTTPServer``: each block
+transfer gets its own thread, so a slow peer read never blocks another.
+``delay_s`` injects per-request latency for fault/timeout tests.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import urllib.error
+import urllib.parse
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional, Tuple
+
+_TRANSIENT = (urllib.error.URLError, TimeoutError, ConnectionError, OSError)
+
+
+class PeerTransport:
+    """HTTP client for one peer's block server.
+
+    Thread-safe; the only mutable state is per-call counters
+    (``last_retries``/``last_timeouts``) read by ``NetworkBackend`` right
+    after each call — approximate under concurrency, which is fine for
+    counters.
+    """
+
+    def __init__(self, address: str, *, timeout_s: float = 2.0):
+        # address: "host:port" or a full "http://host:port"
+        if "://" not in address:
+            address = f"http://{address}"
+        self.address = address.rstrip("/")
+        self.timeout_s = timeout_s
+        self.last_retries = 0
+        self.last_timeouts = 0
+
+    def _url(self, ident: str) -> str:
+        return f"{self.address}/blocks/{urllib.parse.quote(ident, safe='')}"
+
+    def _request(self, ident: str, method: str, data: bytes = None,
+                 headers: Optional[dict] = None):
+        """One verb with the timeout + single-retry-on-transient policy.
+        Returns ``(status, body, headers)`` or ``(None, None, {})`` after
+        the retry budget is spent.  404 returns immediately (definitive
+        miss — retrying cannot help and would double every miss latency).
+        """
+        self.last_retries = 0
+        self.last_timeouts = 0
+        req = urllib.request.Request(self._url(ident), data=data,
+                                     method=method)
+        for k, v in (headers or {}).items():
+            req.add_header(k, v)
+        for attempt in (0, 1):
+            try:
+                with urllib.request.urlopen(
+                        req, timeout=self.timeout_s) as resp:
+                    return resp.status, resp.read(), dict(resp.headers)
+            except urllib.error.HTTPError as e:
+                if e.code == 404:
+                    return 404, None, {}
+                # 5xx etc: transient, fall through to the retry
+            except _TRANSIENT as e:
+                if isinstance(e, TimeoutError) or "timed out" in str(e):
+                    self.last_timeouts += 1
+            if attempt == 0:
+                self.last_retries += 1
+        return None, None, {}
+
+    # -- data plane --------------------------------------------------------
+    def fetch(self, ident: str) -> Tuple[Optional[bytes], dict]:
+        """GET a block.  ``(body, headers)`` on success; ``(None, {})`` on
+        miss/timeout/corruption.  The body is verified against
+        ``X-Body-Sha1`` here; content-hash verification against
+        ``X-Block-Key`` is the caller's job (it owns the payload parse)."""
+        status, body, hdrs = self._request(ident, "GET")
+        if status != 200 or body is None:
+            return None, {}
+        want = hdrs.get("X-Body-Sha1")
+        if want and hashlib.sha1(body).hexdigest() != want:
+            return None, {}
+        return body, hdrs
+
+    def push(self, ident: str, data: bytes, *, block_key: str = None,
+             media_id: str = None, ttl: float = None) -> bool:
+        """PUT one wire-format block to the peer (push replication);
+        True on 2xx.  The body checksum travels in ``X-Body-Sha1``."""
+        headers = {"X-Body-Sha1": hashlib.sha1(data).hexdigest()}
+        if block_key:
+            headers["X-Block-Key"] = block_key
+        if media_id:
+            headers["X-Media-Id"] = media_id
+        if ttl is not None:
+            headers["X-TTL-Remaining"] = repr(float(ttl))
+        status, _, _ = self._request(ident, "PUT", data=data,
+                                     headers=headers)
+        return status in (200, 201, 204)
+
+    def probe(self, ident: str) -> bool:
+        """HEAD existence check — no payload transfer (tier ``contains``)."""
+        status, _, _ = self._request(ident, "HEAD")
+        return status == 200
+
+    def remove(self, ident: str) -> bool:
+        """DELETE the block on the peer; True if it acknowledged."""
+        status, _, _ = self._request(ident, "DELETE")
+        return status in (200, 204)
+
+
+class DictBlockStore:
+    """In-memory block source for a :class:`KVPeerServer` — the loopback
+    store the backend-contract tests run the network tier against.  The
+    serving path uses a :class:`~repro.cache.library.KVLibrary` instead
+    (it implements the same four methods)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._blocks: Dict[str, Tuple[bytes, dict]] = {}
+
+    def export_block(self, ident: str):
+        with self._lock:
+            return self._blocks.get(ident)
+
+    def admit_block(self, ident: str, data: bytes, headers: dict) -> None:
+        with self._lock:
+            self._blocks[ident] = (data, dict(headers))
+
+    def delete_block(self, ident: str) -> None:
+        with self._lock:
+            self._blocks.pop(ident, None)
+
+    def has_block(self, ident: str) -> bool:
+        with self._lock:
+            return ident in self._blocks
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+
+    # silence per-request stderr logging (serving loops are chatty)
+    def log_message(self, fmt, *args):  # noqa: ARG002
+        pass
+
+    def _ident(self) -> Optional[str]:
+        if not self.path.startswith("/blocks/"):
+            return None
+        return urllib.parse.unquote(self.path[len("/blocks/"):])
+
+    def _delay(self) -> None:
+        d = self.server.delay_s
+        if d:
+            import time
+            time.sleep(d)
+
+    def do_GET(self):
+        ident = self._ident()
+        self._delay()
+        found = ident and self.server.source.export_block(ident)
+        if not found:
+            self.send_error(404)
+            return
+        data, headers = found
+        self.send_response(200)
+        self.send_header("Content-Length", str(len(data)))
+        self.send_header("Content-Type", "application/octet-stream")
+        self.send_header("X-Body-Sha1", hashlib.sha1(data).hexdigest())
+        for k, v in headers.items():
+            if k.startswith("X-") and k != "X-Body-Sha1":
+                self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(data)
+        with self.server._lock:
+            self.server.served_blocks += 1
+            self.server.served_bytes += len(data)
+
+    def do_HEAD(self):
+        ident = self._ident()
+        self._delay()
+        if ident and self.server.source.has_block(ident):
+            self.send_response(200)
+            self.send_header("Content-Length", "0")
+            self.end_headers()
+        else:
+            self.send_error(404)
+
+    def do_PUT(self):
+        ident = self._ident()
+        if not ident:
+            self.send_error(404)
+            return
+        length = int(self.headers.get("Content-Length", 0))
+        data = self.rfile.read(length)
+        want = self.headers.get("X-Body-Sha1")
+        if want and hashlib.sha1(data).hexdigest() != want:
+            self.send_error(400, "body checksum mismatch")
+            return
+        self.server.source.admit_block(ident, data, dict(self.headers))
+        self.send_response(204)
+        self.send_header("Content-Length", "0")
+        self.end_headers()
+
+    def do_DELETE(self):
+        ident = self._ident()
+        if ident:
+            self.server.source.delete_block(ident)
+        self.send_response(204)
+        self.send_header("Content-Length", "0")
+        self.end_headers()
+
+
+class KVPeerServer:
+    """Serve one block source (a library or a :class:`DictBlockStore`) to
+    peers.  Daemon-threaded; ``close()`` is idempotent.
+
+    ``delay_s`` sleeps that long inside every GET/HEAD before answering —
+    the fault-injection knob the timeout tests use (set it above the
+    client's ``timeout_s`` to force the transient path).
+    """
+
+    def __init__(self, source, *, host: str = "127.0.0.1", port: int = 0,
+                 delay_s: float = 0.0):
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd.source = source
+        self._httpd.delay_s = delay_s
+        self._httpd._lock = threading.Lock()
+        self._httpd.served_blocks = 0
+        self._httpd.served_bytes = 0
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+
+    @property
+    def address(self) -> str:
+        host, port = self._httpd.server_address[:2]
+        return f"{host}:{port}"
+
+    @property
+    def delay_s(self) -> float:
+        return self._httpd.delay_s
+
+    @delay_s.setter
+    def delay_s(self, value: float) -> None:
+        self._httpd.delay_s = value
+
+    def stats(self) -> dict:
+        with self._httpd._lock:
+            return {"served_blocks": self._httpd.served_blocks,
+                    "served_bytes": self._httpd.served_bytes}
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)

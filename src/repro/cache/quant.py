@@ -7,6 +7,13 @@ smaller than fp32 disk spools), and the Linker dequantizes at link time.
 Reuse quality impact is bounded by the same selective-recompute mechanism
 that absorbs the position/context error (tested in
 tests/test_quant.py::test_mpic_quality_with_quantized_library).
+
+This module also owns the **spool wire format** (``spool_payload`` /
+``unspool_payload``): the one place that knows the npz field names for both
+the quantized (``qk``/``qk_scale``/``qv``/``qv_scale``) and raw (``k``/``v``)
+layouts.  ``cache/backends.py`` (disk tier) and ``cache/net.py`` (network
+tier) both serialize through these helpers, so a block spooled by one host
+is byte-compatible with a peer fetching it over the wire.
 """
 from __future__ import annotations
 
@@ -35,4 +42,72 @@ def quantize_kv(x: np.ndarray) -> QuantizedKV:
 
 
 def dequantize_kv(qkv: QuantizedKV) -> np.ndarray:
+    """Inverse of :func:`quantize_kv` (fp32 out; lossy by ≤ scale/2)."""
     return qkv.q.astype(np.float32) * qkv.scale
+
+
+# ---------------------------------------------------------------------------
+# spool wire format (disk tier + network tier share it)
+# ---------------------------------------------------------------------------
+
+_BYTE_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _to_wire(name: str, a) -> dict:
+    """One npz field per array — plus a ``<name>__dtype`` sidecar for
+    extension dtypes (bfloat16, float8) that ``np.load`` would otherwise
+    degrade to raw void: they ship as a same-width unsigned view and are
+    re-viewed on load, so the restored array is bit- AND dtype-identical
+    (the content hash covers ``str(dtype)``, so fidelity here is what
+    keeps disk/network reads verifiable for bf16 models)."""
+    a = np.ascontiguousarray(a)
+    if np.dtype(a.dtype.str) == a.dtype:         # natively round-trippable
+        return {name: a}
+    return {name: a.view(_BYTE_VIEW[a.dtype.itemsize]),
+            name + "__dtype": np.array(a.dtype.name)}
+
+
+def _from_wire(z, name: str) -> np.ndarray:
+    a = z[name]
+    if name + "__dtype" in z:
+        try:                 # registers bfloat16/float8 names with numpy
+            import ml_dtypes  # noqa: F401
+        except ImportError:
+            pass
+        a = a.view(np.dtype(str(z[name + "__dtype"])))
+    return a
+
+
+def spool_payload(file, payload) -> None:
+    """Serialize a KV payload to ``file`` (path or file-like) as npz.
+
+    ``payload`` is duck-typed (``k``/``v``/``qk``/``qv`` attributes — see
+    :class:`repro.cache.backends.KVPayload`).  Quantized storage wins when
+    present: an entry that was dequantized for compute spools its int8
+    arrays, not the fp32 copy, so the disk/wire bytes stay 4× smaller.
+    """
+    if payload.qk is not None:
+        fields = {"qk": payload.qk.q, "qk_scale": payload.qk.scale,
+                  "qv": payload.qv.q, "qv_scale": payload.qv.scale}
+    else:
+        fields = {"k": payload.k, "v": payload.v}
+    wire = {}
+    for name, a in fields.items():
+        wire.update(_to_wire(name, a))
+    np.savez(file, **wire)
+
+
+def unspool_payload(file) -> dict:
+    """Parse one spooled npz block back into payload fields.
+
+    Returns ``{"k": ..., "v": ...}`` or ``{"qk": QuantizedKV, "qv": ...}``.
+    Raises whatever ``np.load`` raises on truncated/corrupt bytes — callers
+    (the disk and network backends) map that to a tier miss, never a crash.
+    """
+    with np.load(file) as z:
+        if "qk" in z:
+            return {"qk": QuantizedKV(_from_wire(z, "qk"),
+                                      _from_wire(z, "qk_scale")),
+                    "qv": QuantizedKV(_from_wire(z, "qv"),
+                                      _from_wire(z, "qv_scale"))}
+        return {"k": _from_wire(z, "k"), "v": _from_wire(z, "v")}

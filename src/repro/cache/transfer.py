@@ -29,6 +29,7 @@ from repro.cache.library import (
     TIER_DISK,
     TIER_HBM,
     TIER_HOST,
+    TIER_NETWORK,
     Entry,
     KVLibrary,
 )
@@ -36,6 +37,8 @@ from repro.cache.library import (
 
 @dataclasses.dataclass
 class TransferPlan:
+    """Analytic Fig. 6 schedule: which blocks hit (and from which tier),
+    which miss, and the modeled parallel vs sequential wall time."""
     hits: List[Tuple[str, str, int]]      # (media_id, tier, nbytes)
     misses: List[str]
     load_s: float
@@ -43,16 +46,21 @@ class TransferPlan:
 
     @property
     def parallel_s(self) -> float:
+        """Pipelined wall time, ``T ≈ max(load, compute)`` (paper Eq. 1)."""
         return max(self.load_s, self.compute_s)
 
     @property
     def sequential_s(self) -> float:
+        """Seed-style wall time with no overlap: ``load + compute``."""
         return self.load_s + self.compute_s
 
 
 def plan_transfers(library: KVLibrary, user_id: str,
                    media_ids: Sequence[str],
                    compute_estimator: Callable[[str], float]) -> TransferPlan:
+    """Model one request's load/compute overlap from current tier placement
+    (``peek_tier`` + ``TIER_BW``); read-only, takes no locks beyond the
+    library's own."""
     hits, misses, load_s = [], [], 0.0
     for mid in media_ids:
         tier = library.peek_tier(user_id, mid)
@@ -106,17 +114,22 @@ class PrefetchHandle:
     def _revalidate(self, media_id: str,
                     entry: Optional[Entry]) -> Optional[Entry]:
         """The fetch may predate the gather by a whole queue wait: the entry
-        can have been spooled back to disk (k/v nulled) or have expired in
-        between.  A ready entry passes through; anything stale goes back
-        through ``library.get`` so re-promotion runs the library's own
-        expiry / last_used / capacity-rebalance machinery instead of
-        bypassing it."""
+        can have been spooled back to disk (k/v nulled), have expired, or —
+        the stale-fetch case — have been *replaced* by a ``put`` over the
+        same scope while the fetch was in flight.  A ready entry that is
+        still the library's current entry for this identity passes
+        through; anything stale goes back through ``library.get`` so
+        re-promotion runs the library's own expiry / last_used /
+        capacity-rebalance machinery instead of bypassing it."""
         if entry is None:
             return None
+        lib = self._loader.library
         if entry.k is not None and time.time() <= entry.expires:
-            return entry
-        return self._loader.library.get(self.user_id, media_id,
-                                        replica=self.replica)
+            # identity guard: a concurrent put() may have re-created this
+            # (user, media) with new KV — never hand out the orphan
+            if lib._entries.get(lib._key(self.user_id, media_id)) is entry:
+                return entry
+        return lib.get(self.user_id, media_id, replica=self.replica)
 
     def get(self, media_id: str, timeout: float = 60.0) -> Optional[Entry]:
         """Entry for ``media_id`` (None on miss), blocking if still loading.
@@ -191,6 +204,8 @@ class PrefetchHandle:
             lib.unpin(entry)
 
     def wait(self, timeout: float = 60.0) -> Dict[str, Optional[Entry]]:
+        """Gather every prefetched entry (same pinning semantics as
+        :meth:`get`, applied to each id)."""
         return {mid: self.get(mid, timeout=timeout) for mid in self.records}
 
     # -- async per-entry completion -----------------------------------------
@@ -219,6 +234,7 @@ class PrefetchHandle:
 
     # -- instrumentation -----------------------------------------------------
     def done(self) -> bool:
+        """True when every issued fetch has completed (hit or miss)."""
         return all(r.future.done() for r in self.records.values())
 
     @property
@@ -232,9 +248,11 @@ class PrefetchHandle:
                 if r.t_end > 0.0]
 
 
-# tier-aware issue order: slowest tier first so the long disk fetches get a
-# head start on the worker pool (misses are near-free lookups → last)
-_TIER_RANK = {TIER_DISK: 0, TIER_HOST: 1, TIER_HBM: 2, None: 3}
+# tier-aware issue order: slowest tier first so the long network/disk
+# fetches get a head start on the worker pool (misses are near-free
+# lookups → last).  Shared with the scheduler's prefetch ordering.
+_TIER_RANK = {TIER_NETWORK: 0, TIER_DISK: 1, TIER_HOST: 2, TIER_HBM: 3,
+              None: 4}
 
 
 class ParallelLoader:
@@ -258,6 +276,21 @@ class ParallelLoader:
         self._inflight: Dict[Tuple[str, str], LoadRecord] = {}
         self._ilock = threading.Lock()
         self.dedup_hits = 0               # fetches served by in-flight loads
+        self.invalidations = 0            # dedup slots dropped by put()
+        # stale-fetch guard: a put() replacing an entry mid-prefetch must
+        # not let later prefetches dedup onto the fetch of the OLD entry
+        if hasattr(library, "add_invalidation_listener"):
+            library.add_invalidation_listener(self._invalidate)
+
+    def _invalidate(self, user_id: str, media_id: str) -> None:
+        """Library callback (fired outside the library lock) when ``put``
+        replaces ``(user, media)``: drop any in-flight dedup slot for the
+        old identity so the next prefetch issues a fresh fetch of the new
+        entry.  The in-flight future itself is left to finish — its result
+        is discarded by ``PrefetchHandle._revalidate``'s identity guard."""
+        with self._ilock:
+            if self._inflight.pop((user_id, media_id), None) is not None:
+                self.invalidations += 1
 
     def prefetch(self, user_id: str, media_ids: Sequence[str]
                  ) -> Dict[str, cf.Future]:
@@ -280,7 +313,8 @@ class ParallelLoader:
         tiers = {mid: self.library.peek_tier(user_id, mid, replica=replica)
                  for mid in media_ids}
         ordered = sorted(dict.fromkeys(media_ids),
-                         key=lambda m: _TIER_RANK.get(tiers[m], 3))
+                         key=lambda m: _TIER_RANK.get(tiers[m],
+                                                      _TIER_RANK[None]))
         records: Dict[str, LoadRecord] = {}
         fresh: List[Tuple[str, LoadRecord]] = []
         with self._ilock:
@@ -322,7 +356,12 @@ class ParallelLoader:
 
     def gather(self, futures: Dict[str, "cf.Future"],
                timeout: float = 60.0) -> Dict[str, Optional[Entry]]:
+        """Resolve a :meth:`prefetch` future map (legacy unpinned path —
+        the entries may be spooled under the caller; serving code gathers
+        through a :class:`PrefetchHandle` instead)."""
         return {mid: f.result(timeout=timeout) for mid, f in futures.items()}
 
     def close(self):
+        """Shut down the worker pool without waiting; in-flight fetches
+        finish or die with the process (daemon threads)."""
         self.pool.shutdown(wait=False)

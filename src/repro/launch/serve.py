@@ -13,7 +13,11 @@ Every engine knob is drivable from the CLI: ``--no-paged`` /
 tensor-parallel axis) runs the mesh-sharded serving path — pair it with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to try it on a
 CPU-only box — and ``--replicas N --router {random,least_loaded,affinity}``
-serves the request stream through the routed replica fleet.
+serves the request stream through the routed replica fleet.  The network
+KV tier spans *processes*: ``--serve-blocks PORT`` exports this server's
+static library to peers and ``--peers host:port[,...]`` pulls locally
+missing entries from theirs before falling back to recompute (see
+docs/ARCHITECTURE.md, "network tier").
 
 ``--policy`` takes a comma-separated trace cycled over the request stream
 (e.g. ``--policy mpic,full_recompute``).  An unknown policy name in the
@@ -82,7 +86,17 @@ def main():
     ap.add_argument("--router", default="affinity",
                     choices=["random", "least_loaded", "affinity"],
                     help="cluster routing policy (with --replicas > 1)")
+    ap.add_argument("--peers", default="",
+                    help="comma-separated host:port peer block servers — "
+                         "enables the network KV tier (a local cache miss "
+                         "pulls the peer's spooled entry instead of "
+                         "recomputing)")
+    ap.add_argument("--serve-blocks", type=int, default=None,
+                    metavar="PORT",
+                    help="export this server's static KV library to peers "
+                         "on PORT (0 = pick a free port)")
     args = ap.parse_args()
+    peers = [p.strip() for p in args.peers.split(",") if p.strip()]
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
@@ -92,13 +106,26 @@ def main():
         max_seq_len=args.max_seq_len, decode_slots=args.slots,
         paged=args.paged, pipelined=args.pipelined,
         prefill_chunk_tokens=args.prefill_chunk)
+    peer_server = None
     if args.replicas > 1:
         eng = MPICCluster(model, params, engine_cfg,
                           ClusterConfig(replicas=args.replicas,
-                                        router=args.router),
+                                        router=args.router,
+                                        peers=peers or None,
+                                        serve_port=args.serve_blocks),
                           mesh=mesh)
+        peer_server = eng.peer_server
     else:
-        eng = MPICEngine(model, params, engine_cfg, mesh=mesh)
+        from repro.cache.library import KVLibrary
+        static_lib = KVLibrary(peers=peers) if peers else None
+        eng = MPICEngine(model, params, engine_cfg, mesh=mesh,
+                         static_library=static_lib)
+        if args.serve_blocks is not None:
+            from repro.cache.net import KVPeerServer
+            peer_server = KVPeerServer(eng.static_lib,
+                                       port=args.serve_blocks)
+    if peer_server is not None:
+        print(f"serving KV blocks to peers at {peer_server.address}")
 
     dialogues = make_dialogues(n=args.requests, n_images=2,
                                d_model=cfg.d_model, media_len=24,

@@ -24,6 +24,12 @@ fleet:
   * **Shared load stream** — per-replica prefetches are issued on the
     shared loader tagged with the replica id; concurrent fetches of the
     same ``(user, media)`` are deduplicated onto one in-flight read.
+  * **Network KV tier** — with ``ClusterConfig.peers`` the shared library
+    pulls entries it misses locally from peer clusters' block servers
+    (``cache/net.py``) instead of recomputing; ``serve_port`` exports this
+    cluster's own static library to those peers.  Per-tier hit/promote/
+    fetch-latency counters surface in :meth:`MPICCluster.report` under
+    ``cache_tiers``.
   * **Aggregated report** — per-replica TTFT/decode/scheduler breakdowns
     plus routing behavior (decisions per replica, cache-hit tiers per
     router policy).
@@ -62,6 +68,11 @@ class ClusterConfig:
     router_seed: int = 0
     max_queue_per_replica: int = 4   # admission backpressure threshold
     loader_workers_per_replica: int = 4
+    # network KV tier (cache/net.py): peer clusters' block servers to pull
+    # missing entries from, and whether to serve our own static library to
+    # them (0 = pick a free port; None = don't serve)
+    peers: Optional[List[str]] = None
+    serve_port: Optional[int] = None
 
 
 class MPICCluster:
@@ -76,6 +87,14 @@ class MPICCluster:
         assert self.cfg.replicas >= 1
         self.static_lib = static_library or KVLibrary()
         self.dynamic_lib = dynamic_library or KVLibrary(shared=True)
+        # network KV tier: pull misses from peer clusters / serve them ours
+        if self.cfg.peers:
+            self.static_lib.connect_peers(self.cfg.peers)
+        self.peer_server = None
+        if self.cfg.serve_port is not None:
+            from repro.cache.net import KVPeerServer
+            self.peer_server = KVPeerServer(self.static_lib,
+                                            port=self.cfg.serve_port)
         self.retriever = Retriever()
         self.loader = ParallelLoader(
             self.static_lib,
@@ -183,6 +202,8 @@ class MPICCluster:
     def close(self) -> None:
         self._closed = True
         self.loader.close()
+        if self.peer_server is not None:
+            self.peer_server.close()
 
     # ------------------------------------------------------------------
     @property
@@ -236,6 +257,12 @@ class MPICCluster:
             "library": self.static_lib.stats(),
             "per_replica": per_replica,
         }
+        # per-tier hit/promote/demote/fetch-latency counters (stats() only
+        # includes the network tier when peers are configured)
+        out["cache_tiers"] = out["library"].get("tiers", {})
+        if self.peer_server is not None:
+            out["peer_server"] = {"address": self.peer_server.address,
+                                  **self.peer_server.stats()}
         if done:
             ttfts = [r.ttft for r in done]
             out["mean_ttft_s"] = float(np.mean(ttfts))

@@ -753,6 +753,9 @@ class MPICEngine:
             "p90_ttft_s": float(np.percentile(ttfts, 90)),
             "total_tokens": sum(len(r.output_tokens) for r in done),
             "paged": self._use_paged,
-            "library": self.static_lib.stats(),
             "scheduler": self.scheduler.stats(done),
+            # cluster mode shares ONE library across replicas — its stats
+            # belong to the cluster report, not N identical copies here
+            **({} if self.replica_id is not None
+               else {"library": self.static_lib.stats()}),
         }

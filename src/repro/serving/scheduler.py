@@ -39,7 +39,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.transfer import ParallelLoader, PrefetchHandle
+from repro.cache.transfer import _TIER_RANK, ParallelLoader, PrefetchHandle
 from repro.core import select as sel_mod
 from repro.core.linker import link_prompt
 from repro.core.policies import POLICIES, PolicyResult
@@ -175,13 +175,34 @@ class PipelinedScheduler:
         return bool(_media_ids(req)) and (self.prefetch_filter is None
                                           or self.prefetch_filter(req))
 
+    def _slowest_tier_rank(self, req: Request) -> int:
+        """Rank of the slowest tier any of this request's media currently
+        sits on (network < disk < host < hbm, misses last) — see
+        ``transfer._TIER_RANK``."""
+        lib = self.loader.library
+        ranks = [_TIER_RANK.get(lib.peek_tier(req.prompt.user_id, mid,
+                                              replica=self.replica),
+                                _TIER_RANK[None])
+                 for mid in _media_ids(req)]
+        return min(ranks) if ranks else _TIER_RANK[None]
+
     def _top_up(self) -> None:
-        """Keep the front-``prefetch_depth`` requests' loads in flight."""
+        """Keep the front-``prefetch_depth`` requests' loads in flight.
+
+        Issue order across the window is **slowest tier first**: a request
+        whose media must come over the network (or from disk) gets its
+        fetches onto the loader pool before one whose media is already
+        host/HBM-resident, so the longest load stream overlaps the most
+        queue wait.  Admission order itself is untouched — this only
+        reorders which prefetches are issued first within the window."""
         if not self.pipelined or self.prefetch_depth <= 0:
             return
-        for req in self.queue.peek(self.prefetch_depth):
-            if req.req_id not in self._handles and self._should_prefetch(req):
-                self._handles[req.req_id] = self._issue(req)
+        window = [req for req in self.queue.peek(self.prefetch_depth)
+                  if req.req_id not in self._handles
+                  and self._should_prefetch(req)]
+        window.sort(key=self._slowest_tier_rank)
+        for req in window:
+            self._handles[req.req_id] = self._issue(req)
 
     def __len__(self) -> int:
         return len(self.queue)

@@ -287,6 +287,53 @@ def test_loader_inflight_dedup(tmp_path):
     loader.close()
 
 
+def test_put_replacement_invalidates_inflight_prefetch(tmp_path):
+    """Stale-fetch guard: a put() replacing an entry while its fetch is in
+    flight must drop the loader's dedup slot, so later prefetches issue a
+    fresh fetch of the NEW entry instead of deduplicating onto the old."""
+    from repro.cache import SimulatedLatencyLibrary
+    lib = SimulatedLatencyLibrary(
+        tier_latency_s={TIER_HBM: 0.3, TIER_HOST: 0.3},
+        spool_dir=str(tmp_path))
+    k, v = _kv()
+    lib.put("u", "m", k, v)
+    loader = ParallelLoader(lib, max_workers=2)
+    h1 = loader.prefetch_handle("u", ["m"])       # in flight (sleeping)
+    lib.put("u", "m", k + 7, v)                   # replaced mid-prefetch
+    assert loader.invalidations == 1
+    h2 = loader.prefetch_handle("u", ["m"])       # must not reuse the slot
+    assert h2.records["m"] is not h1.records["m"]
+    # both gathers hand out the replacement's KV, never the orphan's
+    for h in (h1, h2):
+        e = h.get("m")
+        assert e is not None
+        np.testing.assert_array_equal(e.k, k + 7)
+        h.release()
+    loader.close()
+
+
+def test_gather_after_replacement_returns_new_entry(tmp_path):
+    """Identity guard in PrefetchHandle._revalidate: a fetch that completed
+    BEFORE the replacing put() resolved to the old Entry object, whose
+    arrays are still resident (eviction pops the map, it does not null
+    payloads) — the gather must re-route through library.get and return
+    the current entry."""
+    lib = KVLibrary(spool_dir=str(tmp_path))
+    k, v = _kv()
+    lib.put("u", "m", k, v)
+    loader = ParallelLoader(lib)
+    h = loader.prefetch_handle("u", ["m"])
+    h.wait()                                      # fetch done: old entry
+    h.release()
+    lib.put("u", "m", k + 7, v)                   # replace after completion
+    e = h.get("m")
+    assert e is not None
+    np.testing.assert_array_equal(e.k, k + 7)
+    assert e is lib._entries[lib._key("u", "m")]
+    h.release()
+    loader.close()
+
+
 def test_paged_pool():
     from repro.cache import PagedConfig, PagedKVPool
     import jax.numpy as jnp

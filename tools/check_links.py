@@ -1,0 +1,101 @@
+"""Markdown link checker for README.md and docs/ (stdlib only).
+
+Verifies every ``[text](target)`` and bare relative reference in the
+repo's markdown set:
+
+* relative file links must point at an existing file or directory
+  (resolved from the linking file's directory, then from the repo root);
+* ``#fragment`` anchors — local or on a relative .md link — must match a
+  heading in the target file (GitHub slug rules: lowercase, spaces to
+  dashes, punctuation dropped);
+* external ``http(s)://`` links are syntax-checked only (CI must not
+  depend on the network), except a small allowlist of known-relative
+  GitHub badge paths (``../../actions/...``) which are skipped.
+
+Exit 0 when everything resolves, 1 with a per-link report otherwise —
+the CI docs job runs ``python tools/check_links.py``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+# paths relative to the *repo web UI* (badge links), not the filesystem
+WEB_RELATIVE = ("../../actions",)
+
+
+def md_files():
+    yield os.path.join(REPO, "README.md")
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        for root, _, names in os.walk(docs):
+            for n in sorted(names):
+                if n.endswith(".md"):
+                    yield os.path.join(root, n)
+
+
+def slugify(heading: str) -> str:
+    """GitHub anchor slug: strip markdown/punctuation, spaces → dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    rel = os.path.relpath(path, REPO)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith(WEB_RELATIVE):
+            continue                      # GitHub-web-relative badge link
+        base, _, frag = target.partition("#")
+        if base:
+            cand = os.path.normpath(os.path.join(os.path.dirname(path),
+                                                 base))
+            if not os.path.exists(cand):
+                cand = os.path.normpath(os.path.join(REPO, base))
+            if not os.path.exists(cand):
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+        else:
+            cand = path                   # pure '#fragment' self-link
+        if frag and cand.endswith(".md"):
+            if slugify(frag) not in anchors_of(cand):
+                errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors, checked = [], 0
+    for path in md_files():
+        checked += 1
+        errors.extend(check_file(path))
+    if errors:
+        print(f"[check_links] {len(errors)} broken link(s) "
+              f"across {checked} file(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"[check_links] OK — {checked} markdown file(s), all links "
+          f"resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
