@@ -13,12 +13,18 @@ from repro.cache.backends import (
     content_key,
     scope_digest,
 )
+from repro.cache.faults import FaultPlan, FaultRule, ReplicaCrash
 from repro.cache.library import (
     Entry,
     KVLibrary,
     SimulatedLatencyLibrary,
 )
-from repro.cache.net import DictBlockStore, KVPeerServer, PeerTransport
+from repro.cache.net import (
+    DictBlockStore,
+    KVPeerServer,
+    PeerBreaker,
+    PeerTransport,
+)
 from repro.cache.paged import PagedConfig, PagedKVPool
 from repro.cache.transfer import (
     LoadRecord,
@@ -33,7 +39,8 @@ __all__ = [
     "TIER_BW", "TIER_DISK", "TIER_HBM", "TIER_HOST", "TIER_NETWORK",
     "StorageBackend", "MemoryBackend", "DiskBackend", "NetworkBackend",
     "BlockMetadata", "KVPayload", "content_key", "scope_digest",
-    "KVPeerServer", "PeerTransport", "DictBlockStore",
+    "KVPeerServer", "PeerTransport", "PeerBreaker", "DictBlockStore",
+    "FaultPlan", "FaultRule", "ReplicaCrash",
     "PagedConfig", "PagedKVPool",
     "LoadRecord", "ParallelLoader", "PrefetchHandle", "TransferPlan",
     "plan_transfers",

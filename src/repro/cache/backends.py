@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import errno
 import hashlib
 import io
 import os
@@ -375,27 +376,72 @@ class DiskBackend(StorageBackend):
 
     name = TIER_DISK
 
-    def __init__(self, spool_dir: str):
+    def __init__(self, spool_dir: str, *, faults=None):
         super().__init__()
         self.spool_dir = spool_dir
         os.makedirs(spool_dir, exist_ok=True)
         self.counters["corrupt"] = 0
+        self.counters["io_errors"] = 0
+        self.faults = faults          # FaultPlan (disk.read / disk.write)
+        # consecutive device-level IO failures (reads + writes); any
+        # successful IO resets it.  The library quarantines the whole tier
+        # when this crosses its threshold (degraded, memory-only mode).
+        self.failure_streak = 0
 
     def path_for(self, key: str) -> str:
         return os.path.join(self.spool_dir, f"{key}.npz")
 
+    def _io_failure(self) -> None:
+        with self._lock:
+            self.counters["io_errors"] += 1
+            self.failure_streak += 1
+
+    def _io_success(self) -> None:
+        with self._lock:
+            self.failure_streak = 0
+
     def put(self, key: str, payload: KVPayload,
             meta: Optional[BlockMetadata] = None) -> None:
+        """Unlike ``get``, a write failure **raises** (``OSError``): the
+        caller (the library's ``_spool``) must keep the entry resident —
+        swallowing the error here would silently drop the bytes."""
         path = self.path_for(key)
-        spool_payload(path, payload)
+        try:
+            if self.faults is not None:
+                rule = self.faults.check("disk.write", path)
+                if rule is not None:
+                    code = (errno.ENOSPC if rule.kind == "enospc"
+                            else errno.EIO)
+                    raise OSError(code, f"injected {rule.kind}", path)
+            spool_payload(path, payload)
+        except OSError as exc:
+            # ENOSPC is a full disk, not a dying one: count the IO error
+            # but keep it out of the quarantine streak
+            if exc.errno == errno.ENOSPC:
+                self._count(io_errors=1)
+            else:
+                self._io_failure()
+            raise
+        self._io_success()
         self._count(puts=1, bytes_written=payload.stored_nbytes)
 
     def get(self, key: str) -> Optional[KVPayload]:
         path = self.path_for(key)
         t0 = time.perf_counter()
         try:
+            if self.faults is not None:
+                rule = self.faults.check("disk.read", path)
+                if rule is not None and rule.kind == "io_error":
+                    raise OSError(errno.EIO, "injected io_error", path)
             fields = unspool_payload(path)
         except FileNotFoundError:
+            self._count(misses=1)
+            return None
+        except OSError:
+            # device-level read failure (EIO, …): the file may be intact,
+            # so do NOT unlink — count it against the failure streak and
+            # report a miss so the caller falls to the next tier
+            self._io_failure()
             self._count(misses=1)
             return None
         except Exception:
@@ -407,6 +453,7 @@ class DiskBackend(StorageBackend):
         if not verify_payload(payload, key):
             self._corrupt(path)
             return None
+        self._io_success()
         self._count(hits=1, bytes_read=payload.stored_nbytes,
                     fetch_s=time.perf_counter() - t0)
         return payload
@@ -443,10 +490,19 @@ class NetworkBackend(StorageBackend):
 
     Wraps one :class:`~repro.cache.net.PeerTransport` per peer and tries
     them in order.  Failure semantics (implemented in the transport, relied
-    on here): per-request timeout, a **single retry** on transient errors
-    (connect/timeout), no retry on a definitive 404, and checksum-verified
-    bodies — so the worst case is one bounded stall per peer and the
-    library falls back to recompute, never wedges.
+    on here): per-request timeout, retries on transient errors under
+    exponential backoff with seeded jitter, no retry on a definitive 404,
+    and checksum-verified bodies — so the worst case is one bounded stall
+    per peer and the library falls back to recompute, never wedges.
+
+    **Peer health**: each peer sits behind a
+    :class:`~repro.cache.net.PeerBreaker` (closed/open/half-open with
+    cooldown probes).  A peer that fails to *respond* ``breaker_threshold``
+    consecutive times is skipped (``breaker_skips`` counter) until its
+    cooldown elapses, when a single half-open probe decides whether it
+    rejoins — so a dead peer costs its timeout once per cooldown window,
+    not per miss.  A 404 (or any HTTP status) is a response from a healthy
+    peer and *resets* the streak; only transport-level failures count.
 
     Addressing: blocks are fetched by scope ``ident`` (the same digest the
     spool filename used historically, so it is stable across hosts that
@@ -456,15 +512,47 @@ class NetworkBackend(StorageBackend):
 
     name = TIER_NETWORK
 
-    def __init__(self, peers: Iterable = ()):
+    def __init__(self, peers: Iterable = (), *, faults=None,
+                 breaker_threshold: int = 3, breaker_cooldown_s: float = 5.0):
         super().__init__()
         # late import: cache/net.py imports nothing from here, but keep the
         # socket machinery out of import-time for library-only users
-        from repro.cache.net import PeerTransport
-        self.transports: List = [
-            p if hasattr(p, "fetch") else PeerTransport(p) for p in peers]
+        from repro.cache.net import PeerBreaker, PeerTransport
+        self.transports: List = []
+        for p in peers:
+            t = p if hasattr(p, "fetch") else PeerTransport(p, faults=faults)
+            if faults is not None and getattr(t, "faults", None) is None:
+                t.faults = faults
+            self.transports.append(t)
+        self.breakers: Dict[str, PeerBreaker] = {
+            t.address: PeerBreaker(threshold=breaker_threshold,
+                                   cooldown_s=breaker_cooldown_s)
+            for t in self.transports}
         self.counters["timeouts"] = 0
         self.counters["retries"] = 0
+        self.counters["breaker_skips"] = 0
+
+    # -- breaker plumbing ---------------------------------------------------
+    def _admit(self, t) -> bool:
+        """May we talk to this peer now?  Counts the skip when not."""
+        br = self.breakers.get(t.address)
+        if br is None or br.allow():
+            return True
+        self._count(breaker_skips=1)
+        return False
+
+    def _record(self, t) -> None:
+        """Feed the transport's outcome to the peer's breaker: any HTTP
+        response (incl. 404 — a definitive miss from a live peer) is
+        health; only a transport-level no-response is a failure."""
+        self._count(retries=t.last_retries, timeouts=t.last_timeouts)
+        br = self.breakers.get(t.address)
+        if br is None:
+            return
+        if getattr(t, "last_status", None) is not None:
+            br.record_success()
+        else:
+            br.record_failure()
 
     def put(self, key: str, payload: KVPayload,
             meta: Optional[BlockMetadata] = None) -> None:
@@ -474,16 +562,21 @@ class NetworkBackend(StorageBackend):
         data = payload_to_bytes(payload)
         ttl = (meta.expires - time.time()) if meta is not None else None
         for t in self.transports:
-            if t.push(key, data, block_key=key, ttl=ttl):
+            if not self._admit(t):
+                continue
+            ok = t.push(key, data, block_key=key, ttl=ttl)
+            self._record(t)
+            if ok:
                 self._count(puts=1, bytes_written=len(data))
                 return
 
     def get(self, key: str) -> Optional[KVPayload]:
         t0 = time.perf_counter()
         for t in self.transports:
+            if not self._admit(t):
+                continue
             data, hdrs = t.fetch(key)
-            self._count(retries=t.last_retries,
-                        timeouts=t.last_timeouts)
+            self._record(t)
             if data is None:
                 continue
             try:
@@ -505,9 +598,10 @@ class NetworkBackend(StorageBackend):
         admit a fetched block it had no local entry for."""
         t0 = time.perf_counter()
         for t in self.transports:
+            if not self._admit(t):
+                continue
             data, hdrs = t.fetch(key)
-            self._count(retries=t.last_retries,
-                        timeouts=t.last_timeouts)
+            self._record(t)
             if data is None:
                 continue
             try:
@@ -525,13 +619,26 @@ class NetworkBackend(StorageBackend):
 
     def delete(self, key: str) -> None:
         for t in self.transports:
-            if t.remove(key):
+            if not self._admit(t):
+                continue
+            ok = t.remove(key)
+            self._record(t)
+            if ok:
                 self._count(deletes=1)
 
     def contains(self, key: str) -> bool:
-        return any(t.probe(key) for t in self.transports)
+        for t in self.transports:
+            if not self._admit(t):
+                continue
+            ok = t.probe(key)
+            self._record(t)
+            if ok:
+                return True
+        return False
 
     def stats(self) -> dict:
         out = super().stats()
         out["peers"] = [t.address for t in self.transports]
+        out["breakers"] = {addr: br.snapshot()
+                           for addr, br in self.breakers.items()}
         return out

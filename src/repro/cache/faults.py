@@ -1,0 +1,178 @@
+"""Deterministic fault injection for the serving stack.
+
+MPIC's degradation primitive is "a failed fetch is a recompute" — but a
+robustness claim is only testable if every failure mode is *reproducible*.
+This module is the single seam the whole stack consults: a seeded
+:class:`FaultPlan` holds ordered :class:`FaultRule`\\ s, and each
+injection site calls :meth:`FaultPlan.check` at the moment the fault
+would occur.  No site ever mocks a failure by hand; tests and
+``benchmarks/fig_fault_tolerance.py`` describe faults declaratively and
+replay them bit-identically (rule windows are event-counted, probability
+draws come from one seeded RNG).
+
+Injection sites and the fault ``kind``\\ s they honour:
+
+    site            kinds                 consulted by
+    --------------  --------------------  --------------------------------
+    peer.request    blackhole | latency   PeerTransport._request
+    peer.body       corrupt               PeerTransport.fetch
+    disk.read       io_error              DiskBackend.get
+    disk.write      io_error | enospc     DiskBackend.put
+    loader.fetch    stall | error         ParallelLoader._timed_get
+    engine.step     crash                 MPICEngine.step
+
+``target`` scopes a rule: ``"*"`` matches every event at the site;
+anything else matches by substring against the site's event target (peer
+address, spool path, media id, replica id).  ``start``/``stop`` bound the
+rule to an event-index window *of matching events* (fire while
+``start <= n < stop``), so "crash replica 0 at its 5th step" is
+``engine.step:crash:target=0,start=5,stop=6``.
+
+String DSL (``FaultPlan.parse``; the ``serve.py --fault-plan`` knob):
+rules are ``;``-separated, each ``site:kind[:key=val[,key=val...]]`` —
+e.g. ``"peer.request:blackhole;disk.write:enospc:start=3"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import List, Optional, Sequence
+
+
+class ReplicaCrash(RuntimeError):
+    """Injected replica failure (``engine.step:crash``).  Raised out of
+    ``MPICEngine.step`` before any per-request work, so no individual
+    request is blamed — the cluster quarantines the replica and fails the
+    whole queue over (``serving/cluster.py``)."""
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """One declarative fault.  ``matched`` counts events this rule matched
+    (site + target), ``fired`` how many it actually injected on."""
+    site: str
+    kind: str
+    target: str = "*"
+    start: int = 0                    # first matching event index that fires
+    stop: Optional[int] = None        # fire while start <= n < stop
+    prob: float = 1.0                 # seeded per-event draw when < 1.0
+    delay_s: float = 0.0              # latency/stall duration; blackhole
+                                      # wait override (0 → peer timeout_s)
+    matched: int = 0
+    fired: int = 0
+
+    def matches(self, target: str) -> bool:
+        return self.target == "*" or self.target in target
+
+    def describe(self) -> str:
+        extras = []
+        if self.target != "*":
+            extras.append(f"target={self.target}")
+        if self.start:
+            extras.append(f"start={self.start}")
+        if self.stop is not None:
+            extras.append(f"stop={self.stop}")
+        if self.prob < 1.0:
+            extras.append(f"prob={self.prob}")
+        if self.delay_s:
+            extras.append(f"delay_s={self.delay_s}")
+        tail = f":{','.join(extras)}" if extras else ""
+        return f"{self.site}:{self.kind}{tail}"
+
+
+class FaultPlan:
+    """Seeded, thread-safe fault schedule.
+
+    ``check(site, target)`` is the only runtime API: every injection site
+    calls it once per would-be-fault event; it returns the first rule that
+    fires (or ``None``).  Every matching rule's event counter advances on
+    every call — rule windows are deterministic regardless of how many
+    rules coexist — and probability draws come from one ``random.Random``
+    seeded at construction, so a given (plan spec, seed, event sequence)
+    replays identically.
+    """
+
+    def __init__(self, rules: Sequence[FaultRule] = (), *, seed: int = 0):
+        self.rules: List[FaultRule] = list(rules)
+        self.seed = seed
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def check(self, site: str, target: str = "") -> Optional[FaultRule]:
+        """First rule firing for this event, advancing all matching rules'
+        windows.  Thread-safe (one lock covers counters + RNG)."""
+        hit: Optional[FaultRule] = None
+        with self._lock:
+            for r in self.rules:
+                if r.site != site or not r.matches(target):
+                    continue
+                n = r.matched
+                r.matched += 1
+                if hit is not None:
+                    continue          # first firing rule wins; still counted
+                if n < r.start or (r.stop is not None and n >= r.stop):
+                    continue
+                if r.prob < 1.0 and self._rng.random() >= r.prob:
+                    continue
+                r.fired += 1
+                hit = r
+        return hit
+
+    @staticmethod
+    def sleep(rule: Optional[FaultRule]) -> None:
+        """Convenience: serve a latency/stall rule's delay."""
+        if rule is not None and rule.delay_s > 0:
+            time.sleep(rule.delay_s)
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> List[dict]:
+        with self._lock:
+            return [{"rule": r.describe(), "matched": r.matched,
+                     "fired": r.fired} for r in self.rules]
+
+    def __bool__(self) -> bool:
+        return bool(self.rules)
+
+    def __repr__(self) -> str:
+        return (f"FaultPlan(seed={self.seed}, "
+                f"rules=[{'; '.join(r.describe() for r in self.rules)}])")
+
+    # -- DSL ----------------------------------------------------------------
+    _INT_KEYS = ("start", "stop")
+    _FLOAT_KEYS = ("prob", "delay_s")
+
+    @classmethod
+    def parse(cls, spec: str, *, seed: int = 0) -> "FaultPlan":
+        """Parse the ``;``-separated rule DSL (see module docstring).
+        Raises ``ValueError`` on malformed rules or unknown keys."""
+        rules = []
+        for chunk in spec.split(";"):
+            chunk = chunk.strip()
+            if not chunk:
+                continue
+            parts = chunk.split(":", 2)
+            if len(parts) < 2:
+                raise ValueError(f"fault rule needs site:kind — {chunk!r}")
+            kw = {"site": parts[0].strip(), "kind": parts[1].strip()}
+            if len(parts) == 3 and parts[2].strip():
+                for pair in parts[2].split(","):
+                    if "=" not in pair:
+                        raise ValueError(
+                            f"expected key=value in fault rule {chunk!r}, "
+                            f"got {pair!r}")
+                    key, val = (s.strip() for s in pair.split("=", 1))
+                    if key == "delay":
+                        key = "delay_s"
+                    if key in cls._INT_KEYS:
+                        kw[key] = int(val)
+                    elif key in cls._FLOAT_KEYS:
+                        kw[key] = float(val)
+                    elif key == "target":
+                        kw[key] = val
+                    else:
+                        raise ValueError(
+                            f"unknown fault-rule key {key!r} in {chunk!r}")
+            rules.append(FaultRule(**kw))
+        return cls(rules, seed=seed)

@@ -55,6 +55,7 @@ by N engine replicas.  Two seams make that safe and useful:
 """
 from __future__ import annotations
 
+import errno
 import os
 import threading
 import time
@@ -208,13 +209,20 @@ class KVLibrary:
                  default_ttl: float = float("inf"),
                  shared: bool = False,
                  quantize: bool = False,
-                 peers: Optional[List[str]] = None):
+                 peers: Optional[List[str]] = None,
+                 faults=None,
+                 disk_fail_threshold: int = 3):
         self.quantize = quantize     # int8 KV storage (cache/quant.py)
         self.default_ttl = default_ttl
         self.shared = shared          # dynamic library: no user scoping
+        self.faults = faults          # FaultPlan, threaded into every tier
         self.memory = MemoryBackend(hbm_capacity=hbm_capacity,
                                     host_capacity=host_capacity)
-        self.disk = DiskBackend(spool_dir or "/tmp/mpic_spool")
+        self.disk = DiskBackend(spool_dir or "/tmp/mpic_spool", faults=faults)
+        self.disk_fail_threshold = disk_fail_threshold
+        self._disk_quarantined = False   # sticky: memory-only degraded mode
+        self._spool_failures = 0         # demotions aborted by write errors
+        self._enospc = 0                 # of which: disk-full (non-fatal)
         self.network: Optional[NetworkBackend] = None
         if peers:
             self.connect_peers(peers)
@@ -250,11 +258,35 @@ class KVLibrary:
     def spool_dir(self) -> str:
         return self.disk.spool_dir
 
-    def connect_peers(self, peers: List) -> None:
+    def connect_peers(self, peers: List, **net_kwargs) -> None:
         """Enable the network tier: ``peers`` are ``host:port`` addresses
         (or ready transports) of other hosts' :class:`~repro.cache.net.\
-KVPeerServer`.  Idempotent-ish: replaces the current peer set."""
-        self.network = NetworkBackend(peers)
+KVPeerServer`.  Idempotent-ish: replaces the current peer set.
+        ``net_kwargs`` forward to :class:`NetworkBackend` (breaker
+        threshold/cooldown); the library's fault plan rides along."""
+        net_kwargs.setdefault("faults", self.faults)
+        self.network = NetworkBackend(peers, **net_kwargs)
+
+    # -- disk-tier degradation ----------------------------------------------
+    def _disk_ok(self) -> bool:
+        """Is the disk tier usable?  ``disk_fail_threshold`` *consecutive*
+        device IO failures (read or write; a clean op resets the streak in
+        the backend) quarantine it: spooling stops, reads skip straight to
+        the network tier, and the library keeps serving memory-only.  The
+        flag is sticky — a flapping disk must not oscillate — until an
+        operator calls :meth:`reinstate_disk`."""
+        if self._disk_quarantined:
+            return False
+        if self.disk.failure_streak >= self.disk_fail_threshold:
+            self._disk_quarantined = True
+            return False
+        return True
+
+    def reinstate_disk(self) -> None:
+        """Operator override: clear the disk quarantine (after remounting/
+        freeing space) and let the next rebalance spool again."""
+        self._disk_quarantined = False
+        self.disk.failure_streak = 0
 
     def add_invalidation_listener(self, fn: Callable) -> None:
         """Register ``fn(user_id, media_id)`` to be called (outside the
@@ -429,8 +461,11 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set."""
         tier misses; backends map corruption/timeouts to misses, so the
         only failure mode callers see is "cache miss → recompute"."""
         m = e.meta
-        if m.key is not None:
-            p = self.disk.get(m.key)    # verified read; corrupt → None
+        if m.key is not None and self._disk_ok():
+            try:
+                p = self.disk.get(m.key)  # verified read; corrupt → None
+            except OSError:
+                p = None    # device IO failure: streak counted by backend
             if p is not None:
                 self._adopt(e, p)
                 self._count(TIER_DISK, "promotes")
@@ -690,6 +725,8 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set."""
         """
         if e._pins > 0:
             return False
+        if not self._disk_ok():
+            return False        # quarantined disk: entry stays resident
         if not e._mlock.acquire(blocking=False):
             return False
         try:
@@ -703,7 +740,17 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set."""
             if m.ident is None:
                 m.ident = scope_digest(key)
                 self._by_ident.setdefault(m.ident, key)
-            self.disk.put(m.key, e.payload)     # int8 form wins when present
+            try:
+                self.disk.put(m.key, e.payload)  # int8 form wins if present
+            except OSError as exc:
+                # counted, non-fatal demotion failure: the entry stays
+                # resident (arrays untouched) and the rebalance moves on to
+                # the next victim.  ENOSPC is tracked separately — a full
+                # disk is an operator signal, not a device fault streak.
+                self._spool_failures += 1
+                if getattr(exc, "errno", None) == errno.ENOSPC:
+                    self._enospc += 1
+                return False
             m.nbytes = e.payload.stored_nbytes
             e.path = self.disk.path_for(m.key)
             self.memory.delete(m.key)
@@ -780,10 +827,23 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set."""
             tiers[tier]["fetches"] = b["hits"]
             tiers[tier]["fetch_misses"] = b["misses"]
             tiers[tier]["fetch_s"] = round(b["fetch_s"], 6)
-            for extra in ("corrupt", "timeouts", "retries"):
+            for extra in ("corrupt", "timeouts", "retries", "io_errors",
+                          "breaker_skips", "breakers"):
                 if extra in b:
                     tiers[tier][extra] = b[extra]
+        # evaluate (not just read) the quarantine condition: the sticky
+        # flag flips lazily on the next disk access, but stats() must
+        # report a streak past the threshold as degraded immediately
+        disk_quarantined = not self._disk_ok()
+        if TIER_DISK in tiers:
+            tiers[TIER_DISK]["quarantined"] = disk_quarantined
         out["tiers"] = tiers
+        out["degraded"] = {
+            "disk_quarantined": disk_quarantined,
+            "disk_failure_streak": self.disk.failure_streak,
+            "spool_failures": self._spool_failures,
+            "enospc": self._enospc,
+        }
         return out
 
 

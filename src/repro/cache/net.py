@@ -22,18 +22,32 @@ receiving library needs to re-admit the block:
 
 Failure contract (what the library's fallback-to-recompute relies on):
 every request has a hard ``timeout``; transient failures (connect refused,
-timeout, 5xx) get **one** retry; a 404 is a definitive miss and is never
+timeout, 5xx) get ``retries`` retries (default **one**) under exponential
+backoff with seeded jitter; a 404 is a definitive miss and is never
 retried.  ``PeerTransport`` never raises for data-plane failures — it
 returns ``(None, {})`` and the caller moves to the next peer or recomputes.
 
+Peer *health* lives above the transport: :class:`PeerBreaker` is a
+closed/open/half-open circuit breaker owned per peer by
+:class:`~repro.cache.backends.NetworkBackend`.  The transport reports
+whether the peer **responded at all** via ``last_status`` (any HTTP
+status, including 404 — a definitive miss from a healthy peer — counts as
+responsive; ``None`` means transport-level failure), and the backend
+feeds that into the breaker, so a dead peer costs its timeout once per
+cooldown window instead of on every miss.
+
 ``KVPeerServer`` is a daemon-threaded ``ThreadingHTTPServer``: each block
 transfer gets its own thread, so a slow peer read never blocks another.
-``delay_s`` injects per-request latency for fault/timeout tests.
+``delay_s`` injects per-request latency for fault/timeout tests; richer
+deterministic failures (blackhole / latency / corrupt-body) come from a
+:class:`~repro.cache.faults.FaultPlan` attached to the transport.
 """
 from __future__ import annotations
 
 import hashlib
+import random
 import threading
+import time
 import urllib.error
 import urllib.parse
 import urllib.request
@@ -41,6 +55,80 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional, Tuple
 
 _TRANSIENT = (urllib.error.URLError, TimeoutError, ConnectionError, OSError)
+
+
+class PeerBreaker:
+    """Per-peer circuit breaker: closed → open → half-open → closed.
+
+    State machine (``threshold`` consecutive transport failures trip it):
+
+    * **closed** — every request allowed.  A transport failure bumps the
+      consecutive-failure streak; reaching ``threshold`` opens the
+      breaker.  Any response (including 404/5xx — the peer is alive)
+      resets the streak.
+    * **open** — requests are skipped (the caller moves straight to the
+      next peer / recompute) until ``cooldown_s`` elapses.
+    * **half-open** — exactly ONE probe request is admitted; success
+      closes the breaker, failure re-opens it for another cooldown.
+
+    Thread-safe; ``clock`` is injectable for deterministic tests.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, *, threshold: int = 3, cooldown_s: float = 5.0,
+                 clock=time.monotonic):
+        self.threshold = max(1, int(threshold))
+        self.cooldown_s = float(cooldown_s)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.state = self.CLOSED
+        self.failure_streak = 0
+        self.opened = 0              # times the breaker tripped
+        self.skips = 0               # requests short-circuited while open
+        self._open_until = 0.0
+        self._probing = False        # half-open: one probe in flight
+
+    def allow(self) -> bool:
+        """May a request go to this peer now?  Counts a skip when not."""
+        with self._lock:
+            if self.state == self.CLOSED:
+                return True
+            if (self.state == self.OPEN
+                    and self._clock() >= self._open_until):
+                self.state = self.HALF_OPEN
+                self._probing = False
+            if self.state == self.HALF_OPEN and not self._probing:
+                self._probing = True
+                return True
+            self.skips += 1
+            return False
+
+    def record_success(self) -> None:
+        """The peer responded (any HTTP status): close + reset streak."""
+        with self._lock:
+            self.state = self.CLOSED
+            self.failure_streak = 0
+            self._probing = False
+
+    def record_failure(self) -> None:
+        """Transport-level failure (timeout/connect): bump the streak;
+        trip at ``threshold`` (immediately when half-open)."""
+        with self._lock:
+            self.failure_streak += 1
+            self._probing = False
+            if (self.state == self.HALF_OPEN
+                    or self.failure_streak >= self.threshold):
+                if self.state != self.OPEN:
+                    self.opened += 1
+                self.state = self.OPEN
+                self._open_until = self._clock() + self.cooldown_s
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"state": self.state,
+                    "failure_streak": self.failure_streak,
+                    "opened": self.opened, "skips": self.skips}
 
 
 class PeerTransport:
@@ -52,45 +140,84 @@ class PeerTransport:
     counters.
     """
 
-    def __init__(self, address: str, *, timeout_s: float = 2.0):
+    def __init__(self, address: str, *, timeout_s: float = 2.0,
+                 retries: int = 1, backoff_base_s: float = 0.05,
+                 jitter_seed: int = 0, faults=None):
         # address: "host:port" or a full "http://host:port"
         if "://" not in address:
             address = f"http://{address}"
         self.address = address.rstrip("/")
         self.timeout_s = timeout_s
+        self.retries = max(0, int(retries))
+        self.backoff_base_s = float(backoff_base_s)
+        self.faults = faults          # FaultPlan or None (injection hooks)
+        self._rng = random.Random(jitter_seed)
+        self._rng_lock = threading.Lock()
         self.last_retries = 0
         self.last_timeouts = 0
+        # HTTP status of the last completed attempt (incl. 404/5xx), or
+        # None when the peer never responded — the breaker's health signal
+        self.last_status: Optional[int] = None
 
     def _url(self, ident: str) -> str:
         return f"{self.address}/blocks/{urllib.parse.quote(ident, safe='')}"
 
+    def _backoff_s(self, attempt: int) -> float:
+        """Exponential backoff with seeded jitter: ``base · 2^attempt``
+        scaled by a uniform draw in [0.5, 1.5) — decorrelates retry storms
+        across peers/replicas while staying reproducible per seed."""
+        with self._rng_lock:
+            jitter = 0.5 + self._rng.random()
+        return self.backoff_base_s * (2 ** attempt) * jitter
+
     def _request(self, ident: str, method: str, data: bytes = None,
                  headers: Optional[dict] = None):
-        """One verb with the timeout + single-retry-on-transient policy.
+        """One verb with the timeout + retry-on-transient policy
+        (exponential backoff with seeded jitter between attempts).
         Returns ``(status, body, headers)`` or ``(None, None, {})`` after
         the retry budget is spent.  404 returns immediately (definitive
         miss — retrying cannot help and would double every miss latency).
+
+        Fault hooks (``peer.request`` site): ``blackhole`` makes the
+        attempt behave like an unreachable peer — it waits ``delay_s``
+        (the timeout by default) and fails; ``latency`` sleeps ``delay_s``
+        before a real attempt.
         """
         self.last_retries = 0
         self.last_timeouts = 0
+        self.last_status = None
         req = urllib.request.Request(self._url(ident), data=data,
                                      method=method)
         for k, v in (headers or {}).items():
             req.add_header(k, v)
-        for attempt in (0, 1):
-            try:
-                with urllib.request.urlopen(
-                        req, timeout=self.timeout_s) as resp:
-                    return resp.status, resp.read(), dict(resp.headers)
-            except urllib.error.HTTPError as e:
-                if e.code == 404:
-                    return 404, None, {}
-                # 5xx etc: transient, fall through to the retry
-            except _TRANSIENT as e:
-                if isinstance(e, TimeoutError) or "timed out" in str(e):
-                    self.last_timeouts += 1
-            if attempt == 0:
+        for attempt in range(self.retries + 1):
+            rule = (self.faults.check("peer.request", self.address)
+                    if self.faults is not None else None)
+            if rule is not None and rule.kind == "latency":
+                time.sleep(rule.delay_s)
+                rule = None
+            if rule is not None and rule.kind == "blackhole":
+                # unreachable peer: the caller's wall clock pays the
+                # timeout (or the rule's delay), then the attempt fails
+                time.sleep(rule.delay_s or self.timeout_s)
+                self.last_timeouts += 1
+            else:
+                try:
+                    with urllib.request.urlopen(
+                            req, timeout=self.timeout_s) as resp:
+                        self.last_status = resp.status
+                        return resp.status, resp.read(), dict(resp.headers)
+                except urllib.error.HTTPError as e:
+                    self.last_status = e.code   # the peer responded
+                    if e.code == 404:
+                        return 404, None, {}
+                    # 5xx etc: transient, fall through to the retry
+                except _TRANSIENT as e:
+                    if isinstance(e, TimeoutError) or "timed out" in str(e):
+                        self.last_timeouts += 1
+            if attempt < self.retries:
                 self.last_retries += 1
+                time.sleep(self._backoff_s(attempt))
         return None, None, {}
 
     # -- data plane --------------------------------------------------------
@@ -102,6 +229,12 @@ class PeerTransport:
         status, body, hdrs = self._request(ident, "GET")
         if status != 200 or body is None:
             return None, {}
+        if self.faults is not None and body:
+            rule = self.faults.check("peer.body", self.address)
+            if rule is not None and rule.kind == "corrupt":
+                # flip a byte: the checksum below must catch it (a corrupt
+                # body from a responsive peer is a miss, not ill health)
+                body = bytes([body[0] ^ 0xFF]) + body[1:]
         want = hdrs.get("X-Body-Sha1")
         if want and hashlib.sha1(body).hexdigest() != want:
             return None, {}

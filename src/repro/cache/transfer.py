@@ -277,6 +277,7 @@ class ParallelLoader:
         self._ilock = threading.Lock()
         self.dedup_hits = 0               # fetches served by in-flight loads
         self.invalidations = 0            # dedup slots dropped by put()
+        self.load_failures = 0            # worker exceptions → miss/recompute
         # stale-fetch guard: a put() replacing an entry mid-prefetch must
         # not let later prefetches dedup onto the fetch of the OLD entry
         if hasattr(library, "add_invalidation_listener"):
@@ -348,9 +349,27 @@ class ParallelLoader:
 
     def _timed_get(self, user_id: str, rec: LoadRecord,
                    replica=None) -> Optional[Entry]:
+        """Worker body.  An exception here must NOT propagate: the future's
+        result feeds straight into ``PrefetchHandle.get``/``gather`` on the
+        engine's link path, and a raising gather would fail the whole
+        request when the contract is "failed fetch = miss = recompute".
+        Failures are counted (``load_failures``) and become ``None``."""
         rec.t_start = time.perf_counter()
         try:
+            faults = getattr(self.library, "faults", None)
+            if faults is not None:
+                rule = faults.check("loader.fetch", rec.media_id)
+                if rule is not None:
+                    if rule.kind == "stall":
+                        faults.sleep(rule)     # slow worker, then proceed
+                    elif rule.kind == "error":
+                        raise RuntimeError(
+                            f"injected loader error for {rec.media_id}")
             return self.library.get(user_id, rec.media_id, replica=replica)
+        except Exception:
+            with self._ilock:
+                self.load_failures += 1
+            return None
         finally:
             rec.t_end = time.perf_counter()
 

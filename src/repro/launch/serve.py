@@ -95,8 +95,23 @@ def main():
                     metavar="PORT",
                     help="export this server's static KV library to peers "
                          "on PORT (0 = pick a free port)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget from arrival; "
+                         "requests not finished in time are reaped "
+                         "(terminal DEADLINE state, resources freed)")
+    ap.add_argument("--fault-plan", default="",
+                    help="chaos testing: ';'-separated fault rules "
+                         "site:kind[:k=v,...] (see cache/faults.py), e.g. "
+                         "'peer.request:blackhole;engine.step:crash:"
+                         "target=replica0,start=5,stop=6'")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for fault-plan probability draws")
     args = ap.parse_args()
     peers = [p.strip() for p in args.peers.split(",") if p.strip()]
+    faults = None
+    if args.fault_plan:
+        from repro.cache.faults import FaultPlan
+        faults = FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
 
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
@@ -112,14 +127,18 @@ def main():
                           ClusterConfig(replicas=args.replicas,
                                         router=args.router,
                                         peers=peers or None,
-                                        serve_port=args.serve_blocks),
+                                        serve_port=args.serve_blocks,
+                                        deadline_s=args.deadline_s,
+                                        faults=faults,
+                                        on_stuck="report"),
                           mesh=mesh)
         peer_server = eng.peer_server
     else:
         from repro.cache.library import KVLibrary
-        static_lib = KVLibrary(peers=peers) if peers else None
+        static_lib = (KVLibrary(peers=peers, faults=faults)
+                      if peers or faults else None)
         eng = MPICEngine(model, params, engine_cfg, mesh=mesh,
-                         static_library=static_lib)
+                         static_library=static_lib, faults=faults)
         if args.serve_blocks is not None:
             from repro.cache.net import KVPeerServer
             peer_server = KVPeerServer(eng.static_lib,
@@ -145,7 +164,8 @@ def main():
         kw = {"k": args.mpic_k} if policy == "mpic" else {}
         eng.submit(Request(prompt=d.prompt,
                            max_new_tokens=args.max_new_tokens,
-                           policy=policy, policy_kwargs=kw))
+                           policy=policy, policy_kwargs=kw,
+                           deadline_s=args.deadline_s))
     done = eng.run()
     mesh_desc = "x".join(str(s) for s in mesh.devices.shape) if mesh \
         else "unsharded"
@@ -160,6 +180,10 @@ def main():
               f"tokens={len(r.output_tokens)}{rep}")
     for r in eng.failed:
         print(f"  {r.req_id}: FAILED — {r.error}")
+    for r in eng.expired:
+        print(f"  {r.req_id}: DEADLINE — {r.error}")
+    if faults is not None:
+        print(f"  fault_plan: {faults.stats()}")
     for k, v in eng.report().items():
         print(f"  {k}: {v}")
 

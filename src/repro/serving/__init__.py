@@ -1,4 +1,4 @@
-from repro.serving.cluster import ClusterConfig, MPICCluster
+from repro.serving.cluster import ClusterConfig, MPICCluster, StuckFleetError
 from repro.serving.engine import EngineConfig, MPICEngine
 from repro.serving.request import Request, State
 from repro.serving.retriever import Retriever
@@ -20,7 +20,7 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "EngineConfig", "MPICEngine", "Request", "State", "Retriever",
-    "ClusterConfig", "MPICCluster",
+    "ClusterConfig", "MPICCluster", "StuckFleetError",
     "ROUTERS", "Router", "RandomRouter", "LeastLoadedRouter",
     "AffinityRouter", "ReplicaView", "RoutingDecision", "make_router",
     "ChunkedPrefillTask", "PipelinedScheduler", "WaitingQueue",

@@ -40,6 +40,21 @@ sampling is seeded per request (``Request.seed``), never per replica.
 ``benchmarks/fig_cluster_throughput.py`` asserts this against the
 single-engine path and measures the throughput scaling + the affinity
 router's cache-hit edge.
+
+**Fault tolerance** (``docs/ARCHITECTURE.md`` §Failure handling): a replica
+whose ``step()`` raises is **quarantined** — excluded from routing and
+stepping — and every non-terminal request it held is drained back into the
+cluster's pending queue (:meth:`MPICEngine.drain_for_failover`: prefills
+aborted through ``_abort_prefill`` with no page/pin leaks, requests reset
+to WAITING) and re-routed to healthy replicas.  Resubmission is idempotent:
+seeded sampling replays from ``Request.seed``, so a failed-over request
+produces the same tokens it would have on the original replica.
+``ClusterConfig.deadline_s`` stamps a default wall-clock budget on every
+submitted request (reaped by the engines; cluster-level ``_dispatch`` also
+reaps requests that expired while held under backpressure), and
+``run()``/``drain()`` raise :class:`StuckFleetError` (or record a report,
+``on_stuck="report"``) instead of silently returning when ``max_steps``
+exhausts with work still live.
 """
 from __future__ import annotations
 
@@ -52,7 +67,7 @@ import numpy as np
 from repro.cache.library import KVLibrary
 from repro.cache.transfer import ParallelLoader
 from repro.serving.engine import EngineConfig, MPICEngine
-from repro.serving.request import Request
+from repro.serving.request import Request, State
 from repro.serving.retriever import Retriever
 from repro.serving.router import (
     RoutingDecision,
@@ -73,6 +88,21 @@ class ClusterConfig:
     # them (0 = pick a free port; None = don't serve)
     peers: Optional[List[str]] = None
     serve_port: Optional[int] = None
+    # -- fault tolerance ---------------------------------------------------
+    deadline_s: Optional[float] = None   # default Request.deadline_s stamp
+    faults: Optional[object] = None      # FaultPlan threaded into the stack
+    on_stuck: str = "raise"              # raise | report (stuck watchdog)
+
+
+class StuckFleetError(RuntimeError):
+    """``run()``/``drain()`` exhausted ``max_steps`` with requests still
+    live.  Carries a :meth:`MPICCluster.fleet_state` snapshot (``.fleet``)
+    — per-replica queue/slot/prefetch state — so a wedged fleet is
+    diagnosable instead of silently dropping work."""
+
+    def __init__(self, msg: str, fleet: dict):
+        super().__init__(msg)
+        self.fleet = fleet
 
 
 class MPICCluster:
@@ -85,8 +115,13 @@ class MPICCluster:
                  mesh=None):
         self.cfg = cluster_cfg or ClusterConfig()
         assert self.cfg.replicas >= 1
-        self.static_lib = static_library or KVLibrary()
+        self.faults = self.cfg.faults
+        self.static_lib = static_library or KVLibrary(faults=self.faults)
         self.dynamic_lib = dynamic_library or KVLibrary(shared=True)
+        if self.faults is not None and self.static_lib.faults is None:
+            # an externally-built library joins the cluster's fault plan
+            self.static_lib.faults = self.faults
+            self.static_lib.disk.faults = self.faults
         # network KV tier: pull misses from peer clusters / serve them ours
         if self.cfg.peers:
             self.static_lib.connect_peers(self.cfg.peers)
@@ -107,7 +142,7 @@ class MPICCluster:
                        static_library=self.static_lib,
                        dynamic_library=self.dynamic_lib,
                        loader=self.loader, retriever=self.retriever,
-                       replica_id=i, mesh=mesh)
+                       replica_id=i, mesh=mesh, faults=self.faults)
             for i in range(self.cfg.replicas)
         ]
         self._share_jits()
@@ -115,6 +150,10 @@ class MPICCluster:
         self.decisions: List[RoutingDecision] = []
         self._rr = 0                     # round-robin step offset
         self._closed = False
+        self._quarantined: Dict[int, str] = {}   # replica_id -> reason
+        self._expired: List[Request] = []  # reaped while held in _pending
+        self.requeued = 0                # requests re-routed by failover
+        self.stuck_report: Optional[dict] = None   # on_stuck="report"
 
     def _share_jits(self) -> None:
         """Replicas are identical (same model/params/config), so their
@@ -148,6 +187,8 @@ class MPICCluster:
     def submit(self, request: Request) -> Request:
         if self._closed:
             raise RuntimeError("cluster is draining/closed")
+        if request.deadline_s is None and self.cfg.deadline_s is not None:
+            request.deadline_s = self.cfg.deadline_s
         self._pending.append(request)
         self._dispatch()
         return request
@@ -155,11 +196,20 @@ class MPICCluster:
     def _eligible(self) -> List[MPICEngine]:
         cap = self.cfg.max_queue_per_replica
         return [e for e in self.engines
-                if len(e.scheduler.queue) < cap]
+                if e.replica_id not in self._quarantined
+                and len(e.scheduler.queue) < cap]
 
     def _dispatch(self) -> None:
-        """Route pending requests onto replicas with queue headroom."""
+        """Route pending requests onto replicas with queue headroom.  A
+        request whose deadline elapsed while held under backpressure is
+        reaped here (terminal DEADLINE) instead of being routed."""
         while self._pending:
+            if self._pending[0].past_deadline():
+                req = self._pending.popleft()
+                req.state = State.DEADLINE
+                req.error = f"deadline exceeded ({req.deadline_s:.3f}s)"
+                self._expired.append(req)
+                continue
             eligible = self._eligible()
             if not eligible:
                 return                    # backpressure: hold in _pending
@@ -181,23 +231,88 @@ class MPICCluster:
         n = len(self.engines)
         for i in range(n):
             eng = self.engines[(self._rr + i) % n]
+            if eng.replica_id in self._quarantined:
+                continue
             if eng.has_work:
-                eng.step()
+                try:
+                    eng.step()
+                except Exception as exc:
+                    self._quarantine(eng, exc)
             self._dispatch()     # freed capacity is routed immediately
         self._rr = (self._rr + 1) % n
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
+    def _quarantine(self, eng: MPICEngine, exc: Exception) -> None:
+        """Replica failover: take the crashed engine out of rotation and
+        give its whole queue to the healthy replicas.  The drained requests
+        re-enter ``_pending`` reset to WAITING (pages freed and pins
+        released on the way out, see ``MPICEngine.drain_for_failover``);
+        seeded sampling makes the resubmit idempotent — same tokens as an
+        uncrashed run."""
+        self._quarantined[eng.replica_id] = repr(exc)
+        drained = eng.drain_for_failover()
+        self.requeued += len(drained)
+        self._pending.extend(drained)
+        if all(e.replica_id in self._quarantined for e in self.engines):
+            # whole fleet down: surface it now, don't spin to max_steps
+            raise StuckFleetError(
+                f"every replica is quarantined (last: replica "
+                f"{eng.replica_id}: {exc!r})", self.fleet_state())
+        self._dispatch()
+
+    @property
+    def _live_work(self) -> bool:
+        return bool(self._pending) or any(
+            e.has_work for e in self.engines
+            if e.replica_id not in self._quarantined)
+
+    def run(self, max_steps: int = 10_000, *,
+            on_stuck: Optional[str] = None) -> List[Request]:
+        """Step until idle.  Exhausting ``max_steps`` with requests still
+        live raises :class:`StuckFleetError` carrying a
+        :meth:`fleet_state` snapshot (``on_stuck="report"`` — or
+        ``ClusterConfig.on_stuck`` — records it on ``self.stuck_report``
+        and returns instead), so a wedged fleet is never a silent
+        truncation."""
         steps = 0
-        while (self._pending or any(e.has_work for e in self.engines)) \
-                and steps < max_steps:
+        while self._live_work and steps < max_steps:
             self.step()
             steps += 1
+        if self._live_work:
+            mode = on_stuck or self.cfg.on_stuck
+            fleet = self.fleet_state()
+            msg = (f"fleet still has live work after {max_steps} steps: "
+                   f"{len(self._pending)} pending, "
+                   f"{len(self._quarantined)} quarantined replica(s)")
+            if mode == "raise":
+                raise StuckFleetError(msg, fleet)
+            self.stuck_report = {"message": msg, **fleet}
         return self.finished
 
-    def drain(self, max_steps: int = 10_000) -> List[Request]:
+    def drain(self, max_steps: int = 10_000, *,
+              on_stuck: Optional[str] = None) -> List[Request]:
         """Stop accepting new requests and serve everything in flight."""
         self._closed = True
-        return self.run(max_steps)
+        return self.run(max_steps, on_stuck=on_stuck)
+
+    def fleet_state(self) -> dict:
+        """Diagnosable snapshot: pending/quarantine plus each replica's
+        queue depth, slot occupancy, and in-flight prefill count."""
+        return {
+            "pending": len(self._pending),
+            "quarantined": dict(self._quarantined),
+            "replicas": {
+                e.replica_id: {
+                    **e.load_info(),
+                    "running": [
+                        {"req_id": r.req_id, "state": r.state.value,
+                         "cur_len": r.cur_len,
+                         "tokens": len(r.output_tokens)}
+                        for r in e.running if r is not None],
+                    "waiting": [r.req_id for r in e.scheduler.queue],
+                }
+                for e in self.engines
+            },
+        }
 
     def close(self) -> None:
         self._closed = True
@@ -228,6 +343,17 @@ class MPICCluster:
     def failed(self) -> List[Request]:
         return [r for e in self.engines for r in e.failed]
 
+    @property
+    def expired(self) -> List[Request]:
+        """Requests reaped at their deadline, fleet-wide (engine-level
+        reaping + requests that expired while held in ``_pending``)."""
+        return [r for e in self.engines for r in e.expired] + self._expired
+
+    @property
+    def quarantined(self) -> Dict[int, str]:
+        """Replica id → crash reason for replicas taken out of rotation."""
+        return dict(self._quarantined)
+
     # ------------------------------------------------------------------
     def report(self) -> dict:
         done = self.finished
@@ -244,7 +370,10 @@ class MPICCluster:
             "router": self.router.name,
             "requests": len(done),
             "failed": len(self.failed),
+            "expired": len(self.expired),
             "pending": len(self._pending),
+            "quarantined": dict(self._quarantined),
+            "requeued": self.requeued,
             "total_tokens": sum(len(r.output_tokens) for r in done),
             "routing": {
                 "decisions": len(self.decisions),

@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.faults import FaultPlan, ReplicaCrash
 from repro.cache.library import KVLibrary
 from repro.cache.paged import PagedConfig, PagedKVPool
 from repro.cache.transfer import ParallelLoader, PrefetchHandle
@@ -157,7 +158,8 @@ class MPICEngine:
                  mesh=None, shard_rules: Optional[dict] = None,
                  replica_id: Optional[int] = None,
                  loader: Optional[ParallelLoader] = None,
-                 retriever: Optional[Retriever] = None):
+                 retriever: Optional[Retriever] = None,
+                 faults: Optional[FaultPlan] = None):
         """``mesh``: optional :class:`jax.sharding.Mesh` (axes ``data`` ×
         ``model``, e.g. ``repro.launch.mesh.make_serving_mesh``) — the
         engine then serves tensor-parallel: params are committed to
@@ -178,6 +180,7 @@ class MPICEngine:
         self.model = model
         self.cfg = engine_cfg or EngineConfig()
         self.replica_id = replica_id
+        self.faults = faults        # FaultPlan: engine.step crash injection
         self.sharding = None
         self._param_sh = None
         if mesh is not None:
@@ -186,7 +189,7 @@ class MPICEngine:
             self._param_sh = self.sharding.params(params)
             params = jax.device_put(params, self._param_sh)
         self.params = params
-        self.static_lib = static_library or KVLibrary()
+        self.static_lib = static_library or KVLibrary(faults=faults)
         self.dynamic_lib = dynamic_library or KVLibrary(shared=True)
         self.retriever = retriever if retriever is not None else Retriever()
         self.prefix_store = PrefixStore()
@@ -201,6 +204,7 @@ class MPICEngine:
         self.running: List[Optional[Request]] = [None] * self.cfg.decode_slots
         self.finished: List[Request] = []
         self.failed: List[Request] = []     # prefill raised (see _abort_prefill)
+        self.expired: List[Request] = []    # deadline_s elapsed (DEADLINE)
         self._prefill_tasks: Dict[int, ChunkedPrefillTask] = {}
         self._rngs: Dict[str, np.random.Generator] = {}
 
@@ -330,7 +334,19 @@ class MPICEngine:
                 else contextlib.nullcontext())
 
     def step(self) -> None:
+        # crash injection runs BEFORE any per-request work: an injected
+        # replica failure must leave the engine state exactly as the last
+        # completed step did, so the cluster's failover drain sees a clean
+        # snapshot and no individual request gets blamed
+        if self.faults is not None:
+            rule = self.faults.check("engine.step",
+                                     f"replica{self.replica_id}")
+            if rule is not None and rule.kind == "crash":
+                raise ReplicaCrash(
+                    f"injected crash on replica {self.replica_id} "
+                    f"({rule.describe()})")
         with self._shard_ctx():
+            self._reap_deadlines()
             self._advance_prefills()
             self._admit()
             self._decode()
@@ -366,6 +382,13 @@ class MPICEngine:
                 if need > self.pool.free_pages:
                     return
             req, handle = self.scheduler.pop()
+            if req.past_deadline():
+                # reap at admission: a request that waited out its budget
+                # must not occupy a slot just to be reaped next step
+                if handle is not None:
+                    handle.release()
+                self._expire(req)
+                continue
             self._begin_prefill(req, slot, handle)
             admitted += 1
 
@@ -469,13 +492,19 @@ class MPICEngine:
 
     def _abort_prefill(self, slot: int,
                        handle: Optional[PrefetchHandle] = None,
-                       error: Optional[str] = None) -> None:
-        """Free a slot whose prefill raised, so capacity is not leaked.
+                       error: Optional[str] = None, *,
+                       state: State = State.FAILED,
+                       sink: Optional[List[Request]] = None) -> None:
+        """Free a slot whose prefill raised (or was reaped), so capacity is
+        not leaked: handle pins released, the slot's pages freed, the
+        sampling generator dropped.
 
-        The request goes terminal (FAILED, in ``self.failed``) rather than
-        back into the queue: a deterministic error (bad policy kwargs, …)
-        must not retry forever, and a caller that catches the exception from
-        ``step()``/``run()`` can inspect/resubmit it explicitly.
+        By default the request goes terminal (FAILED, in ``self.failed``)
+        rather than back into the queue: a deterministic error (bad policy
+        kwargs, …) must not retry forever, and a caller that catches the
+        exception from ``step()``/``run()`` can inspect/resubmit it
+        explicitly.  Deadline reaping and cluster failover reuse the same
+        resource path with a different terminal ``state``/``sink``.
         """
         if handle is not None:
             handle.release()
@@ -483,9 +512,10 @@ class MPICEngine:
         req = self.running[slot]
         if req is not None:
             req.slot = -1
-            req.state = State.FAILED
+            req.state = state
             req.error = error
-            self.failed.append(req)
+            req.t_done = time.perf_counter()
+            (self.failed if sink is None else sink).append(req)
             # drop the sampling generator too: a resubmit must reproduce
             # from Request.seed, not resume an advanced stream
             self._rngs.pop(req.req_id, None)
@@ -493,6 +523,93 @@ class MPICEngine:
                 self.pool.free(req.req_id)
                 self._page_tables[slot] = self._scratch_page
         self.running[slot] = None
+
+    # -- deadlines + failover ---------------------------------------------
+    def _expire(self, req: Request) -> None:
+        """Terminal DEADLINE transition (resources already released)."""
+        req.state = State.DEADLINE
+        req.error = f"deadline exceeded ({req.deadline_s:.3f}s)"
+        req.t_done = time.perf_counter()
+        self.expired.append(req)
+
+    def _release_slot(self, r: Request) -> None:
+        """Free a RUNNING slot's resources without finishing the request."""
+        self.running[r.slot] = None
+        self._rngs.pop(r.req_id, None)
+        if self._use_paged:
+            self.pool.free(r.req_id)
+            self._page_tables[r.slot] = self._scratch_page
+        else:
+            self._clear_slot(r.slot)
+        r.slot = -1
+
+    def _reap_deadlines(self) -> None:
+        """Expire requests whose wall-clock budget elapsed: waiting queue
+        (with any pre-issued prefetch handle released), mid-chunked-prefill
+        slots (through the ``_abort_prefill`` resource path), and decoding
+        slots (pages freed, pins none, partial output kept on the request).
+        Runs at the top of every engine step; cheap when nothing carries a
+        ``deadline_s``."""
+        now = time.perf_counter()
+        stale = [r for r in self.scheduler.queue if r.past_deadline(now)]
+        for req in stale:
+            self.scheduler.discard(req)
+            self._expire(req)
+        for slot, r in enumerate(self.running):
+            if r is None or not r.past_deadline(now):
+                continue
+            if r.state is State.PREFILLING:
+                task = self._prefill_tasks.get(slot)
+                self._abort_prefill(
+                    slot, handle=task.handle if task is not None else None,
+                    error=f"deadline exceeded ({r.deadline_s:.3f}s)",
+                    state=State.DEADLINE, sink=self.expired)
+            else:
+                self._release_slot(r)
+                self._expire(r)
+
+    def _reset_for_resubmit(self, req: Request) -> None:
+        """Return a drained request to a fresh WAITING state for re-routing.
+        Resubmission is idempotent — decode sampling replays from
+        ``Request.seed`` (the advanced generator was dropped with the slot)
+        so the retried request produces identical tokens.  ``t_arrival`` is
+        preserved: a deadline clock keeps running across a failover."""
+        req.state = State.WAITING
+        req.error = None
+        req.slot = -1
+        req.replica = -1
+        req.output_tokens = []
+        req.cur_len = 0
+        req.t_admitted = req.t_first_token = req.t_done = 0.0
+        req.prefill_stats = {}
+        req.linked_media = []
+        req.load_s = req.load_blocked_s = 0.0
+        req.compute_s = req.overlap_s = 0.0
+
+    def drain_for_failover(self) -> List[Request]:
+        """Strip every non-terminal request off this replica so the cluster
+        can re-route it after a crash: in-flight chunked prefills and
+        running decodes abort through the standard ``_abort_prefill``
+        resource path (pages freed, pins released), queued requests leave
+        via ``scheduler.discard`` (prefetch handles released).  Every
+        drained request comes back reset to WAITING (see
+        :meth:`_reset_for_resubmit`)."""
+        reclaim: List[Request] = []
+        for slot in list(self._prefill_tasks):
+            task = self._prefill_tasks[slot]
+            self._abort_prefill(slot, handle=task.handle,
+                                error="replica failover", sink=reclaim)
+        for slot, r in enumerate(self.running):
+            if r is not None:
+                self._abort_prefill(slot, error="replica failover",
+                                    sink=reclaim)
+        queued = list(self.scheduler.queue)
+        for req in queued:
+            self.scheduler.discard(req)
+        out = reclaim + queued
+        for req in out:
+            self._reset_for_resubmit(req)
+        return out
 
     def _finalize_prefill(self, req: Request, result: PolicyResult,
                           handle: Optional[PrefetchHandle]) -> None:
@@ -749,6 +866,7 @@ class MPICEngine:
             "replica": self.replica_id,
             "requests": len(done),
             "failed": len(self.failed),
+            "expired": len(self.expired),
             "mean_ttft_s": float(np.mean(ttfts)),
             "p90_ttft_s": float(np.percentile(ttfts, 90)),
             "total_tokens": sum(len(r.output_tokens) for r in done),

@@ -20,6 +20,7 @@ class State(enum.Enum):
     RUNNING = "running"     # decode phase (continuous batching slot)
     DONE = "done"
     FAILED = "failed"       # prefill raised; slot freed, request terminal
+    DEADLINE = "deadline"   # deadline_s elapsed; reaped, resources freed
 
 
 @dataclasses.dataclass(eq=False)
@@ -33,6 +34,9 @@ class Request:
     retrieval_query: Optional[np.ndarray] = None
     retrieval_top_k: int = 1
     seed: int = 0                   # sampling PRNG seed (greedy=False)
+    # wall-clock budget from arrival; None = no deadline.  Reaped by the
+    # engine at admission and between steps (terminal DEADLINE state).
+    deadline_s: Optional[float] = None
 
     req_id: str = dataclasses.field(
         default_factory=lambda: f"req{next(_ids)}")
@@ -73,6 +77,15 @@ class Request:
     def load_overlap_ratio(self) -> float:
         """Fraction of this request's load stream hidden under compute."""
         return self.overlap_s / self.load_s if self.load_s > 0 else 0.0
+
+    def past_deadline(self, now: Optional[float] = None) -> bool:
+        """Has this request's wall-clock budget (from arrival) elapsed?
+        Always False without a ``deadline_s``.  The clock keeps running
+        across failover resubmits — ``t_arrival`` is preserved."""
+        if self.deadline_s is None:
+            return False
+        return ((now if now is not None else time.perf_counter())
+                - self.t_arrival > self.deadline_s)
 
     @property
     def done(self) -> bool:

@@ -92,6 +92,17 @@ class WaitingQueue:
             return [item[3] for item in order[:n]]
         return [item[3] for item in heapq.nsmallest(n, self._heap)]
 
+    def remove(self, req: Request) -> bool:
+        """Drop one queued request by identity (deadline reaping).  O(n) —
+        the waiting window is small; re-heapifies in static-priority mode."""
+        for i, item in enumerate(self._heap):
+            if item[3] is req:
+                self._heap.pop(i)
+                if self.aging_s <= 0:
+                    heapq.heapify(self._heap)
+                return True
+        return False
+
     def __len__(self) -> int:
         return len(self._heap)
 
@@ -203,6 +214,17 @@ class PipelinedScheduler:
         window.sort(key=self._slowest_tier_rank)
         for req in window:
             self._handles[req.req_id] = self._issue(req)
+
+    def discard(self, req: Request) -> bool:
+        """Remove a still-waiting request (deadline reaping / failover
+        drain): drops it from the queue and releases any prefetch handle
+        already issued for it (pins freed; in-flight fetches finish and
+        retire on their own).  Returns True if the request was queued."""
+        removed = self.queue.remove(req)
+        handle = self._handles.pop(req.req_id, None)
+        if handle is not None:
+            handle.release()
+        return removed
 
     def __len__(self) -> int:
         return len(self.queue)

@@ -25,6 +25,59 @@ import jax
 import numpy as np
 import pytest
 
+# pytest-timeout is a dev-extra dependency; when absent (offline images),
+# provide a minimal SIGALRM-based fallback so the `timeout` ini default in
+# pyproject.toml and per-test `timeout` markers still guard against wedged
+# tests (main thread, POSIX only — the no-op cases just run unguarded).
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+
+if not _HAVE_PYTEST_TIMEOUT:
+    import signal
+    import threading
+
+    def pytest_addoption(parser):
+        parser.addini("timeout", "per-test timeout in seconds "
+                                 "(conftest SIGALRM fallback)", default="0")
+
+    def pytest_configure(config):
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test timeout override "
+            "(conftest SIGALRM fallback)")
+
+    @pytest.fixture(autouse=True)
+    def _timeout_guard(request):
+        limit = 0.0
+        try:
+            limit = float(request.config.getini("timeout") or 0)
+        except (TypeError, ValueError):
+            pass
+        marker = request.node.get_closest_marker("timeout")
+        if marker is not None and marker.args:
+            limit = float(marker.args[0])
+        if (limit <= 0 or not hasattr(signal, "SIGALRM")
+                or threading.current_thread()
+                is not threading.main_thread()):
+            yield
+            return
+
+        def _alarm(signum, frame):
+            pytest.fail(f"test exceeded {limit:.0f}s timeout "
+                        f"(conftest SIGALRM fallback)", pytrace=False)
+
+        old = signal.signal(signal.SIGALRM, _alarm)
+        signal.alarm(int(limit))
+        try:
+            yield
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old)
+
 
 @pytest.fixture(scope="session")
 def rng():

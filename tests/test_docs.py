@@ -29,8 +29,10 @@ def test_serve_cli_help_smoke():
         [sys.executable, "-m", "repro.launch.serve", "--help"],
         capture_output=True, text=True, env=env, cwd=REPO, timeout=120)
     assert proc.returncode == 0, proc.stderr
-    # the network-tier flags the README/ARCHITECTURE document must exist
-    for flag in ("--peers", "--serve-blocks", "--replicas", "--router"):
+    # the network-tier and fault-tolerance flags the README/ARCHITECTURE
+    # document must exist
+    for flag in ("--peers", "--serve-blocks", "--replicas", "--router",
+                 "--deadline-s", "--fault-plan", "--fault-seed"):
         assert flag in proc.stdout, f"{flag} missing from serve --help"
 
 
@@ -64,6 +66,29 @@ def test_architecture_doc_matches_backend_surface(arch_text):
         assert name in arch_text, f"{name} missing from ARCHITECTURE.md"
     for method in ("put", "get", "delete", "contains", "stats"):
         assert f"`{method}`" in arch_text
+
+
+def test_architecture_doc_covers_failure_handling(arch_text):
+    """The 'Failure handling' section must keep naming the implemented
+    fault-tolerance surface: breaker states, quarantine paths, deadline
+    reaping, the watchdog, and every fault-injection site."""
+    assert "## Failure handling" in arch_text
+    from repro.cache import FaultPlan, PeerBreaker  # noqa: F401
+    from repro.serving import StuckFleetError  # noqa: F401
+    for claim in ("PeerBreaker", "half_open", "breaker_skips",
+                  "FaultPlan", "ReplicaCrash", "StuckFleetError",
+                  "reinstate_disk", "disk_fail_threshold", "io_errors",
+                  "ENOSPC", "drain_for_failover", "_reset_for_resubmit",
+                  "_reap_deadlines", "State.DEADLINE", "stuck_report",
+                  "quarantine"):
+        assert claim in arch_text, f"{claim!r} missing from ARCHITECTURE.md"
+    # every fault site the plan parser accepts is documented
+    for site in ("peer.request", "peer.body", "disk.read", "disk.write",
+                 "loader.fetch", "engine.step"):
+        assert f"`{site}`" in arch_text, \
+            f"fault site {site!r} missing from ARCHITECTURE.md"
+    # the quarantined-disk state is part of the tier diagram
+    assert "[ quarantined ]" in arch_text
 
 
 def test_adding_a_backend_guide_agrees_with_module_docstring(arch_text):

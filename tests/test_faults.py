@@ -1,0 +1,440 @@
+"""Fault tolerance: fault-plan determinism, peer circuit breakers, disk
+quarantine, loader failure containment, deadlines, replica failover and
+the stuck-fleet watchdog — every failure injected through the seeded
+``cache/faults.py`` layer, never hand-mocked."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cache import (
+    TIER_DISK,
+    DictBlockStore,
+    FaultPlan,
+    FaultRule,
+    KVLibrary,
+    KVPeerServer,
+    ParallelLoader,
+    PeerBreaker,
+    PeerTransport,
+    ReplicaCrash,
+)
+from repro.cache.backends import NetworkBackend
+from repro.configs import get_smoke_config
+from repro.core import Prompt, media_segment, text_segment
+from repro.data import image_embeds
+from repro.serving import (
+    ClusterConfig,
+    EngineConfig,
+    MPICCluster,
+    MPICEngine,
+    Request,
+    State,
+    StuckFleetError,
+)
+
+
+def _kv(nbytes=1 << 12):
+    n = nbytes // 8
+    return (np.zeros((1, n // 16, 2, 8), np.float32),
+            np.zeros((1, n // 16, 2, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan units
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_determinism():
+    """Same (spec, seed, event sequence) → bit-identical firing pattern."""
+    spec = "disk.read:io_error:prob=0.4;peer.request:blackhole:start=2"
+    runs = []
+    for _ in range(2):
+        plan = FaultPlan.parse(spec, seed=7)
+        fired = [(plan.check("disk.read", "k") is not None,
+                  plan.check("peer.request", "p") is not None)
+                 for _ in range(50)]
+        runs.append(fired)
+    assert runs[0] == runs[1]
+    assert any(f[0] for f in runs[0]) and not all(f[0] for f in runs[0])
+
+
+def test_fault_plan_window_and_target():
+    plan = FaultPlan([FaultRule("engine.step", "crash", target="replica1",
+                                start=2, stop=3)])
+    assert plan.check("engine.step", "replica0") is None
+    assert plan.check("disk.read", "replica1") is None
+    hits = [plan.check("engine.step", "replica1") for _ in range(4)]
+    assert [h is not None for h in hits] == [False, False, True, False]
+    assert plan.stats()[0]["matched"] == 4
+    assert plan.stats()[0]["fired"] == 1
+
+
+def test_fault_plan_parse_errors():
+    with pytest.raises(ValueError):
+        FaultPlan.parse("justasite")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("disk.read:io_error:notakv")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("disk.read:io_error:bogus=1")
+    # the serve.py alias: delay= means delay_s=
+    plan = FaultPlan.parse("peer.request:latency:delay=0.25")
+    assert plan.rules[0].delay_s == 0.25
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_peer_breaker_state_machine():
+    now = [0.0]
+    br = PeerBreaker(threshold=3, cooldown_s=10.0, clock=lambda: now[0])
+    for _ in range(2):
+        assert br.allow()
+        br.record_failure()
+    assert br.state == PeerBreaker.CLOSED
+    br.record_success()                       # any response resets the streak
+    assert br.failure_streak == 0
+    for _ in range(3):
+        br.record_failure()
+    assert br.state == PeerBreaker.OPEN
+    assert not br.allow() and br.skips == 1   # open: short-circuit
+    now[0] = 11.0
+    assert br.allow()                         # half-open: exactly one probe
+    assert br.state == PeerBreaker.HALF_OPEN
+    assert not br.allow()                     # second concurrent probe denied
+    br.record_failure()                       # probe failed → reopen
+    assert br.state == PeerBreaker.OPEN
+    now[0] = 22.0
+    assert br.allow()
+    br.record_success()                       # probe succeeded → close
+    assert br.state == PeerBreaker.CLOSED and br.failure_streak == 0
+
+
+def test_dead_peer_trips_breaker_and_bounds_cost():
+    """A blackholed peer pays its timeout only ``threshold`` times; after
+    the breaker opens every miss is a free skip, not a timeout."""
+    srv = KVPeerServer(DictBlockStore())
+    try:
+        t = PeerTransport(srv.address, timeout_s=0.05, retries=0)
+        nb = NetworkBackend([t], faults=FaultPlan.parse(
+            "peer.request:blackhole"), breaker_cooldown_s=60.0)
+        for i in range(3):
+            assert nb.get(f"ident{i}") is None
+        assert nb.breakers[t.address].state == PeerBreaker.OPEN
+        t0 = time.perf_counter()
+        for i in range(3, 6):
+            assert nb.get(f"ident{i}") is None
+        assert time.perf_counter() - t0 < 0.04   # skipped, not timed out
+        s = nb.stats()
+        assert s["breaker_skips"] == 3
+        assert s["breakers"][t.address]["state"] == "open"
+        assert s["breakers"][t.address]["opened"] == 1
+    finally:
+        srv.close()
+
+
+def test_miss_responses_are_health_not_failure():
+    """404 from a live peer is a definitive miss, never breaker food."""
+    srv = KVPeerServer(DictBlockStore())
+    try:
+        t = PeerTransport(srv.address, timeout_s=0.5, retries=0)
+        nb = NetworkBackend([t])
+        for i in range(5):
+            assert nb.get(f"nothing{i}") is None
+        br = nb.breakers[t.address]
+        assert br.state == PeerBreaker.CLOSED
+        assert br.failure_streak == 0 and br.skips == 0
+    finally:
+        srv.close()
+
+
+def test_single_transport_failure_recovers():
+    """One no-response below the threshold must not open the breaker, and
+    the next live response clears the streak."""
+    srv = KVPeerServer(DictBlockStore())
+    try:
+        t = PeerTransport(srv.address, timeout_s=0.05, retries=0)
+        nb = NetworkBackend([t], faults=FaultPlan.parse(
+            "peer.request:blackhole:stop=1"))
+        assert nb.get("a") is None            # faulted: transport failure
+        br = nb.breakers[t.address]
+        assert br.state == PeerBreaker.CLOSED and br.failure_streak == 1
+        assert nb.get("b") is None            # live 404
+        assert br.failure_streak == 0 and br.skips == 0
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# disk-tier degradation
+# ---------------------------------------------------------------------------
+
+def test_disk_quarantine_after_consecutive_read_failures(tmp_path):
+    k, v = _kv(1 << 14)
+    per = k.nbytes + v.nbytes
+    lib = KVLibrary(hbm_capacity=per, host_capacity=1,
+                    spool_dir=str(tmp_path),
+                    faults=FaultPlan.parse("disk.read:io_error"))
+    for m in "abc":                 # each put spools the previous to disk
+        lib.put("u", m, k, v)
+    lib.put("u", "d", k, v)
+    assert sorted(m for m in "abc"
+                  if lib.peek_tier("u", m) == TIER_DISK) == list("abc")
+    for m in "abc":                 # 3 consecutive injected IO failures
+        assert lib.get("u", m) is None        # device error ⇒ miss
+    deg = lib.stats()["degraded"]
+    assert deg["disk_quarantined"] is True
+    assert deg["disk_failure_streak"] >= 3
+    assert lib.stats()["tiers"][TIER_DISK]["quarantined"] is True
+    assert lib.get("u", "d") is not None      # memory tier keeps serving
+    # spooling is off while quarantined: new pressure never reaches disk
+    n_disk = sum(1 for e in lib._entries.values() if e.tier == TIER_DISK)
+    lib.put("u", "e", k, v)
+    lib.put("u", "f", k, v)
+    assert sum(1 for e in lib._entries.values()
+               if e.tier == TIER_DISK) == n_disk
+    lib.reinstate_disk()                      # operator override
+    assert lib.stats()["degraded"]["disk_quarantined"] is False
+
+
+def test_enospc_counts_but_never_quarantines(tmp_path):
+    """A full disk is an operator signal, not a dying device: the demotion
+    fails non-fatally (entry stays resident) and the tier stays live."""
+    k, v = _kv(1 << 14)
+    per = k.nbytes + v.nbytes
+    lib = KVLibrary(hbm_capacity=per, host_capacity=1,
+                    spool_dir=str(tmp_path),
+                    faults=FaultPlan.parse("disk.write:enospc"))
+    a = lib.put("u", "a", k, v)
+    lib.put("u", "b", k, v)         # pressure → spool "a" → injected ENOSPC
+    assert a.k is not None                    # failed demotion: still resident
+    deg = lib.stats()["degraded"]
+    assert deg["enospc"] >= 1 and deg["spool_failures"] >= 1
+    assert deg["disk_quarantined"] is False
+    assert deg["disk_failure_streak"] == 0    # ENOSPC never feeds the streak
+    assert lib.get("u", "a") is not None
+
+
+# ---------------------------------------------------------------------------
+# loader failure containment (worker exceptions = counted miss)
+# ---------------------------------------------------------------------------
+
+def test_loader_worker_error_is_counted_miss_not_exception(tmp_path):
+    lib = KVLibrary(spool_dir=str(tmp_path),
+                    faults=FaultPlan.parse("loader.fetch:error:target=bad"))
+    k, v = _kv()
+    lib.put("u", "bad", k, v)
+    lib.put("u", "good", k, v)
+    loader = ParallelLoader(lib, 2)
+    try:
+        h = loader.prefetch_handle("u", ["bad", "good"])
+        assert h.get("bad") is None           # injected worker exception
+        assert h.get("good") is not None
+        assert loader.load_failures == 1
+        assert h.get("bad") is None           # re-gather: still a calm miss
+        h.release()
+    finally:
+        loader.close()
+
+
+def test_loader_stall_delays_but_still_delivers(tmp_path):
+    lib = KVLibrary(spool_dir=str(tmp_path), faults=FaultPlan.parse(
+        "loader.fetch:stall:delay=0.1,stop=1"))
+    k, v = _kv()
+    lib.put("u", "m", k, v)
+    loader = ParallelLoader(lib, 2)
+    try:
+        t0 = time.perf_counter()
+        h = loader.prefetch_handle("u", ["m"])
+        assert h.get("m") is not None
+        assert time.perf_counter() - t0 >= 0.1
+        assert loader.load_failures == 0
+        h.release()
+    finally:
+        loader.close()
+
+
+# ---------------------------------------------------------------------------
+# serving: deadlines, abort contract, crash failover, watchdog
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_smoke_config("llava-1.6-7b")
+    from repro.models import build_model
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, seed, media=("A", "B"), user_id="u1"):
+    r = np.random.default_rng(seed)
+    segs = [text_segment(r.integers(8, 200, 5))]
+    for mid in media:
+        segs.append(media_segment(mid, image_embeds(mid, 16, cfg.d_model)))
+        segs.append(text_segment(r.integers(8, 200, 4)))
+    return Prompt(segs, user_id=user_id)
+
+
+def _upload_all(target, cfg, media=("A", "B"), user_id="u1"):
+    for mid in media:
+        target.upload(user_id, mid, image_embeds(mid, 16, cfg.d_model))
+
+
+def _req(cfg, seed, **kw):
+    kw.setdefault("max_new_tokens", 3)
+    return Request(prompt=_prompt(cfg, seed), policy="mpic",
+                   policy_kwargs={"k": 4}, **kw)
+
+
+def test_engine_crash_injection_raises_replica_crash(model_and_params):
+    cfg, model, params = model_and_params
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2),
+                     faults=FaultPlan.parse("engine.step:crash"))
+    with pytest.raises(ReplicaCrash):
+        eng.step()
+
+
+def test_deadline_reaps_waiting_request(model_and_params):
+    cfg, model, params = model_and_params
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2))
+    _upload_all(eng, cfg)
+    baseline = eng.pool.free_pages
+    expired = eng.submit(_req(cfg, 1, deadline_s=1e-6))
+    ok = eng.submit(_req(cfg, 2))
+    time.sleep(0.01)
+    eng.run()
+    assert expired.state is State.DEADLINE
+    assert expired in eng.expired and "deadline" in expired.error
+    assert ok.done and len(ok.output_tokens) == 3
+    assert eng.pool.free_pages == baseline    # nothing leaked
+    assert eng.report()["expired"] == 1
+
+
+def test_deadline_reaps_mid_decode(model_and_params):
+    """A request that outlives its budget while decoding is released
+    (slot + pages freed, partial output kept) and the engine keeps
+    serving afterwards."""
+    cfg, model, params = model_and_params
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2))
+    _upload_all(eng, cfg)
+    baseline = eng.pool.free_pages
+    doomed = eng.submit(_req(cfg, 3, max_new_tokens=100_000,
+                             deadline_s=0.4))
+    eng.run()
+    assert doomed.state is State.DEADLINE and doomed in eng.expired
+    assert eng.pool.free_pages == baseline
+    survivor = eng.submit(_req(cfg, 4))
+    eng.run()
+    assert survivor.done and len(survivor.output_tokens) == 3
+
+
+def _pin_census(lib):
+    return {k: e.meta.pins for k, e in lib._entries.items() if e.meta.pins}
+
+
+def test_abort_prefill_returns_resources_to_baseline(model_and_params):
+    """drain_for_failover mid-chunked-prefill: free pages and pin counts
+    return to baseline and the request resets to an idempotent WAITING."""
+    cfg, model, params = model_and_params
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2,
+                                  prefill_chunk_tokens=8))
+    _upload_all(eng, cfg)
+    baseline = eng.pool.free_pages
+    req = eng.submit(_req(cfg, 5))
+    for _ in range(6):
+        if eng._prefill_tasks:
+            break
+        eng.step()
+    assert eng._prefill_tasks, "prefill never went mid-flight"
+    drained = eng.drain_for_failover()
+    assert drained == [req]
+    assert req.state is State.WAITING
+    assert req.output_tokens == [] and req.slot == -1 and req.replica == -1
+    assert eng.pool.free_pages == baseline
+    assert _pin_census(eng.static_lib) == {}
+    # idempotent resubmit on the same engine completes normally
+    eng.submit(req)
+    eng.run()
+    assert req.done and len(req.output_tokens) == 3
+
+
+def test_abort_prefill_with_stalled_loader(model_and_params):
+    """The abort contract holds even while a loader worker is stalled on
+    an injected slow fetch — pins drop once the worker retires."""
+    cfg, model, params = model_and_params
+    plan = FaultPlan.parse("loader.fetch:stall:delay=0.2,target=A")
+    eng = MPICEngine(model, params,
+                     EngineConfig(max_seq_len=128, decode_slots=2,
+                                  prefill_chunk_tokens=8),
+                     faults=plan)
+    _upload_all(eng, cfg)
+    baseline = eng.pool.free_pages
+    req = eng.submit(_req(cfg, 6, deadline_s=0.05))
+    time.sleep(0.06)                # budget elapses while the fetch stalls
+    eng.run()
+    assert req.state is State.DEADLINE and req in eng.expired
+    assert eng.pool.free_pages == baseline
+    eng.loader.close()              # join workers: stalled fetch retires
+    assert _pin_census(eng.static_lib) == {}
+
+
+def test_stuck_fleet_watchdog(model_and_params):
+    cfg, model, params = model_and_params
+    cluster = MPICCluster(model, params,
+                          EngineConfig(max_seq_len=128, decode_slots=2),
+                          ClusterConfig(replicas=2))
+    _upload_all(cluster, cfg)
+    req = cluster.submit(_req(cfg, 7))
+    with pytest.raises(StuckFleetError) as ei:
+        cluster.run(max_steps=0)
+    assert "replicas" in ei.value.fleet or ei.value.fleet  # snapshot attached
+    # report mode: same detection, recorded instead of raised
+    assert cluster.run(max_steps=0, on_stuck="report") is not None
+    assert cluster.stuck_report is not None
+    cluster.run()                             # fleet is fine, just early-cut
+    assert req.done
+    cluster.close()
+
+
+def test_replica_crash_failover_token_parity(model_and_params):
+    """Crash replica 0 mid-run: its queue fails over, every request still
+    completes, and tokens are identical to an uncrashed fleet."""
+    cfg, model, params = model_and_params
+
+    def serve(faults):
+        cluster = MPICCluster(
+            model, params, EngineConfig(max_seq_len=128, decode_slots=2),
+            ClusterConfig(replicas=2, router="least_loaded", router_seed=0,
+                          faults=faults))
+        _upload_all(cluster, cfg)
+        reqs = [cluster.submit(_req(cfg, 30 + i)) for i in range(6)]
+        cluster.run()
+        rep = cluster.report()
+        cluster.close()
+        return reqs, rep
+
+    healthy, _ = serve(None)
+    crashed, rep = serve(FaultPlan.parse(
+        "engine.step:crash:target=replica0,start=2,stop=3"))
+    assert all(r.done for r in crashed)
+    assert 0 in rep["quarantined"] and rep["requeued"] > 0
+    assert [r.output_tokens for r in crashed] == \
+        [r.output_tokens for r in healthy]
+
+
+def test_all_replicas_down_raises(model_and_params):
+    cfg, model, params = model_and_params
+    cluster = MPICCluster(
+        model, params, EngineConfig(max_seq_len=128, decode_slots=2),
+        ClusterConfig(replicas=2, faults=FaultPlan.parse(
+            "engine.step:crash")))     # every step of every replica crashes
+    _upload_all(cluster, cfg)
+    cluster.submit(_req(cfg, 50))
+    with pytest.raises(StuckFleetError):
+        cluster.run()
+    cluster.close()
