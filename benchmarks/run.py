@@ -29,8 +29,9 @@ def main() -> None:
                             fig6_parallel_transfer, fig8_kv_distance,
                             fig9_main_comparison, fig10_sensitivity,
                             fig_cluster_throughput, fig_decode_paged,
-                            fig_fault_tolerance, fig_prefill_paged,
-                            fig_sharded_serving, roofline_table)
+                            fig_fault_tolerance, fig_fleet_recovery,
+                            fig_prefill_paged, fig_sharded_serving,
+                            roofline_table)
     suite = {
         "fig3": fig3_prefix_vs_fullreuse.main,
         "fig4": fig4_attention_sparsity.main,
@@ -44,6 +45,7 @@ def main() -> None:
         "prefill_paged": fig_prefill_paged.main,
         "cluster_throughput": fig_cluster_throughput.main,
         "fault_tolerance": fig_fault_tolerance.main,
+        "fleet_recovery": fig_fleet_recovery.main,
         "sharded_serving": fig_sharded_serving.main,
         "roofline": roofline_table.main,
     }

@@ -49,13 +49,15 @@ import errno
 import hashlib
 import io
 import os
+import tempfile
 import threading
 import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.cache.quant import QuantizedKV, spool_payload, unspool_payload
+from repro.cache.quant import (QuantizedKV, read_spool_meta, spool_payload,
+                               unspool_payload)
 
 TIER_HBM = "hbm"
 TIER_HOST = "host"
@@ -141,6 +143,7 @@ class BlockMetadata:
     media_id: str
     key: Optional[str] = None          # content-hash block key (see content_key)
     ident: Optional[str] = None        # scope digest — network/spool address
+    scope_user: Optional[str] = None   # scope's user half (spool rehydration)
     nbytes: int = 0                    # stored bytes once known (survives spool)
     dtype: Optional[str] = None
     shape: Optional[Tuple[int, ...]] = None
@@ -382,14 +385,58 @@ class DiskBackend(StorageBackend):
         os.makedirs(spool_dir, exist_ok=True)
         self.counters["corrupt"] = 0
         self.counters["io_errors"] = 0
+        self.counters["tmp_swept"] = 0
         self.faults = faults          # FaultPlan (disk.read / disk.write)
         # consecutive device-level IO failures (reads + writes); any
         # successful IO resets it.  The library quarantines the whole tier
         # when this crosses its threshold (degraded, memory-only mode).
         self.failure_streak = 0
+        # a crash mid-put leaves `<key>.npz.tmp` behind (the final name is
+        # only ever created by os.replace, so it is always whole); sweep
+        # the orphans so the spool dir holds nothing but complete blocks
+        for fname in os.listdir(spool_dir):
+            if fname.endswith(".tmp"):
+                try:
+                    os.unlink(os.path.join(spool_dir, fname))
+                    self.counters["tmp_swept"] += 1
+                except OSError:
+                    pass
 
     def path_for(self, key: str) -> str:
         return os.path.join(self.spool_dir, f"{key}.npz")
+
+    def scan(self):
+        """Yield ``(key, path)`` for every complete block file in the spool
+        dir, sorted for determinism.  Used by the library's cold-start
+        rehydration; ``.tmp`` orphans were already swept at construction."""
+        for fname in sorted(os.listdir(self.spool_dir)):
+            if fname.endswith(".npz"):
+                yield fname[:-4], os.path.join(self.spool_dir, fname)
+
+    @staticmethod
+    def _sidecar(meta: Optional[BlockMetadata]) -> Optional[dict]:
+        """JSON-safe rehydration sidecar from block metadata: everything a
+        cold-started library needs to re-index the file without parsing the
+        arrays — scope, ident, TTL, size.  ``None`` when the caller gave no
+        metadata (raw backend users); such files still load, they just
+        don't rehydrate."""
+        if meta is None:
+            return None
+        return {"media_id": meta.media_id,
+                "user_id": meta.scope_user,
+                "key": meta.key,
+                "ident": meta.ident,
+                "nbytes": meta.nbytes,
+                "dtype": meta.dtype,
+                "shape": list(meta.shape) if meta.shape else None,
+                "created": meta.created,
+                "expires": meta.expires}
+
+    def read_meta(self, path: str) -> Optional[dict]:
+        """Read a block file's ``__meta__`` rehydration sidecar (see
+        ``cache/quant.py``).  ``None`` for legacy files; raises on corrupt
+        bytes so the rehydration scan can unlink and continue."""
+        return read_spool_meta(path)
 
     def _io_failure(self) -> None:
         with self._lock:
@@ -404,8 +451,18 @@ class DiskBackend(StorageBackend):
             meta: Optional[BlockMetadata] = None) -> None:
         """Unlike ``get``, a write failure **raises** (``OSError``): the
         caller (the library's ``_spool``) must keep the entry resident —
-        swallowing the error here would silently drop the bytes."""
+        swallowing the error here would silently drop the bytes.
+
+        Writes are atomic: bytes land in a **unique** ``<key>.*.npz.tmp``
+        (``tempfile.mkstemp`` — concurrent writers of the same key must
+        not share a tmp path, or one ``os.replace`` steals the other's
+        file) and ``os.replace`` publishes the final name only after a
+        full flush, so a crash mid-write can never leave a torn file
+        under a real key and racing same-key writers each publish a
+        whole file (last one wins; content is identical by key).
+        """
         path = self.path_for(key)
+        tmp = None
         try:
             if self.faults is not None:
                 rule = self.faults.check("disk.write", path)
@@ -413,7 +470,22 @@ class DiskBackend(StorageBackend):
                     code = (errno.ENOSPC if rule.kind == "enospc"
                             else errno.EIO)
                     raise OSError(code, f"injected {rule.kind}", path)
-            spool_payload(path, payload)
+            try:
+                fd, tmp = tempfile.mkstemp(dir=self.spool_dir,
+                                           prefix=f"{key}.",
+                                           suffix=".npz.tmp")
+                with os.fdopen(fd, "wb") as f:
+                    spool_payload(f, payload, meta=self._sidecar(meta))
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+            except BaseException:
+                if tmp is not None:
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+                raise
         except OSError as exc:
             # ENOSPC is a full disk, not a dying one: count the IO error
             # but keep it out of the quarantine streak

@@ -211,7 +211,8 @@ class KVLibrary:
                  quantize: bool = False,
                  peers: Optional[List[str]] = None,
                  faults=None,
-                 disk_fail_threshold: int = 3):
+                 disk_fail_threshold: int = 3,
+                 rehydrate: bool = False):
         self.quantize = quantize     # int8 KV storage (cache/quant.py)
         self.default_ttl = default_ttl
         self.shared = shared          # dynamic library: no user scoping
@@ -236,6 +237,14 @@ class KVLibrary:
                        for t in (TIER_HBM, TIER_HOST, TIER_DISK,
                                  TIER_NETWORK)}
         self._misses = 0
+        # cold-start warm recovery: rescan the spool dir and re-index the
+        # surviving blocks at the disk tier.  Opt-in — the default spool
+        # dir is shared by many ephemeral libraries, and silently adopting
+        # a stranger's blocks would be surprising; a supervised fleet host
+        # with a stable per-host spool dir passes rehydrate=True.
+        self.rehydrate_stats: Dict[str, int] = {}
+        if rehydrate:
+            self.rehydrate_stats = self.rehydrate_spool()
 
     # -- tier plumbing ------------------------------------------------------
     @property
@@ -331,6 +340,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         key = self._key(user_id, media_id)
         e.meta.key = content_key(e.payload, key)
         e.meta.ident = scope_digest(key)
+        e.meta.scope_user = key[0]
         e.meta.dtype, e.meta.shape = e.payload.dtype, e.payload.shape
         e._owner = self
         with self._lock:
@@ -364,6 +374,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
                   expires=now + (ttl if ttl is not None else self.default_ttl),
                   _nbytes=nbytes)
         e.meta.ident = scope_digest(key)
+        e.meta.scope_user = key[0]
         e._owner = self
         with self._lock:
             if key in self._entries:
@@ -527,6 +538,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             p.k, p.v, p.qk, p.qv
         e.meta.key = hdrs.get("X-Block-Key") or content_key(e.payload, key)
         e.meta.ident = ident
+        e.meta.scope_user = key[0]
         e.meta.dtype, e.meta.shape = e.payload.dtype, e.payload.shape
         e._owner = self
         with self._lock:
@@ -626,6 +638,83 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             for k in dead:
                 self._evict(k)
         return len(dead)
+
+    # -- cold-start warm recovery ----------------------------------------------
+    def rehydrate_spool(self) -> Dict[str, int]:
+        """Rebuild the entry index from the spool dir after a crash/restart.
+
+        For every complete block file (``.tmp`` orphans were swept by the
+        backend), read its ``__meta__`` sidecar and re-register a
+        payload-less **disk-tier** entry under the recorded scope — the
+        content-hash filename is self-verifying, so the arrays themselves
+        are not touched until the first ``materialize`` (whose verified
+        read still guards against bit rot).  A restarted host therefore
+        rejoins with its disk tier intact: peers can fetch its blocks
+        immediately (``export_block`` serves spooled entries straight from
+        file) and local gets load instead of recomputing.
+
+        Scan rules: expired blocks and corrupt/unreadable files are
+        unlinked and counted, never fatal; legacy files without a sidecar
+        and scopes that already have a live entry are skipped.  Returns
+        the counts: ``rehydrated`` / ``skipped`` / ``corrupt`` /
+        ``expired``.
+        """
+        stats = {"rehydrated": 0, "skipped": 0, "corrupt": 0, "expired": 0}
+        now = time.time()
+        for key_str, path in self.disk.scan():
+            try:
+                meta = self.disk.read_meta(path)
+            except Exception:
+                # truncated zip / bad magic: junk from a previous life —
+                # unlink so the next scan is clean, keep scanning
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+                stats["corrupt"] += 1
+                continue
+            if meta is None or not meta.get("media_id") \
+                    or meta.get("user_id") is None:
+                stats["skipped"] += 1      # legacy file: no scope recorded
+                continue
+            expires = float(meta.get("expires", float("inf")))
+            if now > expires:
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+                stats["expired"] += 1
+                continue
+            scope = (meta["user_id"], meta["media_id"])
+            e = Entry(media_id=meta["media_id"], tier=TIER_DISK,
+                      created=float(meta.get("created", now)), last_used=now,
+                      expires=expires, path=path,
+                      _nbytes=int(meta.get("nbytes", 0)))
+            e.meta.key = meta.get("key") or key_str
+            e.meta.ident = meta.get("ident") or scope_digest(scope)
+            e.meta.scope_user = meta["user_id"]
+            e.meta.dtype = meta.get("dtype")
+            shape = meta.get("shape")
+            e.meta.shape = tuple(shape) if shape else None
+            e._owner = self
+            with self._lock:
+                if scope in self._entries:
+                    stats["skipped"] += 1  # live entry wins over the spool
+                    continue
+                self._entries[scope] = e
+                self._by_ident[e.meta.ident] = scope
+            stats["rehydrated"] += 1
+        return stats
+
+    def ident_tiers(self) -> Dict[str, str]:
+        """Snapshot ``{ident: tier}`` for every unexpired entry — the
+        gossiped warmth payload a fleet host puts in its heartbeat so the
+        front-end router can score affinity without shared memory.  Lock:
+        one pass under the library lock, no payloads touched."""
+        now = time.time()
+        with self._lock:
+            return {e.meta.ident: e.tier for e in self._entries.values()
+                    if e.meta.ident and now <= e.expires}
 
     # -- peer-server source protocol (KVPeerServer duck type) ------------------
     def export_block(self, ident: str):
@@ -740,8 +829,13 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             if m.ident is None:
                 m.ident = scope_digest(key)
                 self._by_ident.setdefault(m.ident, key)
+            if m.scope_user is None:
+                m.scope_user = key[0]
+            m.nbytes = e.payload.stored_nbytes
             try:
-                self.disk.put(m.key, e.payload)  # int8 form wins if present
+                # int8 form wins if present; the metadata rides along as
+                # the file's rehydration sidecar (scope/ident/TTL)
+                self.disk.put(m.key, e.payload, e.meta)
             except OSError as exc:
                 # counted, non-fatal demotion failure: the entry stays
                 # resident (arrays untouched) and the rebalance moves on to
@@ -751,7 +845,6 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
                 if getattr(exc, "errno", None) == errno.ENOSPC:
                     self._enospc += 1
                 return False
-            m.nbytes = e.payload.stored_nbytes
             e.path = self.disk.path_for(m.key)
             self.memory.delete(m.key)
             e.payload.k = e.payload.v = None

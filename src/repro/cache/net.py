@@ -293,6 +293,28 @@ class DictBlockStore:
             return ident in self._blocks
 
 
+class ReusableThreadingHTTPServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer pinned to restart-in-place semantics.
+
+    A supervised engine host dies (kill -9) and is respawned on the SAME
+    port — its identity to peers and the router.  The old socket's
+    TIME_WAIT/FIN_WAIT remnants must not block the rebind, so
+    ``SO_REUSEADDR`` is set explicitly (not inherited behavior we hope
+    for), handler threads are daemons (a wedged peer read cannot hold the
+    process open), and the listener closes even if ``server_bind`` raised
+    half-way.  Used by both :class:`KVPeerServer` and the fleet host's
+    control server (``launch/fleet.py``).
+    """
+
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def server_bind(self):
+        import socket
+        self.socket.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        super().server_bind()
+
+
 class _Handler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"
 
@@ -378,8 +400,7 @@ class KVPeerServer:
 
     def __init__(self, source, *, host: str = "127.0.0.1", port: int = 0,
                  delay_s: float = 0.0):
-        self._httpd = ThreadingHTTPServer((host, port), _Handler)
-        self._httpd.daemon_threads = True
+        self._httpd = ReusableThreadingHTTPServer((host, port), _Handler)
         self._httpd.source = source
         self._httpd.delay_s = delay_s
         self._httpd._lock = threading.Lock()
@@ -408,6 +429,16 @@ class KVPeerServer:
                     "served_bytes": self._httpd.served_bytes}
 
     def close(self) -> None:
-        self._httpd.shutdown()
-        self._httpd.server_close()
+        """Idempotent clean shutdown: stop the accept loop, close the
+        listening socket, and join the server thread — after this returns
+        the port is immediately rebindable (``SO_REUSEADDR`` covers the
+        crash case where close() never ran)."""
+        try:
+            self._httpd.shutdown()
+        except Exception:
+            pass
+        try:
+            self._httpd.server_close()
+        except Exception:
+            pass
         self._thread.join(timeout=5)

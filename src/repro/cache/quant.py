@@ -18,6 +18,7 @@ is byte-compatible with a peer fetching it over the wire.
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import numpy as np
 
@@ -78,13 +79,18 @@ def _from_wire(z, name: str) -> np.ndarray:
     return a
 
 
-def spool_payload(file, payload) -> None:
+def spool_payload(file, payload, meta: dict | None = None) -> None:
     """Serialize a KV payload to ``file`` (path or file-like) as npz.
 
     ``payload`` is duck-typed (``k``/``v``/``qk``/``qv`` attributes — see
     :class:`repro.cache.backends.KVPayload`).  Quantized storage wins when
     present: an entry that was dequantized for compute spools its int8
     arrays, not the fp32 copy, so the disk/wire bytes stay 4× smaller.
+
+    ``meta``, when given, is embedded as a ``__meta__`` JSON field.  The
+    content hash covers only the stored arrays, so the sidecar never
+    perturbs key verification — it exists purely so a cold-started library
+    can rebuild its index (scope, ident, TTL) from the spool dir alone.
     """
     if payload.qk is not None:
         fields = {"qk": payload.qk.q, "qk_scale": payload.qk.scale,
@@ -94,6 +100,8 @@ def spool_payload(file, payload) -> None:
     wire = {}
     for name, a in fields.items():
         wire.update(_to_wire(name, a))
+    if meta is not None:
+        wire["__meta__"] = np.array(json.dumps(meta))
     np.savez(file, **wire)
 
 
@@ -101,8 +109,10 @@ def unspool_payload(file) -> dict:
     """Parse one spooled npz block back into payload fields.
 
     Returns ``{"k": ..., "v": ...}`` or ``{"qk": QuantizedKV, "qv": ...}``.
-    Raises whatever ``np.load`` raises on truncated/corrupt bytes — callers
-    (the disk and network backends) map that to a tier miss, never a crash.
+    The ``__meta__`` rehydration sidecar (see :func:`read_spool_meta`) is
+    ignored here — it is not a payload field.  Raises whatever ``np.load``
+    raises on truncated/corrupt bytes — callers (the disk and network
+    backends) map that to a tier miss, never a crash.
     """
     with np.load(file) as z:
         if "qk" in z:
@@ -111,3 +121,17 @@ def unspool_payload(file) -> dict:
                     "qv": QuantizedKV(_from_wire(z, "qv"),
                                       _from_wire(z, "qv_scale"))}
         return {"k": _from_wire(z, "k"), "v": _from_wire(z, "v")}
+
+
+def read_spool_meta(file) -> dict | None:
+    """Read just the ``__meta__`` sidecar from a spooled block.
+
+    Returns ``None`` for legacy files spooled without one.  Cheap relative
+    to :func:`unspool_payload` — npz members decompress lazily, so the KV
+    arrays are never touched.  Raises on corrupt/truncated files; the
+    rehydration scan maps that to unlink-and-continue.
+    """
+    with np.load(file) as z:
+        if "__meta__" not in z.files:
+            return None
+        return json.loads(str(z["__meta__"]))

@@ -83,6 +83,11 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help=">1: serve through an MPICCluster of N "
                          "data-parallel engine replicas")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help=">0: serve through a supervised MULTI-PROCESS "
+                         "fleet of N engine hosts (one process + spool "
+                         "dir + peer block server each) behind the "
+                         "heartbeat router — see launch/fleet.py")
     ap.add_argument("--router", default="affinity",
                     choices=["random", "least_loaded", "affinity"],
                     help="cluster routing policy (with --replicas > 1)")
@@ -107,6 +112,17 @@ def main():
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for fault-plan probability draws")
     args = ap.parse_args()
+    if args.fleet > 0:
+        # multi-process path: the supervisor owns model building, uploads
+        # and the request wave — every other engine knob that matters
+        # cross-process is forwarded, the rest are in-process only
+        from repro.launch.fleet import run_fleet
+        run_fleet(hosts=args.fleet, requests=args.requests,
+                  arch=args.arch, policy=args.policy,
+                  max_new_tokens=args.max_new_tokens,
+                  mpic_k=args.mpic_k, router=args.router,
+                  deadline_s=args.deadline_s)
+        return
     peers = [p.strip() for p in args.peers.split(",") if p.strip()]
     faults = None
     if args.fault_plan:

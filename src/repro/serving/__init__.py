@@ -10,6 +10,7 @@ from repro.serving.router import (
     ReplicaView,
     Router,
     RoutingDecision,
+    heartbeat_view,
     make_router,
 )
 from repro.serving.scheduler import (
@@ -23,5 +24,6 @@ __all__ = [
     "ClusterConfig", "MPICCluster", "StuckFleetError",
     "ROUTERS", "Router", "RandomRouter", "LeastLoadedRouter",
     "AffinityRouter", "ReplicaView", "RoutingDecision", "make_router",
+    "heartbeat_view",
     "ChunkedPrefillTask", "PipelinedScheduler", "WaitingQueue",
 ]

@@ -26,19 +26,27 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.cache.library import TIER_HBM, TIER_HOST
+from repro.cache.backends import scope_digest
+from repro.cache.library import TIER_DISK, TIER_HBM, TIER_HOST
 from repro.serving.request import Request
 
 
 @dataclasses.dataclass
 class ReplicaView:
-    """Snapshot of one eligible replica at routing time."""
+    """Snapshot of one eligible replica at routing time.
+
+    ``address`` makes the same view (and the same scoring) work across
+    process boundaries: an in-process cluster leaves it ``None`` and
+    dispatches by ``replica_id``; the multi-process fleet fills in the
+    host's control address and the decision routes by address.
+    """
     replica_id: int
     free_slots: int
     queue_depth: int
     free_pages: int
     total_pages: int
     warmth: Dict[str, int]      # tier -> count over THIS request's media ids
+    address: Optional[str] = None   # control address (fleet route-by-address)
 
     @property
     def load_score(self) -> float:
@@ -56,6 +64,7 @@ class RoutingDecision:
     replica: int
     scores: Dict[int, float]    # replica -> routing score (empty for random)
     warmth: Dict[str, int]      # chosen replica's media-tier histogram
+    address: Optional[str] = None   # chosen host's address (fleet routing)
 
 
 class Router:
@@ -71,10 +80,11 @@ class Router:
               ) -> RoutingDecision:
         assert views, "router needs at least one eligible replica"
         replica, scores = self.choose(req, views)
-        warmth = next(v.warmth for v in views if v.replica_id == replica)
+        chosen = next(v for v in views if v.replica_id == replica)
         return RoutingDecision(req_id=req.req_id, policy=self.name,
                                replica=replica, scores=scores,
-                               warmth=dict(warmth))
+                               warmth=dict(chosen.warmth),
+                               address=chosen.address)
 
 
 class RandomRouter(Router):
@@ -103,24 +113,30 @@ class AffinityRouter(Router):
 
     ``w_hbm``/``w_host`` weight per-replica HBM hits vs host-resident hits
     (any replica can load host entries, only the holder skips the transfer
-    entirely).  The load score is scaled down so it only decides between
-    equally-warm replicas — affinity never sends a request to a saturated
-    replica, because the cluster only offers eligible (non-backpressured)
-    views.
+    entirely).  ``w_disk`` is the fleet signal: a host whose spool dir has
+    the block (e.g. freshly rehydrated after a restart) loads it instead
+    of recomputing, so disk-warm beats cold.  In a shared-library cluster
+    every replica sees the same disk, so the term cancels and in-process
+    routing is unchanged.  The load score is scaled down so it only
+    decides between equally-warm replicas — affinity never sends a request
+    to a saturated replica, because the cluster only offers eligible
+    (non-backpressured) views.
     """
 
     name = "affinity"
 
     def __init__(self, w_hbm: float = 2.0, w_host: float = 1.0,
-                 w_load: float = 0.01):
+                 w_disk: float = 0.5, w_load: float = 0.01):
         self.w_hbm = w_hbm
         self.w_host = w_host
+        self.w_disk = w_disk
         self.w_load = w_load
 
     def choose(self, req, views):
         scores = {
             v.replica_id: (self.w_hbm * v.warmth.get(TIER_HBM, 0)
                            + self.w_host * v.warmth.get(TIER_HOST, 0)
+                           + self.w_disk * v.warmth.get(TIER_DISK, 0)
                            + self.w_load * v.load_score)
             for v in views
         }
@@ -161,3 +177,30 @@ def replica_view(engine, library, req: Request,
                        free_pages=info["free_pages"],
                        total_pages=info["total_pages"],
                        warmth=warmth)
+
+
+def heartbeat_view(host_id: int, address: str, heartbeat: dict,
+                   req: Request) -> ReplicaView:
+    """Build a routable view from a fleet host's gossiped heartbeat.
+
+    The heartbeat (``GET /health`` on the host's control server) carries
+    the same ``load_info`` fields an in-process engine exposes plus a
+    ``media`` map of ``{scope ident: tier}`` — the host library's
+    ``ident_tiers()`` snapshot.  Warmth for THIS request is recomputed
+    here by digesting each media segment's scope, so the router scores a
+    remote host exactly like a local replica, with no shared memory.
+    """
+    load = heartbeat.get("load", {})
+    media = heartbeat.get("media", {})
+    warmth: Dict[str, int] = {}
+    for _, seg in req.prompt.media_segments():
+        ident = scope_digest((req.prompt.user_id, seg.media_id))
+        tier = media.get(ident, "miss")
+        warmth[tier] = warmth.get(tier, 0) + 1
+    return ReplicaView(replica_id=host_id,
+                       free_slots=load.get("free_slots", 0),
+                       queue_depth=load.get("queue_depth", 0),
+                       free_pages=load.get("free_pages", 0),
+                       total_pages=load.get("total_pages", 0),
+                       warmth=warmth,
+                       address=address)

@@ -32,7 +32,7 @@ def test_serve_cli_help_smoke():
     # the network-tier and fault-tolerance flags the README/ARCHITECTURE
     # document must exist
     for flag in ("--peers", "--serve-blocks", "--replicas", "--router",
-                 "--deadline-s", "--fault-plan", "--fault-seed"):
+                 "--deadline-s", "--fault-plan", "--fault-seed", "--fleet"):
         assert flag in proc.stdout, f"{flag} missing from serve --help"
 
 
@@ -89,6 +89,46 @@ def test_architecture_doc_covers_failure_handling(arch_text):
             f"fault site {site!r} missing from ARCHITECTURE.md"
     # the quarantined-disk state is part of the tier diagram
     assert "[ quarantined ]" in arch_text
+
+
+def test_architecture_doc_covers_deployment_topology(arch_text):
+    """The 'Deployment topology' section must keep naming the implemented
+    fleet surface: the supervisor API, the heartbeat/restart state machine
+    knobs, and the rehydration scan counters."""
+    assert "## Deployment topology" in arch_text
+    from repro.cache import KVLibrary
+    from repro.launch import fleet
+
+    # supervisor surface the doc names
+    for name in ("FleetSupervisor", "encode_request", "decode_request",
+                 "encode_upload", "host_main"):
+        assert hasattr(fleet, name), f"fleet.{name} gone"
+    for claim in ("FleetSupervisor", "encode_request", "heartbeat_view",
+                  "KVPeerServer", "MPICEngine", "ident_tiers",
+                  "SO_REUSEADDR", "--serve-host"):
+        assert claim in arch_text, f"{claim!r} missing from ARCHITECTURE.md"
+    # state-machine knobs are real FleetSupervisor ctor params
+    import inspect
+    params = inspect.signature(fleet.FleetSupervisor.__init__).parameters
+    for knob in ("heartbeat_s", "miss_threshold", "start_grace_s",
+                 "linger_s"):
+        assert knob in params, f"FleetSupervisor lost the {knob} knob"
+        assert f"`{knob}`" in arch_text, \
+            f"{knob!r} missing from ARCHITECTURE.md"
+    # rehydration: the method, the sidecar, and every scan counter
+    assert hasattr(KVLibrary, "rehydrate_spool")
+    for claim in ("rehydrate_spool", "rehydrate_stats", "__meta__",
+                  "spool_payload", "os.replace", "tmp_swept"):
+        assert claim in arch_text, f"{claim!r} missing from ARCHITECTURE.md"
+    for counter in ("rehydrated", "expired", "corrupt", "skipped"):
+        assert f"`{counter}`" in arch_text or f"(`{counter}`)" in arch_text, \
+            f"scan counter {counter!r} missing from ARCHITECTURE.md"
+    # the control-plane endpoints in the diagram are the ones served
+    src = inspect.getsource(fleet)
+    for ep in ("/health", "/submit", "/upload", "/results", "/drain",
+               "/shutdown"):
+        assert f'"{ep}"' in src, f"fleet ctrl endpoint {ep} gone"
+        assert ep in arch_text, f"endpoint {ep} missing from ARCHITECTURE.md"
 
 
 def test_adding_a_backend_guide_agrees_with_module_docstring(arch_text):

@@ -1,0 +1,255 @@
+"""Cold-start rehydration + atomic spool writes + peer-server restarts.
+
+The durability story a supervised fleet host leans on: a ``kill -9``-ed
+process restarts with the same spool dir, rescans it, and re-registers
+every surviving block at the disk tier (``KVLibrary(rehydrate=True)``)
+— so the host rejoins *warm* with no recompute.  These tests drive that
+path for every storage dtype (fp32, bf16 via the ``__dtype`` sidecar,
+int8-quantized), prove the rehydrated blocks are bit-exact both locally
+and served over the peer protocol, and pin the crash hygiene around it:
+atomic tmp+rename spool writes, orphan sweeping, corrupt-file tolerance,
+and the block server's bind-after-crash restart.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.cache import (
+    TIER_DISK,
+    DictBlockStore,
+    DiskBackend,
+    KVLibrary,
+    KVPeerServer,
+    PeerTransport,
+)
+from repro.cache.quant import dequantize_kv, spool_payload
+
+
+def _kv(seed=0, n=64, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    k = rng.standard_normal((2, n, 2, 8)).astype(np.float32)
+    v = rng.standard_normal((2, n, 2, 8)).astype(np.float32)
+    return k.astype(dtype), v.astype(dtype)
+
+
+def _tiny_lib(tmp_path, **kw):
+    """Caps of 1 byte at BOTH memory tiers: every put spools immediately,
+    which is exactly a fleet host under memory pressure."""
+    return KVLibrary(hbm_capacity=1, host_capacity=1,
+                     spool_dir=str(tmp_path), **kw)
+
+
+# ---------------------------------------------------------------------------
+# rehydration across dtypes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_rehydrate_fp_bit_exact(tmp_path, dtype):
+    k, v = _kv(1, dtype=dtype)
+    lib = _tiny_lib(tmp_path)
+    lib.put("u", "img", k, v)
+    assert lib.ident_tiers() and \
+        set(lib.ident_tiers().values()) == {TIER_DISK}
+
+    lib2 = _tiny_lib(tmp_path, rehydrate=True)
+    assert lib2.rehydrate_stats["rehydrated"] == 1
+    assert set(lib2.ident_tiers().values()) == {TIER_DISK}
+    e = lib2.get("u", "img")
+    assert e is not None
+    e.materialize()
+    assert e.k.dtype == dtype           # fp16 survives the npz round-trip
+    np.testing.assert_array_equal(e.k, k)
+    np.testing.assert_array_equal(e.v, v)
+
+
+def test_rehydrate_bf16_sidecar_bit_exact(tmp_path):
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    k, v = _kv(2, dtype=ml_dtypes.bfloat16)
+    lib = _tiny_lib(tmp_path)
+    lib.put("u", "img", k, v)
+
+    lib2 = _tiny_lib(tmp_path, rehydrate=True)
+    assert lib2.rehydrate_stats["rehydrated"] == 1
+    e = lib2.get("u", "img").materialize()
+    assert e.k.dtype == k.dtype       # __dtype sidecar restored bf16
+    np.testing.assert_array_equal(e.k.view(np.uint16), k.view(np.uint16))
+    np.testing.assert_array_equal(e.v.view(np.uint16), v.view(np.uint16))
+
+
+def test_rehydrate_quantized_int8(tmp_path):
+    from repro.cache.quant import quantize_kv
+    k, v = _kv(3)
+    lib = _tiny_lib(tmp_path, quantize=True)
+    lib.put("u", "img", k, v)       # spooled (and nulled) immediately
+    ref = quantize_kv(k)            # what the library stored
+
+    lib2 = _tiny_lib(tmp_path, rehydrate=True, quantize=True)
+    assert lib2.rehydrate_stats["rehydrated"] == 1
+    e = lib2.get("u", "img").materialize()
+    # the int8 storage round-tripped bit-exactly; compute copy matches its
+    # dequantization (the same arrays any other get would produce)
+    np.testing.assert_array_equal(e.qk.q, ref.q)
+    np.testing.assert_array_equal(e.qk.scale, ref.scale)
+    np.testing.assert_array_equal(e.k, dequantize_kv(e.qk))
+
+
+def test_rehydrate_restores_scope_ident_and_ttl(tmp_path):
+    k, v = _kv(4)
+    lib = _tiny_lib(tmp_path)
+    orig = lib.put("u", "img", k, v, ttl=3600.0)
+    lib.put("other-user", "img", k, v)    # same media, different scope
+
+    lib2 = _tiny_lib(tmp_path, rehydrate=True)
+    assert lib2.rehydrate_stats["rehydrated"] == 2
+    # the gossiped warmth map sees the rehydrated blocks as disk-warm
+    # (before any get, which would promote them)
+    assert set(lib2.ident_tiers().values()) == {TIER_DISK}
+    e = lib2.get("u", "img")
+    assert e.meta.ident == orig.meta.ident
+    assert e.meta.key == orig.meta.key
+    assert abs(e.expires - orig.expires) < 1.0
+    assert lib2.get("other-user", "img") is not None
+    assert lib2.get("stranger", "img") is None    # scoping survived
+
+
+def test_rehydrate_drops_expired_blocks(tmp_path):
+    import time as _time
+    k, v = _kv(5)
+    lib = _tiny_lib(tmp_path)
+    lib.put("u", "old", k, v, ttl=0.2)    # alive long enough to spool
+    lib.put("u", "live", k, v)
+    _time.sleep(0.25)
+
+    lib2 = _tiny_lib(tmp_path, rehydrate=True)
+    assert lib2.rehydrate_stats["expired"] == 1
+    assert lib2.rehydrate_stats["rehydrated"] == 1
+    assert lib2.get("u", "live") is not None
+    # the expired file was unlinked, not just skipped
+    assert len(list(lib2.disk.scan())) == 1
+
+
+def test_rehydrate_corrupt_file_unlinked_scan_continues(tmp_path):
+    k, v = _kv(6)
+    lib = _tiny_lib(tmp_path)
+    lib.put("u", "good", k, v)
+    junk = tmp_path / ("ff" * 16 + "-" + "ee" * 4 + ".npz")
+    junk.write_bytes(b"this is not an npz archive")
+
+    lib2 = _tiny_lib(tmp_path, rehydrate=True)
+    assert lib2.rehydrate_stats["corrupt"] == 1
+    assert lib2.rehydrate_stats["rehydrated"] == 1
+    assert not junk.exists()                  # unlinked, never fatal
+    e = lib2.get("u", "good").materialize()
+    np.testing.assert_array_equal(e.k, k)
+
+
+def test_rehydrate_skips_legacy_files_without_sidecar(tmp_path):
+    k, v = _kv(7)
+    lib = _tiny_lib(tmp_path)
+    e = lib.put("u", "img", k, v)
+    legacy = tmp_path / (e.meta.key[:-2] + "xx.npz")
+    with open(legacy, "wb") as f:
+        spool_payload(f, e.materialize().payload)      # no meta sidecar
+
+    lib2 = _tiny_lib(tmp_path, rehydrate=True)
+    assert lib2.rehydrate_stats["skipped"] == 1
+    assert legacy.exists()        # legacy blocks are left alone
+
+
+def test_rehydrated_block_served_over_peer_protocol(tmp_path):
+    """Post-restart, a peer fetching from the rehydrated host gets the
+    exact bytes the pre-crash host would have served."""
+    k, v = _kv(8)
+    lib = _tiny_lib(tmp_path / "host0")
+    lib.put("u", "img", k, v)
+
+    restarted = _tiny_lib(tmp_path / "host0", rehydrate=True)
+    assert restarted.rehydrate_stats["rehydrated"] == 1
+    server = KVPeerServer(restarted)
+    try:
+        consumer = KVLibrary(spool_dir=str(tmp_path / "host1"),
+                             peers=[server.address])
+        consumer.register_remote("u", "img")
+        e = consumer.get("u", "img").materialize()
+        np.testing.assert_array_equal(e.k, k)
+        np.testing.assert_array_equal(e.v, v)
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# atomic spool writes
+# ---------------------------------------------------------------------------
+
+
+def test_spool_put_is_atomic_no_tmp_left(tmp_path):
+    k, v = _kv(9)
+    lib = _tiny_lib(tmp_path)
+    lib.put("u", "img", k, v)
+    names = os.listdir(tmp_path)
+    assert names and all(n.endswith(".npz") for n in names), names
+
+
+def test_failed_spool_write_leaves_no_torn_file(tmp_path, monkeypatch):
+    """A crash mid-write must leave neither the final file (torn) nor the
+    tmp (orphan): the write goes to ``<key>.npz.tmp`` and only a complete
+    ``os.replace`` publishes it."""
+    import repro.cache.backends as backends_mod
+
+    be = DiskBackend(str(tmp_path))
+    k, v = _kv(10)
+
+    def boom(file, payload, meta=None):
+        file.write(b"partial bytes")
+        raise IOError("simulated crash mid-serialize")
+
+    monkeypatch.setattr(backends_mod, "spool_payload", boom)
+    from repro.cache import BlockMetadata, KVPayload
+    payload = KVPayload(k=k, v=v)
+    with pytest.raises(IOError):
+        be.put("aa" * 16 + "-" + "bb" * 4, payload, BlockMetadata("m"))
+    assert os.listdir(tmp_path) == []     # no final, no tmp
+
+
+def test_orphan_tmp_swept_at_construction(tmp_path):
+    (tmp_path / "deadbeef.npz.tmp").write_bytes(b"half a block")
+    k, v = _kv(11)
+    lib = _tiny_lib(tmp_path)
+    assert lib.disk.counters["tmp_swept"] == 1
+    assert not (tmp_path / "deadbeef.npz.tmp").exists()
+    # and a rehydrating library never sees tmp junk either
+    lib.put("u", "img", k, v)
+    lib2 = _tiny_lib(tmp_path, rehydrate=True)
+    assert lib2.rehydrate_stats["corrupt"] == 0
+
+
+# ---------------------------------------------------------------------------
+# peer block server: restart-in-place
+# ---------------------------------------------------------------------------
+
+
+def test_peer_server_rebinds_same_port_after_close(tmp_path):
+    """Crash-restart reuses the host's stable block port: close must
+    leave the port immediately re-bindable (SO_REUSEADDR + clean thread
+    shutdown), and the reborn server must actually serve."""
+    store = DictBlockStore()
+    server = KVPeerServer(store)
+    port = int(server.address.rsplit(":", 1)[1])
+    server.close()
+
+    reborn = KVPeerServer(store, port=port)     # same port, no EADDRINUSE
+    try:
+        assert reborn.address.endswith(f":{port}")
+        t = PeerTransport(reborn.address, timeout_s=2.0, retries=0)
+        assert t.probe("no-such-ident") is False    # answers (404), alive
+        assert t.last_status == 404
+    finally:
+        reborn.close()
+
+
+def test_peer_server_close_is_idempotent():
+    server = KVPeerServer(DictBlockStore())
+    server.close()
+    server.close()      # second close must not raise
