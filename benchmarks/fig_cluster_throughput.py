@@ -76,6 +76,18 @@ ROUTERS = ("random", "affinity")
 NET_MEDIA_LEN = scaled(192, 48)
 NET_REQUESTS = scaled(6, 2)
 NET_MEDIA_PER_REQ = 2
+# fixed-HBM leg: 16-bit pool vs int8-resident pool at the SAME byte budget
+# (PagedConfig.page_nbytes is the denominator; int8 pays its per-page fp32
+# scale rows inside the budget).  The budget is sized to hold FIXED_CONC16
+# concurrent requests' pages at 16-bit — the int8 pool fits ~2x as many,
+# which is the capacity-bound throughput edge being measured.
+# FIXED_MAX_NEW == FIXED_PAGE: the page-aligned prompt's admission-time
+# allocation then covers every decode token (no mid-decode extend), and
+# decode — where residency pays — dominates the per-request work
+FIXED_PAGE = 32
+FIXED_CONC16 = scaled(4, 2)     # concurrent requests the 16-bit budget holds
+FIXED_REQS = scaled(8, 4)
+FIXED_MAX_NEW = scaled(32, 4)
 
 OUT_PATH = os.environ.get(
     "MPIC_BENCH_OUT",
@@ -348,6 +360,121 @@ def run_network_legs(model, params, cfg):
     }
 
 
+# ---------------------------------------------------------------------------
+# fixed-HBM leg: 16-bit pool vs int8 pool at the same byte budget
+# ---------------------------------------------------------------------------
+
+def run_fixed_hbm_leg(model, params, cfg):
+    """Serve one capacity-bound wave twice — once on the model-dtype
+    (16-bit) pool, once on the int8-resident pool — with ``num_pages``
+    derived from ONE shared HBM byte budget via ``PagedConfig.page_nbytes``
+    (the int8 pool's per-page scale rows are charged against the budget).
+
+    The wave submits more concurrent requests than the 16-bit pool can
+    hold pages for, so its extra requests wait in the queue while the int8
+    pool decodes them in the same batched steps: the int8 edge is
+    *capacity*, not kernel speed.  Reports warm-entry capacity (requests
+    resident at once) and wall-clock throughput for both."""
+    from repro.cache.paged import PagedConfig
+
+    mcfg = model.cfg
+
+    def page_nbytes(dtype_):
+        return PagedConfig(num_pages=1, page_size=FIXED_PAGE,
+                           num_layers=mcfg.num_layers,
+                           num_kv_heads=mcfg.num_kv_heads,
+                           head_dim=mcfg.head_dim,
+                           dtype=dtype_).page_nbytes
+
+    # prompt length is a page multiple: admission allocates pages for
+    # total_len+1 tokens, so a page-aligned prompt's allocation already
+    # holds all FIXED_MAX_NEW (<= FIXED_PAGE) decode tokens — no
+    # mid-decode pool.extend, whose out-of-pages fallback truncates the
+    # request instead of queueing it.  The leg must measure the capacity
+    # queue, not truncation semantics.
+    assert FIXED_MAX_NEW <= FIXED_PAGE, "growth must fit the aligned page"
+    tail = (-(5 + MEDIA_LEN)) % FIXED_PAGE or FIXED_PAGE
+
+    def prompts():
+        out = []
+        for i in range(FIXED_REQS):
+            r = np.random.default_rng(1000 + i)
+            out.append(Prompt([
+                text_segment(r.integers(8, 200, 5)),
+                media_segment("fx-hot", image_embeds("fx-hot", MEDIA_LEN,
+                                                     cfg.d_model)),
+                text_segment(r.integers(8, 200, tail)),
+            ], user_id="fx"))
+        return out
+
+    tokens_per_req = prompts()[0].total_len + FIXED_MAX_NEW
+    pages_per_req = -(-tokens_per_req // FIXED_PAGE)
+    # budget: scratch + FIXED_CONC16 requests' pages at 16-bit
+    budget = page_nbytes(cfg.compute_dtype) * (1 + FIXED_CONC16
+                                               * pages_per_req)
+
+    legs = {}
+    for pool_dtype in ("", "int8"):
+        label = pool_dtype or cfg.compute_dtype
+        num_pages = budget // page_nbytes(pool_dtype or cfg.compute_dtype)
+        eng = MPICEngine(model, params,
+                         EngineConfig(max_seq_len=128,
+                                      decode_slots=FIXED_REQS,
+                                      page_size=FIXED_PAGE,
+                                      num_pages=num_pages,
+                                      pool_dtype=pool_dtype))
+        eng.upload("fx", "fx-hot", image_embeds("fx-hot", MEDIA_LEN,
+                                                cfg.d_model))
+        # jit warm-up outside the timed window (same shapes as the wave)
+        warm = Request(prompt=prompts()[0], max_new_tokens=FIXED_MAX_NEW,
+                       policy="mpic", policy_kwargs={"k": 4})
+        eng.submit(warm)
+        eng.run()
+
+        reqs = [Request(prompt=p, max_new_tokens=FIXED_MAX_NEW,
+                        policy="mpic", policy_kwargs={"k": 4})
+                for p in prompts()]
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        wall = time.perf_counter() - t0
+        assert all(r.done and len(r.output_tokens) == FIXED_MAX_NEW
+                   for r in reqs), f"fixed-HBM {label} leg did not finish"
+        legs[label] = {
+            "pool_dtype": label,
+            "page_nbytes": page_nbytes(pool_dtype or cfg.compute_dtype),
+            "num_pages": int(num_pages),
+            "warm_entries": int((num_pages - 1) // pages_per_req),
+            "wall_s": round(wall, 3),
+            "throughput_rps": round(len(reqs) / wall, 3),
+            "decode_tokens_per_s": round(len(reqs) * FIXED_MAX_NEW / wall,
+                                         1),
+        }
+
+    b16, q8 = legs[cfg.compute_dtype], legs["int8"]
+    capacity_ratio = round(q8["warm_entries"] / b16["warm_entries"], 2)
+    throughput_ratio = round(q8["throughput_rps"] / b16["throughput_rps"],
+                             2)
+    # capacity is arithmetic on page_nbytes — it must hold even in smoke
+    assert capacity_ratio >= 1.8, (
+        f"int8 pool holds only {capacity_ratio}x the 16-bit warm entries "
+        f"at the same byte budget (need >= 1.8x)")
+    if not smoke():
+        assert throughput_ratio >= 1.3, (
+            f"int8 pool throughput edge {throughput_ratio}x < 1.3x on the "
+            f"capacity-bound wave")
+    return {
+        "byte_budget": int(budget),
+        "pages_per_request": pages_per_req,
+        "requests": FIXED_REQS,
+        "concurrent_requests_16bit_budget": FIXED_CONC16,
+        "legs": legs,
+        "warm_entry_capacity_ratio": capacity_ratio,
+        "throughput_ratio": throughput_ratio,
+    }
+
+
 def main():
     cfg, model, params = build_bench_model()
     trace = make_trace(cfg)
@@ -396,6 +523,12 @@ def main():
         assert net["wall_peer_pull_s"] < net["wall_recompute_s"], \
             "peer pull must beat recompute at the paper-scale load profile"
 
+    fixed = run_fixed_hbm_leg(model, params, cfg)
+    print(f"  fixed-HBM: int8 pool holds "
+          f"{fixed['warm_entry_capacity_ratio']}x warm entries, "
+          f"{fixed['throughput_ratio']}x throughput on the capacity-bound "
+          f"wave", flush=True)
+
     for r in rows:
         r["ttft_ms"] = r["wave_b_mean_ttft_ms"]   # emit() CSV contract
     emit(rows, "cluster")
@@ -403,7 +536,8 @@ def main():
            "scaling_4x_vs_1x_affinity": scaling,
            "scaling_4x_vs_1x_random": scaling_random,
            "affinity_hbm_edge_at_4x": affinity_edge,
-           "network_tier": net}
+           "network_tier": net,
+           "fixed_hbm_int8": fixed}
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[cluster] scaling 4x/1x: affinity {scaling}x, random "

@@ -103,11 +103,15 @@ class Entry:
     properties, so code and tests written against the pre-backend Entry
     keep working unchanged.
 
-    Residency contract: ``e.k is None and e.qk is None`` ⟺ the payload
-    has been demoted out of memory (disk or network tier).  Reading the
-    arrays without pinning is only safe while holding the library lock;
-    across a lock release, hold a pin (``get(pin=True)``/``try_pin``) or
-    the arrays may be nulled by a concurrent ``_spool``.
+    Residency contract: ``e.payload.k is None and e.payload.qk is None``
+    ⟺ the payload has been demoted out of memory (disk or network tier).
+    Residency checks must read the ``payload`` fields — the flat ``e.k``
+    getter dequantizes int8 storage into the fp compute copy as a lazy
+    side effect (see :meth:`_lazy_kv`), which a mere check must not
+    trigger.  Reading the arrays without pinning is only safe while
+    holding the library lock; across a lock release, hold a pin
+    (``get(pin=True)``/``try_pin``) or the arrays may be nulled by a
+    concurrent ``_spool``.
     """
 
     def __init__(self, media_id: str, k=None, v=None, tier: str = TIER_HBM,
@@ -130,10 +134,46 @@ class Entry:
 
     # -- legacy flat surface (forwarding properties) -----------------------
     media_id = property(lambda s: s.meta.media_id)
-    k = property(lambda s: s.payload.k,
-                 lambda s, x: setattr(s.payload, "k", x))
-    v = property(lambda s: s.payload.v,
-                 lambda s, x: setattr(s.payload, "v", x))
+
+    def _lazy_kv(self):
+        """Dequantize the int8 payload into the fp compute copy on first
+        ``.k``/``.v`` access.  Lazy (it used to run eagerly inside
+        ``materialize``) so int8→int8 consumers — the paged pool's
+        ``link_write_q8`` zero-copy path — never pay the fp expansion.
+        Serializes on ``_mlock``; callers must NOT hold it (no internal
+        path does — ``_materialize_locked``/``_spool`` read the payload
+        fields directly)."""
+        with self._mlock:
+            if self.payload.k is None and self.payload.qk is not None:
+                self.payload.k = dequantize_kv(self.payload.qk)
+                self.payload.v = dequantize_kv(self.payload.qv)
+                if self._owner is not None:
+                    self._owner._note_dequant()
+        return self.payload
+
+    @property
+    def k(self):
+        """fp compute view (dequantized lazily from int8 storage).
+        Residency checks must read ``payload.k`` instead — this getter
+        materializes the fp copy as a side effect."""
+        if self.payload.k is None and self.payload.qk is not None:
+            return self._lazy_kv().k
+        return self.payload.k
+
+    @k.setter
+    def k(self, x):
+        self.payload.k = x
+
+    @property
+    def v(self):
+        if self.payload.v is None and self.payload.qv is not None:
+            return self._lazy_kv().v
+        return self.payload.v
+
+    @v.setter
+    def v(self, x):
+        self.payload.v = x
+
     qk = property(lambda s: s.payload.qk,
                   lambda s, x: setattr(s.payload, "qk", x))
     qv = property(lambda s: s.payload.qv,
@@ -162,9 +202,12 @@ class Entry:
         return total if total else self.meta.nbytes
 
     def materialize(self) -> "Entry":
-        """Make the arrays resident (promote from disk/network if needed)
-        and dequantized.  Thread-safe: concurrent callers serialize on the
-        per-entry ``_mlock``, so one slow fetch serves all of them.  Raises
+        """Make the arrays resident (promote from disk/network if needed).
+        Quantized entries stay int8 here — the fp compute copy is built
+        lazily by the first ``.k``/``.v`` access, so consumers that read
+        the int8 bytes directly (spool→pool zero-copy link) never trigger
+        it.  Thread-safe: concurrent callers serialize on the per-entry
+        ``_mlock``, so one slow fetch serves all of them.  Raises
         ``FileNotFoundError`` when every lower tier misses — callers treat
         that as a cache miss and fall back to recompute."""
         with self._mlock:
@@ -172,9 +215,11 @@ class Entry:
         return self
 
     def _materialize_locked(self) -> None:
-        """Body of :meth:`materialize`; caller holds ``_mlock``."""
+        """Body of :meth:`materialize`; caller holds ``_mlock`` (so only
+        ``payload`` fields are read — the lazy ``.k`` getter would
+        deadlock on the non-reentrant lock)."""
         if (self.tier in (TIER_DISK, TIER_NETWORK)
-                and self.k is None and self.qk is None):
+                and self.payload.k is None and self.payload.qk is None):
             if self._owner is not None:
                 self._owner._fetch_into(self)
             else:
@@ -188,10 +233,6 @@ class Entry:
             # otherwise every accessed disk entry would stay resident
             # forever, invisible to the caps
             self.tier = TIER_HOST
-        if self.qk is not None and self.k is None:
-            # dequantize at link time (int8 storage, fp compute)
-            self.payload.k = dequantize_kv(self.qk)
-            self.payload.v = dequantize_kv(self.qv)
 
 
 class KVLibrary:
@@ -237,6 +278,12 @@ class KVLibrary:
                        for t in (TIER_HBM, TIER_HOST, TIER_DISK,
                                  TIER_NETWORK)}
         self._misses = 0
+        # int8 conversion census: ``dequants`` counts lazy int8→fp
+        # expansions (Entry._lazy_kv); ``direct_links`` counts blocks the
+        # consumers linked straight from their int8 bytes instead (the
+        # paged pool's link_write_q8 zero-copy path)
+        self._dequants = 0
+        self._direct_links = 0
         # cold-start warm recovery: rescan the spool dir and re-index the
         # surviving blocks at the disk tier.  Opt-in — the default spool
         # dir is shared by many ephemeral libraries, and silently adopting
@@ -316,6 +363,18 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
     def _count(self, tier: str, what: str, n: int = 1) -> None:
         with self._clock:
             self._tiers[tier][what] += n
+
+    def _note_dequant(self, n: int = 1) -> None:
+        """One lazy int8→fp expansion happened (Entry._lazy_kv)."""
+        with self._clock:
+            self._dequants += n
+
+    def note_direct_link(self, n: int = 1) -> None:
+        """Consumers report blocks linked straight from int8 bytes (the
+        paged pool's ``link_write_q8``) — each is a skipped
+        dequantize→requantize round trip."""
+        with self._clock:
+            self._direct_links += n
 
     # -- keys ----------------------------------------------------------------
     def _key(self, user_id: str, media_id: str):
@@ -561,7 +620,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             e = self._entries.get(self._key(user_id, media_id))
             if e is None or time.time() > e.expires:
                 return
-            if e.k is None and e.qk is None:
+            if e.payload.k is None and e.payload.qk is None:
                 return      # spooled since the gather: HBM claim would lie
             e.last_used = time.time()
             fresh = replica not in e.hbm_replicas or e.tier != TIER_HBM
@@ -577,7 +636,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         ``_spool`` checks pins under the same lock, so a successful pin
         guarantees the arrays stay until the matching :meth:`unpin`."""
         with self._lock:
-            if entry.k is None and entry.qk is None:
+            if entry.payload.k is None and entry.payload.qk is None:
                 return False
             entry._pins += 1
             return True
@@ -620,7 +679,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             # HBM-warm on another replica is still host-resident RAM here
             if replica in e.hbm_replicas:
                 return TIER_HBM
-            if e.k is not None or e.qk is not None:
+            if e.payload.k is not None or e.payload.qk is not None:
                 return TIER_HOST
             return (e.tier if e.tier in (TIER_DISK, TIER_NETWORK)
                     else TIER_HOST)
@@ -736,7 +795,8 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
                        "X-TTL-Remaining": repr(max(0.0, ttl))}
             if e.meta.key:
                 headers["X-Block-Key"] = e.meta.key
-            resident = e.k is not None or e.qk is not None
+            resident = (e.payload.k is not None
+                        or e.payload.qk is not None)
             if resident:
                 e._pins += 1
             path = e.path
@@ -912,6 +972,8 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             tiers = {t: dict(c) for t, c in self._tiers.items()
                      if t != TIER_NETWORK or self.network is not None}
             out["misses"] = self._misses
+            out["dequants"] = self._dequants
+            out["direct_links"] = self._direct_links
         for tier, backend in ((TIER_DISK, self.disk),
                               (TIER_NETWORK, self.network)):
             if backend is None or tier not in tiers:

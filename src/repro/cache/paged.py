@@ -18,6 +18,15 @@ Mesh-sharded serving: construct with ``sharding=`` (kv heads on the
 while every pool-owned write pins the same sharding on its outputs — the
 pool never leaves the mesh, and reads (``gather``) stream only the local
 kv-head slice per shard.
+
+Int8 residency (``dtype="int8"``): the pages store int8 with one running
+fp32 scale per ``(layer, page, kv_head)`` in sibling ``k_scale``/
+``v_scale`` buffers (see :mod:`repro.cache.pagequant` for the write math
+and the no-clip argument).  Every write path quantizes in its donated jit;
+the paged attention kernels dequantize in-register from the same scale
+buffers, so the pool is never materialized in fp — ~2x the warm tokens
+per byte of a fp16 pool (scalar scales cost ``2*L*Hkv*4`` bytes per page
+against ``2*L*ps*Hkv*Dh`` payload bytes).
 """
 from __future__ import annotations
 
@@ -31,6 +40,8 @@ import numpy as np
 
 from repro.models.layers import rope_relink
 
+from .pagequant import quant_scatter
+
 
 @dataclasses.dataclass
 class PagedConfig:
@@ -40,6 +51,21 @@ class PagedConfig:
     num_kv_heads: int
     head_dim: int
     dtype: str = "bfloat16"
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype == "int8"
+
+    @property
+    def page_nbytes(self) -> int:
+        """HBM bytes one page costs (k + v payload, plus the per-page scale
+        rows when int8) — the fixed-HBM benchmark's capacity denominator."""
+        itemsize = {"int8": 1, "bfloat16": 2, "float16": 2}.get(self.dtype, 4)
+        n = 2 * self.num_layers * self.page_size * self.num_kv_heads \
+            * self.head_dim * itemsize
+        if self.quantized:
+            n += 2 * self.num_layers * self.num_kv_heads * 4
+        return n
 
 
 def _pool_link_impl(pool_k, pool_v, pages, offs, k_seg, v_seg, delta, *,
@@ -67,6 +93,52 @@ def _scatter_tokens_impl(pool_k, pool_v, pages, offs, k_new, v_new):
     return pool_k, pool_v
 
 
+def _pool_link_q_impl(pool_k, pool_v, k_scale, v_scale, pages, offs,
+                      k_seg, v_seg, delta, *, theta: float, relink: bool):
+    """Quantized-pool variant of :func:`_pool_link_impl`: relink in fp,
+    then quantize-on-write through the running page scales."""
+    if relink:
+        k_seg = rope_relink(k_seg, delta, theta)
+    return quant_scatter(pool_k, pool_v, k_scale, v_scale, pages, offs,
+                         k_seg, v_seg)
+
+
+def _pool_link_q8_impl(pool_k, pool_v, k_scale, v_scale, pages, offs,
+                       qk_seg, qk_scale, qv_seg, qv_scale, seg_ids, delta,
+                       *, theta: float, relink: bool):
+    """Spool→pool zero-copy link: the segments arrive as the library's int8
+    bytes plus their per-segment spool scales, and are rescaled onto the
+    page grid inside this one donated jit — no host dequantize→requantize
+    round trip and no fp copy of the block ever leaves the device.
+
+    ``qk_seg``/``qv_seg`` (L, S, H, Dh) int8; ``qk_scale``/``qv_scale``
+    (L, nseg, H, Dh) fp32 whole-sequence spool scales; ``seg_ids`` (S,)
+    maps each token to its segment's scale row.  RoPE relinking (K only)
+    rotates channel pairs, so K goes through in-register fp either way; V
+    is a pure rescale.
+    """
+    k_seg = qk_seg.astype(jnp.float32) * qk_scale[:, seg_ids]
+    v_seg = qv_seg.astype(jnp.float32) * qv_scale[:, seg_ids]
+    if relink:
+        k_seg = rope_relink(k_seg, delta, theta)
+    return quant_scatter(pool_k, pool_v, k_scale, v_scale, pages, offs,
+                         k_seg, v_seg)
+
+
+def _scatter_tokens_q_impl(pool_k, pool_v, k_scale, v_scale, pages, offs,
+                           k_new, v_new):
+    """Quantized-pool variant of :func:`_scatter_tokens_impl`."""
+    return quant_scatter(pool_k, pool_v, k_scale, v_scale, pages, offs,
+                         k_new, v_new)
+
+
+def _reset_scales_impl(k_scale, v_scale, pages):
+    """Zero the scale rows of freed pages so a new tenant's running amax
+    starts fresh (and the first write's requantize pass wipes the stale
+    int8 bytes — see :func:`repro.cache.pagequant._requant_pages`)."""
+    return (k_scale.at[:, pages].set(0.0), v_scale.at[:, pages].set(0.0))
+
+
 # module-level (unsharded) jits — sharded pools build their own instance
 # jits with pinned out_shardings, so the constraint never leaks into these
 # shared compile caches
@@ -75,39 +147,87 @@ pool_link = functools.partial(jax.jit, donate_argnums=(0, 1),
     _pool_link_impl)
 scatter_tokens = functools.partial(
     jax.jit, donate_argnums=(0, 1))(_scatter_tokens_impl)
+pool_link_q = functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                                static_argnames=("theta", "relink"))(
+    _pool_link_q_impl)
+pool_link_q8 = functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                                 static_argnames=("theta", "relink"))(
+    _pool_link_q8_impl)
+scatter_tokens_q = functools.partial(
+    jax.jit, donate_argnums=(0, 1, 2, 3))(_scatter_tokens_q_impl)
+reset_scales = functools.partial(
+    jax.jit, donate_argnums=(0, 1))(_reset_scales_impl)
+
+
+def _bucket_pow2(n: int) -> int:
+    """Next power of two ≥ n — bounds the trace count of the per-free
+    scale-reset jit the same way core.linker buckets placement runs."""
+    return 1 << max(n - 1, 0).bit_length()
 
 
 class PagedKVPool:
-    def __init__(self, cfg: PagedConfig, *, sharding=None):
+    def __init__(self, cfg: PagedConfig, *, sharding=None,
+                 scale_sharding=None):
         """``sharding``: optional :class:`jax.sharding.NamedSharding` for
         the pool buffers (kv heads on the mesh's ``model`` axis — see
         ``repro.serving.sharding.ServingSharding.pool``).  When set, the
         buffers are committed to it at construction and every pool-owned
-        donated write pins its outputs to the same sharding, so the pool
+        donated write pins the same sharding on its outputs, so the pool
         stays resident and partitioned across devices for the whole
-        serving lifetime."""
+        serving lifetime.  ``scale_sharding`` is the (L, P, Hkv) analogue
+        for an int8 pool's scale buffers
+        (``ServingSharding.pool_scale``)."""
         self.cfg = cfg
-        dt = {"bfloat16": jnp.bfloat16,
-              "float16": jnp.float16}.get(cfg.dtype, jnp.float32)
+        self.quantized = cfg.quantized
+        dt = jnp.int8 if self.quantized else {
+            "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}.get(cfg.dtype, jnp.float32)
         shape = (cfg.num_layers, cfg.num_pages, cfg.page_size,
                  cfg.num_kv_heads, cfg.head_dim)
         self.sharding = sharding
+        self.scale_sharding = scale_sharding
         # allocate straight into the sharded layout: a sharded pool must
         # never materialize unsharded on one device first — at production
         # scale the whole point is that the pool exceeds a single chip's HBM
         self.k = jnp.zeros(shape, dt, device=sharding)
         self.v = jnp.zeros(shape, dt, device=sharding)
+        # int8 pools carry one running fp32 scale per (layer, page, kv head)
+        # beside the pages; zero means "never written since (re)alloc"
+        self.k_scale = self.v_scale = None
+        if self.quantized:
+            sshape = (cfg.num_layers, cfg.num_pages, cfg.num_kv_heads)
+            self.k_scale = jnp.zeros(sshape, jnp.float32,
+                                     device=scale_sharding)
+            self.v_scale = jnp.zeros(sshape, jnp.float32,
+                                     device=scale_sharding)
         if sharding is not None:
             out_sh = (sharding, sharding)
+            out_qsh = out_sh + (scale_sharding, scale_sharding)
             self._link_jit = jax.jit(
                 _pool_link_impl, donate_argnums=(0, 1),
                 static_argnames=("theta", "relink"), out_shardings=out_sh)
             self._scatter_jit = jax.jit(
                 _scatter_tokens_impl, donate_argnums=(0, 1),
                 out_shardings=out_sh)
+            self._link_q_jit = jax.jit(
+                _pool_link_q_impl, donate_argnums=(0, 1, 2, 3),
+                static_argnames=("theta", "relink"), out_shardings=out_qsh)
+            self._link_q8_jit = jax.jit(
+                _pool_link_q8_impl, donate_argnums=(0, 1, 2, 3),
+                static_argnames=("theta", "relink"), out_shardings=out_qsh)
+            self._scatter_q_jit = jax.jit(
+                _scatter_tokens_q_impl, donate_argnums=(0, 1, 2, 3),
+                out_shardings=out_qsh)
+            self._reset_jit = jax.jit(
+                _reset_scales_impl, donate_argnums=(0, 1),
+                out_shardings=(scale_sharding, scale_sharding))
         else:
             self._link_jit = pool_link
             self._scatter_jit = scatter_tokens
+            self._link_q_jit = pool_link_q
+            self._link_q8_jit = pool_link_q8
+            self._scatter_q_jit = scatter_tokens_q
+            self._reset_jit = reset_scales
         self._free: List[int] = list(range(cfg.num_pages - 1, -1, -1))
         self._owned: Dict[str, List[int]] = {}
 
@@ -146,17 +266,46 @@ class PagedKVPool:
 
     def free(self, req_id: str) -> None:
         """Return a request's pages.  Idempotent: a second ``free`` (or one
-        for an unknown request) is a no-op, never a double-release."""
-        self._free.extend(self._owned.pop(req_id, []))
+        for an unknown request) is a no-op, never a double-release.  On an
+        int8 pool the freed pages' scale rows are zeroed (one donated jit,
+        pow2-bucketed page count) so the next tenant's running amax starts
+        fresh instead of inheriting a stale large scale."""
+        pages = self._owned.pop(req_id, [])
+        self._free.extend(pages)
+        if pages and self.quantized:
+            n = _bucket_pow2(len(pages))
+            padded = pages + [pages[0]] * (n - len(pages))
+            arr = jnp.asarray(np.asarray(padded, np.int32))
+            self.k_scale, self.v_scale = self._reset_jit(
+                self.k_scale, self.v_scale, arr)
 
     # -- data movement -----------------------------------------------------
     def link_write(self, pages, offs, k_seg, v_seg, delta, *, theta: float,
                    relink: bool) -> None:
         """Relink + scatter one placed run through the pool-owned donated
-        jit (sharding-preserving on sharded pools)."""
-        self.k, self.v = self._link_jit(self.k, self.v, pages, offs, k_seg,
-                                        v_seg, delta, theta=theta,
-                                        relink=relink)
+        jit (sharding-preserving on sharded pools; quantize-on-write on an
+        int8 pool)."""
+        if self.quantized:
+            self.k, self.v, self.k_scale, self.v_scale = self._link_q_jit(
+                self.k, self.v, self.k_scale, self.v_scale, pages, offs,
+                k_seg, v_seg, delta, theta=theta, relink=relink)
+        else:
+            self.k, self.v = self._link_jit(self.k, self.v, pages, offs,
+                                            k_seg, v_seg, delta, theta=theta,
+                                            relink=relink)
+
+    def link_write_q8(self, pages, offs, qk_seg, qk_scale, qv_seg, qv_scale,
+                      seg_ids, delta, *, theta: float,
+                      relink: bool) -> None:
+        """Spool→pool fast path: link already-quantized segments (library
+        int8 bytes + their per-segment spool scales) by rescaling onto the
+        page grid inside one donated jit.  Only valid on an int8 pool."""
+        if not self.quantized:
+            raise ValueError("link_write_q8 requires an int8 pool")
+        self.k, self.v, self.k_scale, self.v_scale = self._link_q8_jit(
+            self.k, self.v, self.k_scale, self.v_scale, pages, offs,
+            qk_seg, qk_scale, qv_seg, qv_scale, seg_ids, delta,
+            theta=theta, relink=relink)
 
     def write_tokens(self, page_table: np.ndarray, slot0: int,
                      k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
@@ -166,13 +315,26 @@ class PagedKVPool:
         slots = slot0 + np.arange(s)
         pages = jnp.asarray(np.asarray(page_table)[slots // ps], jnp.int32)
         offs = jnp.asarray(slots % ps, jnp.int32)
-        self.k, self.v = self._scatter_jit(self.k, self.v, pages, offs,
-                                           k_new, v_new)
+        if self.quantized:
+            self.k, self.v, self.k_scale, self.v_scale = self._scatter_q_jit(
+                self.k, self.v, self.k_scale, self.v_scale, pages, offs,
+                k_new, v_new)
+        else:
+            self.k, self.v = self._scatter_jit(self.k, self.v, pages, offs,
+                                               k_new, v_new)
 
     def gather(self, page_table: np.ndarray, n_tokens: int):
-        """Contiguous (L, n_tokens, H, Dh) view of a request's cache."""
+        """Contiguous (L, n_tokens, H, Dh) view of a request's cache.
+        An int8 pool hands back the dequantized fp32 view — gather is the
+        debug/inspection path, not the serving read (the kernels read the
+        int8 pages + scales directly)."""
         ps = self.cfg.page_size
         slots = np.arange(n_tokens)
         pages = np.asarray(page_table)[slots // ps]
         offs = slots % ps
-        return self.k[:, pages, offs], self.v[:, pages, offs]
+        k = self.k[:, pages, offs]
+        v = self.v[:, pages, offs]
+        if self.quantized:
+            k = k.astype(jnp.float32) * self.k_scale[:, pages][..., None]
+            v = v.astype(jnp.float32) * self.v_scale[:, pages][..., None]
+        return k, v

@@ -1,0 +1,68 @@
+"""Device-side page-granular int8 quantization for the paged KV pool.
+
+One running symmetric scale per ``(layer, page, kv_head)`` lives beside the
+int8 pages (see :class:`repro.cache.paged.PagedKVPool`).  Writes go through
+:func:`quant_scatter`: the incoming fp tokens bump each touched page's
+scale via a scatter-max (``s_new = max(s_old, amax/127)``), the touched
+pages' existing int8 rows are rescaled to the grown scale
+(``q' = round(q * s_old/s_new)``), and the new tokens are quantized at the
+final scale.  Because the scale is a running max of every amax the page
+has seen, the round-to-int never clips — the error stays the classic
+``scale/2`` rounding bound of :mod:`repro.cache.quant`, whose symmetric
+grid (``amax/QMAX``) this module shares exactly.
+
+This lives outside ``cache/paged.py`` so ``models/transformer.py`` can use
+the same write primitive inside its scan bodies without an import cycle
+(``cache/paged.py`` imports ``models.layers`` for RoPE relinking).
+
+Shapes (the layer axis leads, matching the pool buffers):
+  pools    (L, P, page_size, H, Dh) int8
+  scales   (L, P, H) fp32
+  pages/offs  (N,) int32 pool coordinates per token
+  k_new/v_new (L, N, H, Dh) fp
+
+Duplicate ``pages`` entries (several tokens landing in one page, or a
+scratch page absorbing padding writes) are safe: the scatter-max is
+order-independent, and the requantize pass writes identical rows for every
+duplicate of a page, so the undefined scatter winner cannot matter.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quant import QMAX
+
+
+def _quant(x, s):
+    """Quantize fp ``x (L,N,H,Dh)`` at per-token-slot scales ``s (L,N,H)``
+    (zero-safe).  Never clips when ``s >= amax(x)/QMAX``."""
+    s = jnp.where(s > 0, s, 1.0)[..., None]
+    return jnp.clip(jnp.round(x / s), -QMAX, QMAX).astype(jnp.int8)
+
+
+def _requant_pages(pool, s_old, s_new, pages):
+    """Rescale the touched pages' resident int8 rows from their old scales
+    to the grown ones (``ratio <= 1`` — never clips).  A fresh/reset page
+    (``s_old == 0``) rescales to zero, which also wipes any stale tenant
+    bytes left behind by page recycling."""
+    o, n = s_old[:, pages], s_new[:, pages]                      # (L,N,H)
+    ratio = jnp.where(n > 0, o / jnp.where(n > 0, n, 1.0), 1.0)
+    rows = pool[:, pages].astype(jnp.float32) * ratio[:, :, None, :, None]
+    rows = jnp.clip(jnp.round(rows), -QMAX, QMAX).astype(jnp.int8)
+    return pool.at[:, pages].set(rows)
+
+
+def quant_scatter(pool_k, pool_v, k_scale, v_scale, pages, offs,
+                  k_new, v_new):
+    """Quantizing scatter of fp tokens into int8 pools with running
+    per-(layer, page, kv-head) scales.  Returns the four updated buffers;
+    callers jit it donated so the update is in place."""
+    k_new = k_new.astype(jnp.float32)
+    v_new = v_new.astype(jnp.float32)
+    ks2 = k_scale.at[:, pages].max(jnp.max(jnp.abs(k_new), axis=-1) / QMAX)
+    vs2 = v_scale.at[:, pages].max(jnp.max(jnp.abs(v_new), axis=-1) / QMAX)
+    pool_k = _requant_pages(pool_k, k_scale, ks2, pages)
+    pool_v = _requant_pages(pool_v, v_scale, vs2, pages)
+    pool_k = pool_k.at[:, pages, offs].set(_quant(k_new, ks2[:, pages]))
+    pool_v = pool_v.at[:, pages, offs].set(_quant(v_new, vs2[:, pages]))
+    return pool_k, pool_v, ks2, vs2

@@ -23,28 +23,71 @@ import json
 import numpy as np
 
 
+# One symmetric-int8 grid for every quantized surface in the repo: the
+# library spool, the wire format, and the int8-resident PagedKVPool all
+# derive their scales as amax/QMAX so a block can move between them by
+# pure rescaling (see cache/paged.py link_write fast path).
+QMAX = 127.0
+
+
+def symmetric_scale(amax, xp=np):
+    """amax -> scale on the shared symmetric grid (zero-safe: an all-zero
+    slice gets scale 1.0 so division never blows up).  ``xp`` lets the
+    device-side pool jits (jax.numpy) share the exact math with the host
+    spool path (numpy)."""
+    return xp.where(amax > 0, amax / QMAX, 1.0).astype(xp.float32)
+
+
 @dataclasses.dataclass
 class QuantizedKV:
     q: np.ndarray        # int8, same shape as the source
-    scale: np.ndarray    # fp32, shape (L, 1, H, Dh) — per layer/head/channel
+    scale: np.ndarray    # fp32, (L, 1, H, Dh) whole-sequence or
+    #                      (L, nb, H, Dh) with block_tokens tokens per block
+    block_tokens: int | None = None   # token-block granularity (None = whole
+    #                                   sequence — the legacy layout)
 
     @property
     def nbytes(self) -> int:
         return self.q.nbytes + self.scale.nbytes
 
 
-def quantize_kv(x: np.ndarray) -> QuantizedKV:
-    """x (L, S, H, Dh) fp -> int8 with per-(L,H,Dh) symmetric scales."""
+def quantize_kv(x: np.ndarray,
+                block_tokens: int | None = None) -> QuantizedKV:
+    """x (L, S, H, Dh) fp -> int8 with per-(L,H,Dh) symmetric scales.
+
+    ``block_tokens=bt`` switches to page-granular scales: the token axis is
+    cut into ``ceil(S/bt)`` blocks and each gets its own (L,H,Dh) amax —
+    the same granularity the int8 :class:`~repro.cache.paged.PagedKVPool`
+    uses per page, so a block spooled this way rescales onto pages without
+    a whole-sequence amax dragging every page's scale up."""
     x = np.asarray(x, np.float32)
-    amax = np.max(np.abs(x), axis=1, keepdims=True)          # (L,1,H,Dh)
-    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
-    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
-    return QuantizedKV(q=q, scale=scale)
+    if block_tokens is None:
+        amax = np.max(np.abs(x), axis=1, keepdims=True)      # (L,1,H,Dh)
+        scale = symmetric_scale(amax)
+        q = np.clip(np.round(x / scale), -QMAX, QMAX).astype(np.int8)
+        return QuantizedKV(q=q, scale=scale)
+    if block_tokens < 1:
+        raise ValueError(f"block_tokens must be >= 1, got {block_tokens}")
+    L, S, H, Dh = x.shape
+    nb = -(-S // block_tokens)
+    pad = nb * block_tokens - S
+    xp_ = np.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    blocks = xp_.reshape(L, nb, block_tokens, H, Dh)
+    amax = np.max(np.abs(blocks), axis=2)                    # (L,nb,H,Dh)
+    scale = symmetric_scale(amax)
+    q = np.clip(np.round(blocks / scale[:, :, None]), -QMAX, QMAX)
+    q = q.reshape(L, nb * block_tokens, H, Dh)[:, :S].astype(np.int8)
+    return QuantizedKV(q=q, scale=scale, block_tokens=block_tokens)
 
 
 def dequantize_kv(qkv: QuantizedKV) -> np.ndarray:
     """Inverse of :func:`quantize_kv` (fp32 out; lossy by ≤ scale/2)."""
-    return qkv.q.astype(np.float32) * qkv.scale
+    if qkv.block_tokens is None:
+        return qkv.q.astype(np.float32) * qkv.scale
+    L, S, H, Dh = qkv.q.shape
+    bt = qkv.block_tokens
+    scale = np.repeat(qkv.scale, bt, axis=1)[:, :S]          # (L,S,H,Dh)
+    return qkv.q.astype(np.float32) * scale
 
 
 # ---------------------------------------------------------------------------
@@ -95,6 +138,12 @@ def spool_payload(file, payload, meta: dict | None = None) -> None:
     if payload.qk is not None:
         fields = {"qk": payload.qk.q, "qk_scale": payload.qk.scale,
                   "qv": payload.qv.q, "qv_scale": payload.qv.scale}
+        # block granularity is NOT inferable from the shapes (ceil-division
+        # loses the block size), so it ships as an explicit sidecar field
+        for name, qkv in (("qk", payload.qk), ("qv", payload.qv)):
+            if qkv.block_tokens is not None:
+                fields[name + "_block"] = np.array(qkv.block_tokens,
+                                                  np.int64)
     else:
         fields = {"k": payload.k, "v": payload.v}
     wire = {}
@@ -116,10 +165,15 @@ def unspool_payload(file) -> dict:
     """
     with np.load(file) as z:
         if "qk" in z:
+            def _bt(name):
+                return (int(z[name + "_block"].ravel()[0])
+                        if name + "_block" in z.files else None)
             return {"qk": QuantizedKV(_from_wire(z, "qk"),
-                                      _from_wire(z, "qk_scale")),
+                                      _from_wire(z, "qk_scale"),
+                                      block_tokens=_bt("qk")),
                     "qv": QuantizedKV(_from_wire(z, "qv"),
-                                      _from_wire(z, "qv_scale"))}
+                                      _from_wire(z, "qv_scale"),
+                                      block_tokens=_bt("qv"))}
         return {"k": _from_wire(z, "k"), "v": _from_wire(z, "v")}
 
 

@@ -124,7 +124,9 @@ class PrefetchHandle:
         if entry is None:
             return None
         lib = self._loader.library
-        if entry.k is not None and time.time() <= entry.expires:
+        resident = (entry.payload.k is not None
+                    or entry.payload.qk is not None)
+        if resident and time.time() <= entry.expires:
             # identity guard: a concurrent put() may have re-created this
             # (user, media) with new KV — never hand out the orphan
             if lib._entries.get(lib._key(self.user_id, media_id)) is entry:

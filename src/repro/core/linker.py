@@ -84,12 +84,25 @@ def precompute_media_kv(model: Model, params, embeds: jnp.ndarray):
     return np.asarray(cache["k"][:, 0]), np.asarray(cache["v"][:, 0])
 
 
+def scale_row_ids(n: int, qkv) -> np.ndarray:
+    """Token → scale-row map for one quantized segment: whole-sequence
+    scales collapse to row 0, ``block_tokens`` granular scales step every
+    ``bt`` tokens.  Shared by the linker's and the engine's spool→pool
+    zero-copy links (``PagedKVPool.link_write_q8``)."""
+    if qkv.block_tokens is None:
+        return np.zeros(n, np.int32)
+    return (np.arange(n) // qkv.block_tokens).astype(np.int32)
+
+
 def _gather_placements(prompt: Prompt, library, selection: np.ndarray,
                        entries=None):
     """Resolve each media segment to a library entry (or a forced recompute).
 
     Returns (sel, placed, misses): the selection mask grown by missing
-    segments, the placed list [(offset, k, v, length)], and the miss ids.
+    segments, the placed list [(offset, entry, length)], and the miss ids.
+    Placed entries are NOT dequantized here — the caller picks the fp or
+    int8 residency per link target (``link_paged`` rescales int8 blocks
+    straight onto an int8 pool's page grid).
     """
     sel = selection.copy()
     misses = []
@@ -105,7 +118,7 @@ def _gather_placements(prompt: Prompt, library, selection: np.ndarray,
             sel[off:off + seg.length] = True
             misses.append(seg.media_id)
         else:
-            placed.append((off, entry.k, entry.v, seg.length))
+            placed.append((off, entry, seg.length))
     return sel, placed, misses
 
 
@@ -138,20 +151,20 @@ def link_prompt(model: Model, prompt: Prompt, library, selection: np.ndarray,
         # one host→device transfer of all placed segments and ONE batched
         # rope_relink over the concatenation — the per-segment relink used
         # to round-trip through host numpy once per segment
-        k_cat = jnp.asarray(np.concatenate([k for _, k, _, _ in placed],
-                                           axis=1))
-        v_cat = jnp.asarray(np.concatenate([v for _, _, v, _ in placed],
-                                           axis=1))
+        k_cat = jnp.asarray(np.concatenate([np.asarray(e.k)
+                                            for _, e, _ in placed], axis=1))
+        v_cat = jnp.asarray(np.concatenate([np.asarray(e.v)
+                                            for _, e, _ in placed], axis=1))
         idx = np.concatenate([np.arange(off, off + n)
-                              for off, _, _, n in placed])
+                              for off, _, n in placed])
         if cfg.rope_theta and not cfg.learned_pos_emb:
             # exact position relocation: K(p+Δ) = R(Δ)·K(p), per token
             delta = np.concatenate([np.full(n, off, np.int32)
-                                    for off, _, _, n in placed])
+                                    for off, _, n in placed])
             k_cat = rope_relink(k_cat, jnp.asarray(delta), cfg.rope_theta)
         k_buf = k_buf.at[:, idx].set(k_cat.astype(dt))
         v_buf = v_buf.at[:, idx].set(v_cat.astype(dt))
-        for off, _, _, n in placed:
+        for off, _, n in placed:
             pos[off:off + n] = np.arange(off, off + n)
         # dummy cache: selected slots stay zero and INVALID until the
         # selective prefill scatters the recomputed K/V into them
@@ -221,31 +234,84 @@ def link_paged(model: Model, prompt: Prompt, library,
     sel_idx = selection_indices(sel)
 
     if placed:
-        k_cat = np.concatenate([k for _, k, _, _ in placed], axis=1)
-        v_cat = np.concatenate([v for _, _, v, _ in placed], axis=1)
         idx = np.concatenate([np.arange(off, off + n)
-                              for off, _, _, n in placed])
+                              for off, _, n in placed])
         delta = np.concatenate([np.full(n, off, np.int32)
-                                for off, _, _, n in placed])
+                                for off, _, n in placed])
         n_placed = len(idx)
         b = min(bucket(n_placed), max(pool.cfg.page_size, 8) *
                 max(len(page_row), 1))
         pad = b - n_placed
         if pad > 0:
-            zeros = np.zeros(k_cat.shape[:1] + (pad,) + k_cat.shape[2:],
-                             k_cat.dtype)
-            k_cat = np.concatenate([k_cat, zeros], axis=1)
-            v_cat = np.concatenate([v_cat, zeros], axis=1)
             delta = np.concatenate([delta, np.zeros(pad, np.int32)])
         pages = np.full((b,), scratch_page, np.int32)
         offs = np.zeros((b,), np.int32)
         pages[:n_placed] = np.asarray(page_row)[idx // ps]
         offs[:n_placed] = idx % ps
         relink = bool(cfg.rope_theta) and not cfg.learned_pos_emb
-        pool.link_write(
-            jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(k_cat),
-            jnp.asarray(v_cat), jnp.asarray(delta),
-            theta=cfg.rope_theta, relink=relink)
+        direct = (getattr(pool, "quantized", False)
+                  and all(getattr(e, "payload", None) is not None
+                          and e.payload.qk is not None
+                          and e.payload.qk.block_tokens
+                          == e.payload.qv.block_tokens
+                          for _, e, _ in placed))
+        if direct:
+            # spool→pool zero copy: every placed entry is int8-resident, so
+            # its bytes rescale straight onto the pool's page grid inside
+            # one donated jit — no dequantize→requantize fp round trip and
+            # no fp copy of any block.  Scale rows from all segments stack
+            # into one (L, rows, H, Dh) operand; ``seg_ids`` maps each
+            # placed token to its row (whole-seq or block_tokens granular).
+            qks, qvs, ksr, vsr, sids = [], [], [], [], []
+            base = 0
+            for off, e, n in placed:
+                qk, qv = e.payload.qk, e.payload.qv
+                qks.append(qk.q[:, :n])
+                qvs.append(qv.q[:, :n])
+                ksr.append(qk.scale)
+                vsr.append(qv.scale)
+                sids.append(base + scale_row_ids(n, qk))
+                base += qk.scale.shape[1]
+            qk_cat = np.concatenate(qks, axis=1)
+            qv_cat = np.concatenate(qvs, axis=1)
+            sid = np.concatenate(sids)
+            if pad > 0:
+                z = np.zeros(qk_cat.shape[:1] + (pad,) + qk_cat.shape[2:],
+                             np.int8)
+                qk_cat = np.concatenate([qk_cat, z], axis=1)
+                qv_cat = np.concatenate([qv_cat, z], axis=1)
+                sid = np.concatenate([sid, np.zeros(pad, np.int32)])
+            ks_cat = np.concatenate(ksr, axis=1)
+            vs_cat = np.concatenate(vsr, axis=1)
+            # bucket the scale-row axis too (pad rows are never referenced)
+            rpad = bucket(base, 1) - base
+            if rpad > 0:
+                zr = np.ones(ks_cat.shape[:1] + (rpad,) + ks_cat.shape[2:],
+                             np.float32)
+                ks_cat = np.concatenate([ks_cat, zr], axis=1)
+                vs_cat = np.concatenate([vs_cat, zr], axis=1)
+            pool.link_write_q8(
+                jnp.asarray(pages), jnp.asarray(offs),
+                jnp.asarray(qk_cat), jnp.asarray(ks_cat),
+                jnp.asarray(qv_cat), jnp.asarray(vs_cat),
+                jnp.asarray(sid), jnp.asarray(delta),
+                theta=cfg.rope_theta, relink=relink)
+            if library is not None:
+                library.note_direct_link(len(placed))
+        else:
+            k_cat = np.concatenate([np.asarray(e.k) for _, e, _ in placed],
+                                   axis=1)
+            v_cat = np.concatenate([np.asarray(e.v) for _, e, _ in placed],
+                                   axis=1)
+            if pad > 0:
+                zeros = np.zeros(k_cat.shape[:1] + (pad,) + k_cat.shape[2:],
+                                 k_cat.dtype)
+                k_cat = np.concatenate([k_cat, zeros], axis=1)
+                v_cat = np.concatenate([v_cat, zeros], axis=1)
+            pool.link_write(
+                jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(k_cat),
+                jnp.asarray(v_cat), jnp.asarray(delta),
+                theta=cfg.rope_theta, relink=relink)
 
     sel_tokens, sel_media_embeds, sel_media_mask = selection_arrays(
         prompt, cfg.d_model, sel_idx)

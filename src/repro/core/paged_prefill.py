@@ -65,13 +65,25 @@ class PagedPrefiller:
         self.bucket_min = int(bucket_min)
         self.sharding = sharding
         self.traces = 0          # incremented at TRACE time only
+        self.quantized = bool(getattr(pool, "quantized", False))
         jit_kw = {}
         if sharding is not None:
             pool_sh, rep = sharding.pool(), sharding.replicated
-            jit_kw = dict(
-                in_shardings=(param_shardings, pool_sh, pool_sh) + (rep,) * 9,
-                out_shardings=(rep, pool_sh, pool_sh))
-        self._jit = jax.jit(self._step_fn, donate_argnums=(1, 2), **jit_kw)
+            if self.quantized:
+                ssh = sharding.pool_scale()
+                jit_kw = dict(
+                    in_shardings=(param_shardings, pool_sh, pool_sh,
+                                  ssh, ssh) + (rep,) * 9,
+                    out_shardings=(rep, pool_sh, pool_sh, ssh, ssh))
+            else:
+                jit_kw = dict(
+                    in_shardings=(param_shardings, pool_sh, pool_sh)
+                    + (rep,) * 9,
+                    out_shardings=(rep, pool_sh, pool_sh))
+        donate = (1, 2, 3, 4) if self.quantized else (1, 2)
+        self._jit = jax.jit(
+            self._step_fn_q if self.quantized else self._step_fn,
+            donate_argnums=donate, **jit_kw)
 
     # -- the traced step ---------------------------------------------------
     def _step_fn(self, params, pool_k, pool_v, tokens, positions,
@@ -86,6 +98,19 @@ class PagedPrefiller:
             media_mask=media_mask, backend=self.backend,
             interpret=self.interpret)
         return logits[0, last_idx], pool_k, pool_v
+
+    def _step_fn_q(self, params, pool_k, pool_v, k_scales, v_scales, tokens,
+                   positions, media_embeds, media_mask, page_table, lengths,
+                   write_pages, write_offs, last_idx):
+        """Int8-pool prefill step — scale buffers donate and update in
+        place beside the pages (quantize-on-write inside the layer scan)."""
+        self.traces += 1
+        logits, pool_k, pool_v, ks, vs = self.model.selective_prefill_paged(
+            params, tokens, positions, pool_k, pool_v, page_table, lengths,
+            write_pages, write_offs, k_scales, v_scales,
+            media_embeds=media_embeds, media_mask=media_mask,
+            backend=self.backend, interpret=self.interpret)
+        return logits[0, last_idx], pool_k, pool_v, ks, vs
 
     # -- host-side bucketing + dispatch ------------------------------------
     def prefill(self, params, link: PagedLinkResult,
@@ -121,15 +146,20 @@ class PagedPrefiller:
         mp = min(bucket(pool.pages_for(link.total)), len(page_row))
         ctx = (self.sharding.activate() if self.sharding is not None
                else contextlib.nullcontext())
-        with ctx:   # logical shard() annotations apply at trace time
-            out, pool.k, pool.v = self._jit(
-                params, pool.k, pool.v,
-                np.asarray(tokens[None]), np.asarray(positions[None]),
+        host = (np.asarray(tokens[None]), np.asarray(positions[None]),
                 np.asarray(emb[None]), np.asarray(mask[None]),
                 np.asarray(page_row[None, :mp]),
                 np.asarray([link.total], np.int32),
                 np.asarray(wp[None]), np.asarray(wo[None]),
                 np.int32(max(n - 1, 0)))
+        with ctx:   # logical shard() annotations apply at trace time
+            if self.quantized:
+                out, pool.k, pool.v, pool.k_scale, pool.v_scale = self._jit(
+                    params, pool.k, pool.v, pool.k_scale, pool.v_scale,
+                    *host)
+            else:
+                out, pool.k, pool.v = self._jit(params, pool.k, pool.v,
+                                                *host)
         return np.asarray(out, np.float32)
 
     def bind(self, page_row: np.ndarray) -> "BoundPagedPrefill":
@@ -165,8 +195,14 @@ class BoundPagedPrefill:
         ps = self.pool.cfg.page_size
         slots = np.arange(n_tokens)
         pages = np.asarray(self.page_row)[slots // ps]
+        k0 = np.asarray(self.pool.k[0][pages, slots % ps])
+        if getattr(self.pool, "quantized", False):
+            # int8 pool: the probe compares fp deviations, so hand it the
+            # dequantized view (layer-0 K scale rows per gathered page)
+            s0 = np.asarray(self.pool.k_scale[0])[pages]      # (n, Hkv)
+            k0 = k0.astype(np.float32) * s0[..., None]
         # writable copy: the probe blanks the selected rows
-        return np.array(self.pool.k[0][pages, slots % ps])
+        return np.array(k0)
 
     def prefill(self, params, link: PagedLinkResult) -> np.ndarray:
         return self.prefiller.prefill(params, link, self.page_row)

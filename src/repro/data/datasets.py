@@ -15,6 +15,7 @@ generators match.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Iterator, List
 
 import numpy as np
@@ -36,8 +37,13 @@ def _sentence(rng, lo=4, hi=10) -> str:
 
 
 def image_embeds(media_id: str, length: int, d_model: int) -> np.ndarray:
-    """Deterministic stub 'ViT' output for a media id."""
-    seed = abs(hash(media_id)) % (2 ** 31)
+    """Deterministic stub 'ViT' output for a media id.
+
+    Seeded with crc32, not ``hash()``: string hashing is randomized per
+    process (PYTHONHASHSEED), which would make the same media id carry
+    different content in different pytest/bench runs.
+    """
+    seed = zlib.crc32(media_id.encode()) % (2 ** 31)
     r = np.random.default_rng(seed)
     return (r.standard_normal((length, d_model)) * 0.02).astype(np.float32)
 

@@ -62,32 +62,44 @@ def head_shard_axis(hq: int, hkv: int):
 
 
 def paged_attention_call(q, k_pool, v_pool, page_table, lengths, *,
+                         k_scale=None, v_scale=None,
                          window: int = 0, backend: str = "ref",
                          interpret: bool = False):
-    """Dispatch without jit — safe to trace inside scan/jit."""
+    """Dispatch without jit — safe to trace inside scan/jit.
+
+    ``k_scale``/``v_scale`` (P, Hkv) fp32 select the int8-pool path on
+    both backends (the pools are then int8 pages; dequantization happens
+    inside the kernel / oracle, never as a separate pass)."""
     if backend == "ref":
         return paged_attention_ref(q, k_pool, v_pool, page_table, lengths,
-                                   window=window)
+                                   k_scale, v_scale, window=window)
     mesh, ax = head_shard_axis(q.shape[1], k_pool.shape[2])
     fn = functools.partial(paged_attention_pallas, window=window,
                            interpret=interpret)
+    args = (q, k_pool, v_pool, page_table, lengths)
+    in_specs = (P(None, ax, None), P(None, None, ax, None),
+                P(None, None, ax, None), P(None, None), P(None))
+    if k_scale is not None:
+        args += (k_scale, v_scale)
+        # scale rows shard with their pages: kv heads on the TP axis
+        in_specs += (P(None, ax), P(None, ax))
     if mesh is not None:
         # per-shard pallas: heads/pages split on the TP axis, table and
         # lengths replicated; every shard computes its own softmax (heads
         # never mix), so out_specs need no reduction
         fn = shard_map(
-            fn, mesh=mesh,
-            in_specs=(P(None, ax, None), P(None, None, ax, None),
-                      P(None, None, ax, None), P(None, None), P(None)),
+            fn, mesh=mesh, in_specs=in_specs,
             out_specs=P(None, ax, None), check_rep=False)
-    return fn(q, k_pool, v_pool, page_table, lengths)
+    return fn(*args)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "interpret", "use_ref"))
 def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
+                    k_scale=None, v_scale=None,
                     window: int = 0, interpret: bool = True,
                     use_ref: bool = False):
     return paged_attention_call(
-        q, k_pool, v_pool, page_table, lengths, window=window,
+        q, k_pool, v_pool, page_table, lengths,
+        k_scale=k_scale, v_scale=v_scale, window=window,
         backend="ref" if use_ref else "pallas", interpret=interpret)

@@ -67,31 +67,99 @@ def _paged_attn_kernel(page_table_ref, lengths_ref,    # scalar prefetch (SMEM)
                        jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
 
 
-def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths, *,
+def _paged_attn_q8_kernel(page_table_ref, lengths_ref,  # scalar prefetch
+                          q_ref, k_ref, v_ref,          # VMEM blocks
+                          ks_ref, vs_ref,               # (1,1) page scales
+                          o_ref,
+                          m_ref, l_ref, acc_ref,        # VMEM scratch
+                          *, page_size: int, max_pages: int, scale: float,
+                          window: int):
+    """Int8-pool variant: the page's K/V arrive as int8 plus one fp32
+    scale per (page, kv head), gathered through the same SMEM page table.
+    Dequantization is free in-register — the K scale folds into the
+    softmax scale (one scalar multiply on the logits) and the V scale
+    multiplies the page's accumulator contribution, so the int8 pool is
+    never materialized in fp anywhere."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, Dh) query group
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (page_size, Dh) int8→f32
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    ks = ks_ref[0, 0]                                 # this page/head's scales
+    vs = vs_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * (scale * ks)
+    token_idx = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = token_idx < length                         # (1, page_size)
+    if window > 0:
+        valid = jnp.logical_and(valid, token_idx > length - 1 - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * vs
+    m_ref[...] = m_new
+
+    @pl.when(j == max_pages - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
+                           k_scale=None, v_scale=None, *,
                            window: int = 0, interpret: bool = False):
-    """q (B,Hq,Dh); pools (P,page_size,Hkv,Dh); page_table (B,max_pages)."""
+    """q (B,Hq,Dh); pools (P,page_size,Hkv,Dh); page_table (B,max_pages).
+    ``k_scale``/``v_scale`` (P,Hkv) fp32 switch to the int8-pool kernel
+    (dequant-in-register; both or neither must be given)."""
     b, hq, dh = q.shape
     p, page_size, hkv, _ = k_pool.shape
     max_pages = page_table.shape[1]
     group = hq // hkv
     q_g = q.reshape(b, hkv, group, dh)
+    quantized = k_scale is not None
 
     grid = (b, hkv, max_pages)
-    kernel = functools.partial(_paged_attn_kernel, page_size=page_size,
-                               max_pages=max_pages, scale=1.0 / (dh ** 0.5),
-                               window=window)
+    kernel = functools.partial(
+        _paged_attn_q8_kernel if quantized else _paged_attn_kernel,
+        page_size=page_size, max_pages=max_pages, scale=1.0 / (dh ** 0.5),
+        window=window)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, group, dh), lambda b_, h, j, pt, ln: (b_, h, 0, 0)),
+        # the dynamic page gather: page index comes from the SMEM table
+        pl.BlockSpec((1, page_size, 1, dh),
+                     lambda b_, h, j, pt, ln: (pt[b_, j], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, dh),
+                     lambda b_, h, j, pt, ln: (pt[b_, j], 0, h, 0)),
+    ]
+    args = [page_table, lengths, q_g, k_pool, v_pool]
+    if quantized:
+        # the page's scale rides the same dynamic-gather prefetch as the page
+        in_specs += [pl.BlockSpec((1, 1),
+                                  lambda b_, h, j, pt, ln: (pt[b_, j], h))] * 2
+        args += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # page_table, lengths
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, group, dh), lambda b_, h, j, pt, ln: (b_, h, 0, 0)),
-            # the dynamic page gather: page index comes from the SMEM table
-            pl.BlockSpec((1, page_size, 1, dh),
-                         lambda b_, h, j, pt, ln: (pt[b_, j], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, dh),
-                         lambda b_, h, j, pt, ln: (pt[b_, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, group, dh),
                                lambda b_, h, j, pt, ln: (b_, h, 0, 0)),
         scratch_shapes=[
@@ -106,5 +174,5 @@ def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, group, dh), q.dtype),
         interpret=interpret,
-    )(page_table, lengths, q_g, k_pool, v_pool)
+    )(*args)
     return out.reshape(b, hq, dh)

@@ -13,8 +13,12 @@ import jax.numpy as jnp
 from repro.launch.pspec import shard
 
 
-def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths,
+                        k_scale=None, v_scale=None, *,
                         window: int = 0):
+    """``k_scale``/``v_scale`` (P, Hkv) fp32: int8-pool mode — dequantize
+    the gathered pages with their per-(page, kv-head) scales (the oracle
+    for the fused in-kernel dequant of the Pallas path)."""
     b, hq, dh = q.shape
     p, ps, hkv, _ = k_pool.shape
     max_pages = page_table.shape[1]
@@ -25,6 +29,15 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
     # below run shard-local with no pool all-gather
     k = k_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
     v = v_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    if k_scale is not None:
+        # (b, max_pages, hkv) -> per-token (b, max_pages*ps, hkv): tokens of
+        # one page share its scale, matching the pool write granularity
+        ks = jnp.repeat(k_scale[page_table], ps, axis=1)
+        vs = jnp.repeat(v_scale[page_table], ps, axis=1)
+        ks = shard(ks, "batch", None, "kv_heads")
+        vs = shard(vs, "batch", None, "kv_heads")
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
     k = shard(k, "batch", None, "kv_heads", None)
     v = shard(v, "batch", None, "kv_heads", None)
     k = jnp.repeat(k, rep, axis=2)

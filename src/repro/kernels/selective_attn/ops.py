@@ -37,21 +37,25 @@ def _pad_to(x, axis, mult, value=0):
 
 
 def selective_attention_paged_call(q, k_pool, v_pool, page_table, q_pos,
-                                   lengths, *, window: int = 0,
+                                   lengths, *, k_scale=None, v_scale=None,
+                                   window: int = 0,
                                    block_q: int = 128, backend: str = "ref",
                                    interpret: bool = False):
     """Paged selective-prefill attention — dispatch without jit.
 
     Accepts the model's (B, Sq, Hq, Dh) query layout and returns the same;
     K/V are read through ``page_table`` from the (P, page_size, Hkv, Dh)
-    pool slices.  Safe to trace inside scan/jit (the engine's donated
-    prefill step traces it under ``lax.scan`` over layers).
+    pool slices.  ``k_scale``/``v_scale`` (P, Hkv) fp32 select the int8
+    pool path (dequant fused in the kernel/oracle).  Safe to trace inside
+    scan/jit (the engine's donated prefill step traces it under
+    ``lax.scan`` over layers).
     """
     b, sq, hq, dh = q.shape
     qt = jnp.moveaxis(q, 2, 1)
     if backend == "ref":
         out = selective_attention_paged_ref(
-            qt, k_pool, v_pool, page_table, q_pos, lengths, window=window)
+            qt, k_pool, v_pool, page_table, q_pos, lengths,
+            k_scale, v_scale, window=window)
         return jnp.moveaxis(out, 1, 2)
     bq = min(block_q, max(8, sq))
     qt = _pad_to(qt, 2, bq)
@@ -60,19 +64,23 @@ def selective_attention_paged_call(q, k_pool, v_pool, page_table, q_pos,
     q_pos_p = _pad_to(q_pos, 1, bq, value=0)
     fn = functools.partial(selective_attention_paged_pallas, window=window,
                            block_q=bq, interpret=interpret)
+    args = (qt, k_pool, v_pool, page_table, q_pos_p, lengths)
     mesh, ax = head_shard_axis(hq, k_pool.shape[2])
+    in_specs = (P(None, ax, None, None), P(None, None, ax, None),
+                P(None, None, ax, None), P(None, None), P(None, None),
+                P(None))
+    if k_scale is not None:
+        args += (k_scale, v_scale)
+        in_specs += (P(None, ax), P(None, ax))
     if mesh is not None:
         # mesh-sharded serving: the paged prefill kernel is embarrassingly
         # parallel across kv-head shards (see paged_attn.ops) — run it
         # per-device under shard_map instead of asking GSPMD to partition
         # the pallas call
         fn = shard_map(
-            fn, mesh=mesh,
-            in_specs=(P(None, ax, None, None), P(None, None, ax, None),
-                      P(None, None, ax, None), P(None, None), P(None, None),
-                      P(None)),
+            fn, mesh=mesh, in_specs=in_specs,
             out_specs=P(None, ax, None, None), check_rep=False)
-    out = fn(qt, k_pool, v_pool, page_table, q_pos_p, lengths)
+    out = fn(*args)
     return jnp.moveaxis(out[:, :, :sq, :], 1, 2)
 
 
@@ -80,11 +88,13 @@ def selective_attention_paged_call(q, k_pool, v_pool, page_table, q_pos,
                    static_argnames=("window", "block_q", "interpret",
                                     "use_ref"))
 def selective_attention_paged(q, k_pool, v_pool, page_table, q_pos, lengths,
-                              *, window: int = 0, block_q: int = 128,
+                              *, k_scale=None, v_scale=None,
+                              window: int = 0, block_q: int = 128,
                               interpret: bool = True, use_ref: bool = False):
     """Standalone jit'd paged selective attention (kernel tests, ad-hoc)."""
     return selective_attention_paged_call(
-        q, k_pool, v_pool, page_table, q_pos, lengths, window=window,
+        q, k_pool, v_pool, page_table, q_pos, lengths,
+        k_scale=k_scale, v_scale=v_scale, window=window,
         block_q=block_q, backend="ref" if use_ref else "pallas",
         interpret=interpret)
 

@@ -19,7 +19,8 @@ INVALID_POS = jnp.iinfo(jnp.int32).max
 
 
 def selective_attention_paged_ref(q, k_pool, v_pool, page_table, q_pos,
-                                  lengths, *, window: int = 0):
+                                  lengths, k_scale=None, v_scale=None, *,
+                                  window: int = 0):
     """Selective prefill attention reading K/V through a page table.
 
     q          (B, Hq, Sq, Dh)        selected (recomputed) tokens
@@ -45,6 +46,15 @@ def selective_attention_paged_ref(q, k_pool, v_pool, page_table, q_pos,
     # paged prefill attention runs shard-local (no pool all-gather)
     k = k_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
     v = v_pool[page_table].reshape(b, max_pages * ps, hkv, dh)
+    if k_scale is not None:
+        # int8 pool: dequantize the gathered pages with their per-(page,
+        # kv-head) scales — the oracle for the fused in-kernel dequant
+        ks = jnp.repeat(k_scale[page_table], ps, axis=1)
+        vs = jnp.repeat(v_scale[page_table], ps, axis=1)
+        ks = shard(ks, "batch", None, "kv_heads")
+        vs = shard(vs, "batch", None, "kv_heads")
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
     k = shard(k, "batch", None, "kv_heads", None)
     v = shard(v, "batch", None, "kv_heads", None)
     k = jnp.moveaxis(jnp.repeat(k, rep, axis=2), 2, 1)   # (B, Hq, Skv, Dh)

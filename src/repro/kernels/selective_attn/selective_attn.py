@@ -124,8 +124,66 @@ def _sel_attn_paged_kernel(page_table_ref, lengths_ref,   # scalar prefetch
                             jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
 
 
+def _sel_attn_paged_q8_kernel(page_table_ref, lengths_ref,  # scalar prefetch
+                              q_pos_ref,                    # (1, BQ) operand
+                              q_ref, k_ref, v_ref,          # VMEM blocks
+                              ks_ref, vs_ref,               # (1,1) page scales
+                              o_ref,
+                              m_ref, l_ref, acc_ref,        # VMEM scratch
+                              *, page_size: int, n_pages: int, window: int,
+                              scale: float):
+    """Int8-pool variant of :func:`_sel_attn_paged_kernel`: pages arrive as
+    int8 with one fp32 scale per (page, kv head) prefetched through the
+    same page table.  The K scale folds into the softmax scale; the V
+    scale multiplies this page's accumulator contribution — dequantization
+    never leaves the registers."""
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (BQ, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (page_size, Dh) int8→f32
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    ks = ks_ref[0, 0]
+    vs = vs_ref[0, 0]
+    qp = q_pos_ref[0]                                  # (BQ,)
+    length = lengths_ref[b]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * (scale * ks)
+
+    tok = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                  # (1, page_size)
+    valid = (tok < length) & (tok <= qp[:, None])
+    if window > 0:
+        valid &= tok > qp[:, None] - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * vs
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0, ...] = (acc_ref[...] /
+                            jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
 def selective_attention_paged_pallas(q, k_pool, v_pool, page_table, q_pos,
-                                     lengths, *, window: int = 0,
+                                     lengths, k_scale=None, v_scale=None,
+                                     *, window: int = 0,
                                      block_q: int = 128,
                                      interpret: bool = False):
     """q (B,Hq,Sq,Dh); pools (P,page_size,Hkv,Dh); page_table (B,n_pages).
@@ -135,7 +193,8 @@ def selective_attention_paged_pallas(q, k_pool, v_pool, page_table, q_pos,
     (same dynamic-DMA structure as ``paged_attn``), so keys stream out of
     the pool without ever materializing a contiguous copy.  Sq % block_q
     == 0 (ops.py pads; padding query rows produce garbage that callers
-    discard).
+    discard).  ``k_scale``/``v_scale`` (P,Hkv) fp32 switch to the
+    int8-pool kernel (dequant-in-register).
     """
     b, hq, sq, dh = q.shape
     p, page_size, hkv, _ = k_pool.shape
@@ -143,24 +202,33 @@ def selective_attention_paged_pallas(q, k_pool, v_pool, page_table, q_pos,
     assert sq % block_q == 0
     group = hq // hkv
     grid = (b, hq, sq // block_q, n_pages)
+    quantized = k_scale is not None
 
     kernel = functools.partial(
-        _sel_attn_paged_kernel, page_size=page_size, n_pages=n_pages,
+        _sel_attn_paged_q8_kernel if quantized else _sel_attn_paged_kernel,
+        page_size=page_size, n_pages=n_pages,
         window=window, scale=1.0 / (dh ** 0.5))
+
+    in_specs = [
+        pl.BlockSpec((1, block_q),
+                     lambda b_, h, i, j, pt, ln: (b_, i)),         # q_pos
+        pl.BlockSpec((1, 1, block_q, dh),
+                     lambda b_, h, i, j, pt, ln: (b_, h, i, 0)),   # q
+        pl.BlockSpec((1, page_size, 1, dh),
+                     lambda b_, h, i, j, pt, ln: (pt[b_, j], 0, h // group, 0)),
+        pl.BlockSpec((1, page_size, 1, dh),
+                     lambda b_, h, i, j, pt, ln: (pt[b_, j], 0, h // group, 0)),
+    ]
+    args = [page_table, lengths, q_pos, q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec(
+            (1, 1), lambda b_, h, i, j, pt, ln: (pt[b_, j], h // group))] * 2
+        args += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # page_table, lengths
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q),
-                         lambda b_, h, i, j, pt, ln: (b_, i)),         # q_pos
-            pl.BlockSpec((1, 1, block_q, dh),
-                         lambda b_, h, i, j, pt, ln: (b_, h, i, 0)),   # q
-            pl.BlockSpec((1, page_size, 1, dh),
-                         lambda b_, h, i, j, pt, ln: (pt[b_, j], 0, h // group, 0)),
-            pl.BlockSpec((1, page_size, 1, dh),
-                         lambda b_, h, i, j, pt, ln: (pt[b_, j], 0, h // group, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, block_q, dh),
                                lambda b_, h, i, j, pt, ln: (b_, h, i, 0)),
         scratch_shapes=[
@@ -175,7 +243,7 @@ def selective_attention_paged_pallas(q, k_pool, v_pool, page_table, q_pos,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
         interpret=interpret,
-    )(page_table, lengths, q_pos, q, k_pool, v_pool)
+    )(*args)
 
 
 def selective_attention_pallas(q, k, v, q_pos, kv_pos, *, window: int = 0,

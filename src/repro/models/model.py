@@ -152,7 +152,8 @@ class Model:
 
     def selective_prefill_paged(self, params, sel_tokens, sel_positions,
                                 pool_k, pool_v, page_table, lengths,
-                                write_pages, write_offs, *,
+                                write_pages, write_offs, k_scales=None,
+                                v_scales=None, *,
                                 media_embeds=None, media_mask=None,
                                 backend: str = "ref",
                                 interpret: bool = False):
@@ -160,7 +161,9 @@ class Model:
 
         See :func:`repro.models.transformer.selective_prefill_paged` for
         shapes.  Returns (logits (B, Sq, V), pool_k, pool_v) — callers
-        donate the pool buffers so the K/V writes are in place.
+        donate the pool buffers so the K/V writes are in place.  On an int8
+        pool pass ``k_scales``/``v_scales`` (L, P, Hkv); the updated scale
+        buffers ride along in the return tuple.
         """
         assert self.cfg.arch_type not in ("ssm",), \
             "selective prefill needs attention KV (see DESIGN.md)"
@@ -168,8 +171,8 @@ class Model:
                        sel_positions)
         return tf.selective_prefill_paged(
             params, self.cfg, x, sel_positions, pool_k, pool_v, page_table,
-            lengths, write_pages, write_offs, backend=backend,
-            interpret=interpret)
+            lengths, write_pages, write_offs, k_scales, v_scales,
+            backend=backend, interpret=interpret)
 
     def decode_step(self, params, token, position, cache, write_idx):
         """One decode step. token (B,1), position (B,1), write_idx (B,1)."""
@@ -188,19 +191,22 @@ class Model:
                 and not cfg.is_encoder_decoder)
 
     def decode_step_paged(self, params, token, position, pool_k, pool_v,
-                          page_table, lengths, write_pages, write_offs, *,
+                          page_table, lengths, write_pages, write_offs,
+                          k_scales=None, v_scales=None, *,
                           backend: str = "ref", interpret: bool = False):
         """One decode step against the shared paged KV pool (all slots).
 
         See :func:`repro.models.transformer.decode_paged` for shapes.
         Returns (logits (B, V), pool_k, pool_v) — callers donate the pool
-        buffers so the write is in place.
+        buffers so the write is in place.  On an int8 pool pass
+        ``k_scales``/``v_scales`` (L, P, Hkv); the updated scale buffers
+        ride along in the return tuple.
         """
         x = self.embed(params, token, positions=position)
         return tf.decode_paged(
             params, self.cfg, x, position, pool_k, pool_v, page_table,
-            lengths, write_pages, write_offs, backend=backend,
-            interpret=interpret)
+            lengths, write_pages, write_offs, k_scales, v_scales,
+            backend=backend, interpret=interpret)
 
     # -- whisper helpers ------------------------------------------------------
     def encode_audio(self, params, audio_embeds):

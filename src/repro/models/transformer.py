@@ -25,6 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.cache.pagequant import quant_scatter
 from repro.kernels.paged_attn.ops import paged_attention_call
 from repro.kernels.selective_attn.ops import selective_attention_paged_call
 from repro.models import moe as moe_mod
@@ -360,8 +361,8 @@ def decode_paged(params: dict, cfg, embeds: jnp.ndarray,
                  positions: jnp.ndarray, pool_k: jnp.ndarray,
                  pool_v: jnp.ndarray, page_table: jnp.ndarray,
                  lengths: jnp.ndarray, write_pages: jnp.ndarray,
-                 write_offs: jnp.ndarray, *, backend: str = "ref",
-                 interpret: bool = False):
+                 write_offs: jnp.ndarray, k_scales=None, v_scales=None,
+                 *, backend: str = "ref", interpret: bool = False):
     """One decode step for ALL slots against the shared paged KV pool.
 
     embeds      (B, 1, D)       new-token embeddings
@@ -372,18 +373,28 @@ def decode_paged(params: dict, cfg, embeds: jnp.ndarray,
                                 scales with the live cache, not max_seq_len
     lengths     (B,) int32      valid tokens AFTER this step's write
     write_pages/write_offs (B,) pool coordinates of the new token per slot
+    k_scales/v_scales (L, P, Hkv) fp32  int8-pool page scales — when given,
+                                the pools are int8: the new token quantizes
+                                on write (running page amax) and attention
+                                dequantizes in-kernel
 
-    Returns (logits (B, V), pool_k, pool_v).  Attention archs only (no SSM
-    state, no cross KV) — gated by ``Model.supports_paged_decode``.  Padding
-    slots point their write at a scratch page and carry ``lengths == 0``.
-    Sliding windows (``cfg.sliding_window``) mask inside the kernel exactly
-    like the dense ``attend`` decode mask.
+    Returns (logits (B, V), pool_k, pool_v) — plus the updated scale
+    buffers when quantized.  Attention archs only (no SSM state, no cross
+    KV) — gated by ``Model.supports_paged_decode``.  Padding slots point
+    their write at a scratch page and carry ``lengths == 0``.  Sliding
+    windows (``cfg.sliding_window``) mask inside the kernel exactly like
+    the dense ``attend`` decode mask.
     """
     aux0 = jnp.zeros((), jnp.float32)
+    quantized = k_scales is not None
 
     def body(carry, xs):
         xc, aux = carry
-        lp, pk, pv = xs
+        if quantized:
+            lp, pk, pv, ks, vs = xs
+        else:
+            lp, pk, pv = xs
+            ks = vs = None
         h = rmsnorm(lp["attn_norm"], xc, cfg.rms_norm_eps)
         q, k_new, v_new = attention_qkv(lp["attn"], cfg, h, positions)
         # mesh-sharded serving: new-token K/V and the pool pages stay
@@ -392,19 +403,38 @@ def decode_paged(params: dict, cfg, embeds: jnp.ndarray,
         q = shard(q, "batch", "seq", "heads", None)
         k_new = shard(k_new, "batch", "seq", "kv_heads", None)
         v_new = shard(v_new, "batch", "seq", "kv_heads", None)
-        pk = pk.at[write_pages, write_offs].set(k_new[:, 0].astype(pk.dtype))
-        pv = pv.at[write_pages, write_offs].set(v_new[:, 0].astype(pv.dtype))
+        if quantized:
+            pk, pv, ks, vs = quant_scatter(
+                pk[None], pv[None], ks[None], vs[None], write_pages,
+                write_offs, k_new[:, 0][None], v_new[:, 0][None])
+            pk, pv, ks, vs = pk[0], pv[0], ks[0], vs[0]
+            ks = shard(ks, None, "kv_heads")
+            vs = shard(vs, None, "kv_heads")
+        else:
+            pk = pk.at[write_pages, write_offs].set(
+                k_new[:, 0].astype(pk.dtype))
+            pv = pv.at[write_pages, write_offs].set(
+                v_new[:, 0].astype(pv.dtype))
         pk = shard(pk, None, None, "kv_heads", None)
         pv = shard(pv, None, None, "kv_heads", None)
         o = paged_attention_call(q[:, 0], pk, pv, page_table, lengths,
+                                 k_scale=ks, v_scale=vs,
                                  window=cfg.sliding_window,
                                  backend=backend, interpret=interpret)
         xc = xc + attention_out(lp["attn"], o[:, None])
         h = rmsnorm(lp["mlp_norm"], xc, cfg.rms_norm_eps)
         ff, aux = _mlp_block(lp, cfg, h, aux)
         xc = xc + ff
-        return (xc, aux), (pk, pv)
+        ys = (pk, pv, ks, vs) if quantized else (pk, pv)
+        return (xc, aux), ys
 
+    if quantized:
+        (x, _), (new_k, new_v, new_ks, new_vs) = _scan_or_loop(
+            body, (embeds, aux0),
+            (params["layers"], pool_k, pool_v, k_scales, v_scales),
+            cfg.scan_layers)
+        logits = _logits(params, cfg, x)
+        return logits[:, -1, :], new_k, new_v, new_ks, new_vs
     (x, _), (new_k, new_v) = _scan_or_loop(
         body, (embeds, aux0), (params["layers"], pool_k, pool_v),
         cfg.scan_layers)
@@ -416,7 +446,8 @@ def selective_prefill_paged(params: dict, cfg, embeds: jnp.ndarray,
                             sel_positions: jnp.ndarray, pool_k: jnp.ndarray,
                             pool_v: jnp.ndarray, page_table: jnp.ndarray,
                             lengths: jnp.ndarray, write_pages: jnp.ndarray,
-                            write_offs: jnp.ndarray, *, backend: str = "ref",
+                            write_offs: jnp.ndarray, k_scales=None,
+                            v_scales=None, *, backend: str = "ref",
                             interpret: bool = False):
     """MPIC selective-attention prefill straight against the paged KV pool.
 
@@ -439,31 +470,58 @@ def selective_prefill_paged(params: dict, cfg, embeds: jnp.ndarray,
     tokens, scatter K/V into their pages, then selective attention over the
     full paged region — the recomputed tokens become visible to each other
     inside this one pass (the paper's single-step property).  Returns
-    (logits (B, Sq, V), pool_k, pool_v).
+    (logits (B, Sq, V), pool_k, pool_v) — plus the updated scale buffers
+    when ``k_scales``/``v_scales`` (L, P, Hkv) mark the pools int8.
     """
     aux0 = jnp.zeros((), jnp.float32)
+    quantized = k_scales is not None
+    b, sq = sel_positions.shape
+    flat_pages = write_pages.reshape(-1)
+    flat_offs = write_offs.reshape(-1)
 
     def body(carry, xs):
         xc, aux = carry
-        lp, pk, pv = xs
+        if quantized:
+            lp, pk, pv, ks, vs = xs
+        else:
+            lp, pk, pv = xs
+            ks = vs = None
         h = rmsnorm(lp["attn_norm"], xc, cfg.rms_norm_eps)
         q, k_new, v_new = attention_qkv(lp["attn"], cfg, h, sel_positions)
         q = shard(q, "batch", "seq", "heads", None)
         k_new = shard(k_new, "batch", "seq", "kv_heads", None)
         v_new = shard(v_new, "batch", "seq", "kv_heads", None)
-        pk = pk.at[write_pages, write_offs].set(k_new.astype(pk.dtype))
-        pv = pv.at[write_pages, write_offs].set(v_new.astype(pv.dtype))
+        if quantized:
+            hkv, dh = k_new.shape[2], k_new.shape[3]
+            pk, pv, ks, vs = quant_scatter(
+                pk[None], pv[None], ks[None], vs[None], flat_pages,
+                flat_offs, k_new.reshape(1, b * sq, hkv, dh),
+                v_new.reshape(1, b * sq, hkv, dh))
+            pk, pv, ks, vs = pk[0], pv[0], ks[0], vs[0]
+            ks = shard(ks, None, "kv_heads")
+            vs = shard(vs, None, "kv_heads")
+        else:
+            pk = pk.at[write_pages, write_offs].set(k_new.astype(pk.dtype))
+            pv = pv.at[write_pages, write_offs].set(v_new.astype(pv.dtype))
         pk = shard(pk, None, None, "kv_heads", None)
         pv = shard(pv, None, None, "kv_heads", None)
         o = selective_attention_paged_call(
             q, pk, pv, page_table, sel_positions, lengths,
+            k_scale=ks, v_scale=vs,
             window=cfg.sliding_window, backend=backend, interpret=interpret)
         xc = xc + attention_out(lp["attn"], o)
         h = rmsnorm(lp["mlp_norm"], xc, cfg.rms_norm_eps)
         ff, aux = _mlp_block(lp, cfg, h, aux)
         xc = xc + ff
-        return (xc, aux), (pk, pv)
+        ys = (pk, pv, ks, vs) if quantized else (pk, pv)
+        return (xc, aux), ys
 
+    if quantized:
+        (x, _), (new_k, new_v, new_ks, new_vs) = _scan_or_loop(
+            body, (embeds, aux0),
+            (params["layers"], pool_k, pool_v, k_scales, v_scales),
+            cfg.scan_layers)
+        return _logits(params, cfg, x), new_k, new_v, new_ks, new_vs
     (x, _), (new_k, new_v) = _scan_or_loop(
         body, (embeds, aux0), (params["layers"], pool_k, pool_v),
         cfg.scan_layers)

@@ -70,7 +70,7 @@ from repro.cache.faults import FaultPlan, ReplicaCrash
 from repro.cache.library import KVLibrary
 from repro.cache.paged import PagedConfig, PagedKVPool
 from repro.cache.transfer import ParallelLoader, PrefetchHandle
-from repro.core.linker import bucket, precompute_media_kv
+from repro.core.linker import bucket, precompute_media_kv, scale_row_ids
 from repro.core.paged_prefill import PagedPrefiller
 from repro.core.policies import POLICIES, PolicyResult, PrefixStore
 from repro.kernels.paged_attn.ops import resolve_backend
@@ -104,6 +104,9 @@ class EngineConfig:
     num_pages: int = 0              # 0 → slots·⌈max_seq_len/page⌉ + scratch
     donate_decode: bool = True      # donate pool buffers into the decode jit
     paged_backend: str = "auto"     # pallas | ref | auto (pallas on TPU)
+    pool_dtype: str = ""            # "" → model compute dtype; "int8" →
+                                    # quantized pool, dequant-in-kernel
+                                    # (paged engines only)
     # -- paged prefill path ------------------------------------------------
     paged_prefill: bool = True      # mpic/cacheblend prefill straight into
                                     # pool pages (bucketed, donated jit)
@@ -209,18 +212,30 @@ class MPICEngine:
         self._rngs: Dict[str, np.random.Generator] = {}
 
         self._use_paged = self.cfg.paged and model.supports_paged_decode()
+        if self.cfg.pool_dtype == "int8" and not self._use_paged:
+            # satellite invariant: the dense fallback cache has no scale
+            # buffers and no dequant-in-kernel read path — an int8 request
+            # there would silently serve garbage, so fail loudly at build
+            raise ValueError(
+                "pool_dtype='int8' requires the paged KV pool: set "
+                "EngineConfig.paged=True and use an attention arch that "
+                "supports paged decode (the dense fallback cache carries "
+                "no per-page scales)")
         if self._use_paged:
             mcfg = model.cfg
             ps = self.cfg.page_size
             self._pages_per_slot = -(-self.cfg.max_seq_len // ps)
             num_pages = self.cfg.num_pages or (
                 self.cfg.decode_slots * self._pages_per_slot + 1)
+            pool_dtype = self.cfg.pool_dtype or mcfg.compute_dtype
             pool_sh = self.sharding.pool() if self.sharding else None
+            scale_sh = (self.sharding.pool_scale()
+                        if self.sharding and pool_dtype == "int8" else None)
             self.pool = PagedKVPool(PagedConfig(
                 num_pages=num_pages, page_size=ps,
                 num_layers=mcfg.num_layers, num_kv_heads=mcfg.num_kv_heads,
-                head_dim=mcfg.head_dim, dtype=mcfg.compute_dtype),
-                sharding=pool_sh)
+                head_dim=mcfg.head_dim, dtype=pool_dtype),
+                sharding=pool_sh, scale_sharding=scale_sh)
             # scratch page: absorbs padding writes (splice tails, idle
             # slots) so real pages are never aliased
             self._scratch_page = int(self.pool.alloc("__scratch__", 1)[0])
@@ -229,22 +244,32 @@ class MPICEngine:
                 self._scratch_page, np.int32)
             self._paged_backend = resolve_backend(self.cfg.paged_backend)
             self._batch_cache = None
-            donate = (1, 2) if self.cfg.donate_decode else ()
+            q8 = self.pool.quantized
+            if self.cfg.donate_decode:
+                donate = (1, 2, 3, 4) if q8 else (1, 2)
+            else:
+                donate = ()
             jit_kw = {}
             if self.sharding:
                 # explicit in/out shardings: the pool enters AND leaves the
-                # step head-sharded (donation keeps it in place), host-built
-                # operands go batch-on-data or replicated, logits come back
-                # replicated over vocab for the host-side sampler
+                # step head-sharded (donation keeps it in place; an int8
+                # pool's scale buffers ride along with the same treatment),
+                # host-built operands go batch-on-data or replicated, logits
+                # come back replicated over vocab for the host-side sampler
                 B = self.cfg.decode_slots
                 tok = self.sharding.batched(B, 2)
                 vec = self.sharding.batched(B, 1)
-                jit_kw = dict(
-                    in_shardings=(self._param_sh, pool_sh, pool_sh,
-                                  tok, tok, tok, vec, vec, vec),
-                    out_shardings=(tok, pool_sh, pool_sh))
-            self._decode_jit = jax.jit(self._paged_decode_fn,
-                                       donate_argnums=donate, **jit_kw)
+                ins = [self._param_sh, pool_sh, pool_sh]
+                outs = [tok, pool_sh, pool_sh]
+                if q8:
+                    ins += [scale_sh, scale_sh]
+                    outs += [scale_sh, scale_sh]
+                ins += [tok, tok, tok, vec, vec, vec]
+                jit_kw = dict(in_shardings=tuple(ins),
+                              out_shardings=tuple(outs))
+            self._decode_jit = jax.jit(
+                self._paged_decode_q8_fn if q8 else self._paged_decode_fn,
+                donate_argnums=donate, **jit_kw)
             # paged prefill: mpic/cacheblend link + selective-prefill
             # straight into pool pages through one bucketed, donated jit
             self._prefiller = None
@@ -680,7 +705,9 @@ class MPICEngine:
             if entry is None:
                 continue
             try:
-                length = entry.k.shape[1]
+                payload = entry.payload
+                length = (payload.qk.q.shape[1] if payload.qk is not None
+                          else payload.k.shape[1])
                 off = req.cur_len
                 if off + length + 1 >= self.cfg.max_seq_len:
                     break
@@ -691,12 +718,28 @@ class MPICEngine:
                     self._set_page_row(req.slot, pages)
                     ps = self.cfg.page_size
                     t = off + np.arange(length)
-                    self.pool.link_write(
-                        jnp.asarray(self._page_tables[req.slot][t // ps]),
-                        jnp.asarray((t % ps).astype(np.int32)),
-                        jnp.asarray(entry.k), jnp.asarray(entry.v),
-                        jnp.full((length,), off, jnp.int32),
-                        theta=cfg.rope_theta, relink=relink)
+                    pages_t = jnp.asarray(self._page_tables[req.slot][t // ps])
+                    offs_t = jnp.asarray((t % ps).astype(np.int32))
+                    delta = jnp.full((length,), off, jnp.int32)
+                    qk, qv = payload.qk, payload.qv
+                    if (self.pool.quantized and qk is not None
+                            and qk.block_tokens == qv.block_tokens):
+                        # spool→pool fast path: the library's int8 bytes
+                        # link by pure rescaling onto the page grid — no
+                        # dequantize→requantize fp round trip (the skipped
+                        # conversion is counted in the library stats)
+                        self.pool.link_write_q8(
+                            pages_t, offs_t,
+                            jnp.asarray(qk.q), jnp.asarray(qk.scale),
+                            jnp.asarray(qv.q), jnp.asarray(qv.scale),
+                            jnp.asarray(scale_row_ids(length, qk)), delta,
+                            theta=cfg.rope_theta, relink=relink)
+                        self.dynamic_lib.note_direct_link(1)
+                    else:
+                        self.pool.link_write(
+                            pages_t, offs_t,
+                            jnp.asarray(entry.k), jnp.asarray(entry.v),
+                            delta, theta=cfg.rope_theta, relink=relink)
                 else:
                     self._batch_cache = self._link_jit(
                         self._batch_cache, jnp.asarray(entry.k),
@@ -721,6 +764,17 @@ class MPICEngine:
         return self.model.decode_step_paged(
             params, tokens, positions, pool_k, pool_v, page_table, lengths,
             write_pages, write_offs, backend=self._paged_backend,
+            interpret=jax.default_backend() != "tpu")
+
+    def _paged_decode_q8_fn(self, params, pool_k, pool_v, k_scales, v_scales,
+                            tokens, positions, page_table, lengths,
+                            write_pages, write_offs):
+        """Int8-pool decode step: the scale buffers enter (and leave,
+        updated by the in-step quantized write) alongside the pages."""
+        return self.model.decode_step_paged(
+            params, tokens, positions, pool_k, pool_v, page_table, lengths,
+            write_pages, write_offs, k_scales, v_scales,
+            backend=self._paged_backend,
             interpret=jax.default_backend() != "tpu")
 
     def _select_token(self, req: Request, logits_row: np.ndarray) -> int:
@@ -806,10 +860,20 @@ class MPICEngine:
         mp_need = max(self.pool.pages_for(r.cur_len + 1) for r in live)
         mp = min(bucket(mp_need, 1), self._pages_per_slot)
         with self.scheduler.compute_window():
-            logits, self.pool.k, self.pool.v = self._decode_jit(
-                self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
-                jnp.asarray(positions), jnp.asarray(self._page_tables[:, :mp]),
-                jnp.asarray(lengths), jnp.asarray(wp), jnp.asarray(wo))
+            pool = self.pool
+            if pool.quantized:
+                (logits, pool.k, pool.v,
+                 pool.k_scale, pool.v_scale) = self._decode_jit(
+                    self.params, pool.k, pool.v, pool.k_scale, pool.v_scale,
+                    jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(self._page_tables[:, :mp]),
+                    jnp.asarray(lengths), jnp.asarray(wp), jnp.asarray(wo))
+            else:
+                logits, pool.k, pool.v = self._decode_jit(
+                    self.params, pool.k, pool.v, jnp.asarray(tokens),
+                    jnp.asarray(positions),
+                    jnp.asarray(self._page_tables[:, :mp]),
+                    jnp.asarray(lengths), jnp.asarray(wp), jnp.asarray(wo))
             logits = np.asarray(logits, np.float32)
         return live, logits
 

@@ -62,6 +62,13 @@ class ServingSharding:
         return self.named(None, None, None,
                           self.axis("kv_heads", self.cfg.num_kv_heads), None)
 
+    def pool_scale(self) -> NamedSharding:
+        """(L, P, Hkv) int8-pool scale buffers — the scale rows shard with
+        their pages' kv heads so the dequant-in-kernel shard_map path stays
+        collective-free (same guard as :meth:`pool`)."""
+        return self.named(None, None,
+                          self.axis("kv_heads", self.cfg.num_kv_heads))
+
     def batch_axis(self, batch: int):
         return self.axis("batch", batch)
 

@@ -255,6 +255,39 @@ def case_dense():
     _run_pair(base, shrd, reqs, check_reused=False)
 
 
+def case_int8():
+    """Int8-resident pool under 4-way tensor parallelism: the per-page
+    scale buffers must carry the same kv-head sharding as the pages, and
+    the quantized decode/prefill jits (donating pages AND scales) must
+    produce the same greedy tokens as the unsharded int8 engine."""
+    cfg = _cfg()
+    base, shrd = _engine_pair(cfg, EngineConfig(max_seq_len=128,
+                                                decode_slots=2,
+                                                page_size=PAGE,
+                                                pool_dtype="int8"),
+                              dynamic_media=("RAG1",))
+    assert base.pool.quantized and shrd.pool.quantized
+    assert shrd.pool.scale_sharding is not None
+    # scales are (L, P, Hkv): kv heads live on 'model', like the pages
+    assert shrd.pool.scale_sharding.spec[2] == "model"
+    assert shrd.pool.k_scale.sharding.spec[2] == "model"
+
+    def reqs():
+        out = [Request(prompt=_prompt(cfg, 40 + i), max_new_tokens=6,
+                       policy="mpic", policy_kwargs={"k": 4})
+               for i in range(2)]
+        out[0].retrieval_query = image_embeds("RAG1", 12,
+                                              cfg.d_model).mean(0)
+        return out
+
+    outs = _run_pair(base, shrd, reqs)
+    for reqs_ in outs:
+        assert "RAG1" in reqs_[0].linked_media
+    # pages + scales recycle cleanly on both engines
+    for eng in (base, shrd):
+        assert eng.pool.free_pages == eng.pool.cfg.num_pages - 1
+
+
 def case_nondiv():
     """Head counts that do NOT divide the 4-way model axis: every guard
     (ServingSharding.axis, head_shard_axis, pspec.shard) must fall back to
@@ -286,7 +319,7 @@ def case_nondiv():
 CASES = {"kernel": case_kernel, "decode": case_decode,
          "prefill": case_prefill, "mrag": case_mrag,
          "cacheblend": case_cacheblend, "dense": case_dense,
-         "nondiv": case_nondiv}
+         "nondiv": case_nondiv, "int8": case_int8}
 
 
 def main():

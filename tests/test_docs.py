@@ -131,6 +131,47 @@ def test_architecture_doc_covers_deployment_topology(arch_text):
         assert ep in arch_text, f"endpoint {ep} missing from ARCHITECTURE.md"
 
 
+def test_architecture_doc_covers_quantized_pool(arch_text):
+    """The 'Quantized pool' section must keep naming the real int8-pool
+    surface: the engine knob, the capacity denominator, the write
+    protocol, the zero-copy link path and its counters, the block-granular
+    wire fields, and the TP scale sharding."""
+    assert "### Quantized pool" in arch_text
+    import inspect
+
+    from repro.cache.paged import PagedConfig, PagedKVPool
+    from repro.cache.quant import QuantizedKV, quantize_kv
+    from repro.serving import EngineConfig
+    from repro.serving.sharding import ServingSharding
+
+    # the documented surface exists...
+    assert "pool_dtype" in inspect.signature(EngineConfig).parameters
+    assert isinstance(PagedConfig.quantized, property)
+    assert isinstance(PagedConfig.page_nbytes, property)
+    assert hasattr(PagedKVPool, "link_write_q8")
+    assert hasattr(ServingSharding, "pool_scale")
+    assert "block_tokens" in inspect.signature(quantize_kv).parameters
+    assert "block_tokens" in {f.name for f in
+                              __import__("dataclasses").fields(QuantizedKV)}
+    # ...and the doc names every piece of it
+    for claim in ("pool_dtype", "page_nbytes", "quant_scatter",
+                  "link_write_q8", "direct_links", "dequants",
+                  "block_tokens", "qk_block", "pool_scale", "QMAX",
+                  "symmetric_scale", "k_scale", "ValueError"):
+        assert claim in arch_text, f"{claim!r} missing from ARCHITECTURE.md"
+    # the int8 scale buffers documented as (L, P, Hkv) are really that
+    pool = PagedKVPool(PagedConfig(num_pages=3, page_size=4, num_layers=2,
+                                   num_kv_heads=2, head_dim=8,
+                                   dtype="int8"))
+    assert pool.k_scale.shape == (2, 3, 2)
+    # page_nbytes charges the fp32 scale rows to the page
+    cfg8 = PagedConfig(num_pages=3, page_size=4, num_layers=2,
+                       num_kv_heads=2, head_dim=8, dtype="int8")
+    cfg16 = PagedConfig(num_pages=3, page_size=4, num_layers=2,
+                        num_kv_heads=2, head_dim=8, dtype="bfloat16")
+    assert cfg8.page_nbytes == cfg16.page_nbytes // 2 + 2 * 2 * 2 * 4
+
+
 def test_adding_a_backend_guide_agrees_with_module_docstring(arch_text):
     """backends.py promises the walkthrough lives in ARCHITECTURE.md; both
     must keep naming the same extension points."""

@@ -27,15 +27,27 @@ def _tiny_cfg(hq, hkv, window=0):
                        param_dtype="float32", compute_dtype="float32")
 
 
+# fp32 pool is exact vs the dense path; the int8 pool dequantizes
+# in-kernel from per-page scales, so logits carry the KV quantization
+# error — bounded well under 0.05 on these tiny models (greedy argmax
+# stays identical; see test_engine_paged_int8_matches_fp32_pool)
+POOL_TOL = {"float32": dict(atol=1e-4, rtol=1e-4),
+            "int8": dict(atol=5e-2, rtol=0)}
+
+
+@pytest.mark.parametrize("pool_dtype", ["float32", "int8"])
 @pytest.mark.parametrize("hq,hkv,window", [
     (4, 4, 0),      # MHA, full causal
     (4, 2, 0),      # GQA 2:1
     (8, 1, 0),      # MQA
     (4, 2, 6),      # GQA + sliding window that BINDS during decode
 ])
-def test_paged_decode_matches_dense_gqa(hq, hkv, window):
+def test_paged_decode_matches_dense_gqa(hq, hkv, window, pool_dtype):
     """N decode steps: dense forward_with_cache vs decode_step_paged with
-    the Pallas kernel (interpret=True on CPU), logits allclose each step."""
+    the Pallas kernel (interpret=True on CPU), logits allclose each step —
+    exactly for the fp32 pool, within POOL_TOL for the int8 pool (whose
+    kernel gathers int8 pages + per-page scales and dequantizes
+    in-register)."""
     cfg = _tiny_cfg(hq, hkv, window)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -49,7 +61,7 @@ def test_paged_decode_matches_dense_gqa(hq, hkv, window):
     pool = PagedKVPool(PagedConfig(num_pages=8, page_size=PAGE,
                                    num_layers=cfg.num_layers,
                                    num_kv_heads=hkv, head_dim=cfg.head_dim,
-                                   dtype="float32"))
+                                   dtype=pool_dtype))
     pt = pool.alloc("r", t0 + steps)
     pool.write_tokens(pt, 0, cache["k"][:, 0, :t0], cache["v"][:, 0, :t0])
     page_table = jnp.asarray(pt[None])
@@ -60,30 +72,49 @@ def test_paged_decode_matches_dense_gqa(hq, hkv, window):
         t = jnp.full((1, 1), tok, jnp.int32)
         p = jnp.full((1, 1), cur, jnp.int32)
         dense_logits, cache = model.decode_step(params, t, p, cache, p)
-        paged_logits, pk, pv = model.decode_step_paged(
-            params, t, p, pool.k, pool.v, page_table,
-            jnp.asarray([cur + 1], jnp.int32),
-            jnp.asarray([pt[cur // PAGE]], jnp.int32),
-            jnp.asarray([cur % PAGE], jnp.int32),
-            backend="pallas", interpret=True)
-        pool.k, pool.v = pk, pv
+        step_args = (params, t, p, pool.k, pool.v, page_table,
+                     jnp.asarray([cur + 1], jnp.int32),
+                     jnp.asarray([pt[cur // PAGE]], jnp.int32),
+                     jnp.asarray([cur % PAGE], jnp.int32))
+        if pool.quantized:
+            (paged_logits, pool.k, pool.v, pool.k_scale,
+             pool.v_scale) = model.decode_step_paged(
+                *step_args, pool.k_scale, pool.v_scale,
+                backend="pallas", interpret=True)
+        else:
+            paged_logits, pool.k, pool.v = model.decode_step_paged(
+                *step_args, backend="pallas", interpret=True)
         np.testing.assert_allclose(np.asarray(paged_logits[0], np.float32),
                                    np.asarray(dense_logits[0], np.float32),
-                                   atol=1e-4, rtol=1e-4)
+                                   **POOL_TOL[pool_dtype])
         tok = int(jnp.argmax(dense_logits[0]))
 
-    # written pool slots equal the dense cache region (same KV material)
+    # written pool slots equal the dense cache region (same KV material;
+    # the int8 gather returns the dequantized view — a single quantize is
+    # within amax/254, but the running-amax write protocol REQUANTIZES a
+    # page's earlier rows whenever a later token raises its scale, so each
+    # incremental decode write can add another half-step of rounding;
+    # a few steps of slack covers the compounding)
     k_pool, _ = pool.gather(pt, t0 + steps)
-    np.testing.assert_allclose(np.asarray(k_pool),
-                               np.asarray(cache["k"][:, 0, :t0 + steps]),
-                               atol=1e-5, rtol=1e-5)
+    k_want = np.asarray(cache["k"][:, 0, :t0 + steps])
+    if pool.quantized:
+        page_of = np.asarray(pt)[np.arange(t0 + steps) // PAGE]
+        step = np.asarray(pool.k_scale)[:, page_of][..., None]
+        err = np.abs(np.asarray(k_pool) - k_want)
+        worst = float((err / np.maximum(step, 1e-9)).max())
+        assert worst <= 5.0, f"gather off by {worst:.2f} quant steps"
+    else:
+        np.testing.assert_allclose(np.asarray(k_pool), k_want,
+                                   atol=1e-5, rtol=1e-5)
 
 
-def _engine_outputs(cfg, model, params, *, paged, n_req=3):
+def _engine_outputs(cfg, model, params, *, paged, n_req=3, pool_dtype="",
+                    static_library=None):
     eng = MPICEngine(model, params,
                      EngineConfig(max_seq_len=128, decode_slots=2,
-                                  paged=paged, page_size=PAGE),
-                     )
+                                  paged=paged, page_size=PAGE,
+                                  pool_dtype=pool_dtype),
+                     static_library=static_library)
     for mid in ("A", "B"):
         eng.upload("u1", mid, image_embeds(mid, 16, cfg.d_model))
     eng.upload("*", "RAG1", image_embeds("RAG1", 12, cfg.d_model),
@@ -128,6 +159,74 @@ def test_engine_paged_matches_dense(fp32_llava):
         assert rp.output_tokens == rd.output_tokens
         assert rp.linked_media == rd.linked_media
     assert "RAG1" in reqs_p[0].linked_media
+
+
+def test_engine_paged_int8_matches_fp32_pool(fp32_llava):
+    """End to end with ``pool_dtype='int8'``: the same requests through the
+    int8-resident pool produce the SAME greedy continuations as the fp32
+    pool (deterministic seeds; the per-page quantization error never flips
+    an argmax on this model), and the pool reports quantized buffers."""
+    cfg, model, params = fp32_llava
+    eng_q, reqs_q = _engine_outputs(cfg, model, params, paged=True,
+                                    pool_dtype="int8")
+    eng_f, reqs_f = _engine_outputs(cfg, model, params, paged=True)
+    assert eng_q._use_paged and eng_q.pool.quantized
+    assert not eng_f.pool.quantized
+    for rq, rf in zip(reqs_q, reqs_f):
+        assert rq.done and rf.done
+        assert rq.output_tokens == rf.output_tokens
+        assert rq.linked_media == rf.linked_media
+    # pages recycle identically (scale buffers free with their pages)
+    assert eng_q.pool.free_pages == eng_q.pool.cfg.num_pages - 1
+
+
+def test_engine_int8_pool_zero_copy_links(fp32_llava):
+    """Satellite: an int8 library feeding an int8 pool links by pure
+    rescaling — no dequantize→requantize fp round trip.  The library's
+    stats must show every static link took the direct path and that lazy
+    dequantization never fired."""
+    from repro.cache import KVLibrary
+
+    cfg, model, params = fp32_llava
+    lib = KVLibrary(quantize=True)
+    eng, reqs = _engine_outputs(cfg, model, params, paged=True,
+                                pool_dtype="int8", static_library=lib)
+    assert all(r.done for r in reqs)
+    st = lib.stats()
+    assert st["direct_links"] > 0, "int8→int8 zero-copy path never taken"
+    assert st["dequants"] == 0, "fp materialization defeated the fast path"
+
+    # the fp32 pool cannot take the quantized fast path: it dequantizes at
+    # link time instead (counted), and takes zero direct links
+    lib_fp = KVLibrary(quantize=True)
+    _, reqs_fp = _engine_outputs(cfg, model, params, paged=True,
+                                 static_library=lib_fp)
+    assert all(r.done for r in reqs_fp)
+    st_fp = lib_fp.stats()
+    assert st_fp["direct_links"] == 0 and st_fp["dequants"] > 0
+
+
+def test_dense_engine_rejects_int8_pool():
+    """Satellite: the dense fallback cache carries no per-page scales, so
+    ``pool_dtype='int8'`` without the paged pool must fail loudly at
+    construction — both when dense is requested and when an unsupported
+    arch silently falls back to dense."""
+    cfg = _tiny_cfg(4, 2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged KV pool"):
+        MPICEngine(model, params,
+                   EngineConfig(max_seq_len=64, decode_slots=1, paged=False,
+                                pool_dtype="int8"))
+    # ssm arch has no paged decode path -> paged=True still lands on the
+    # dense fallback, which must reject int8 the same way
+    mcfg = get_smoke_config("mamba2-130m")
+    mmodel = build_model(mcfg)
+    mparams = mmodel.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged KV pool"):
+        MPICEngine(mmodel, mparams,
+                   EngineConfig(max_seq_len=64, decode_slots=1, paged=True,
+                                pool_dtype="int8"))
 
 
 def test_engine_paged_pool_recycled(fp32_llava):

@@ -42,7 +42,7 @@ def _run(cmd, *, timeout=900):
 
 
 @pytest.mark.parametrize("case", ["kernel", "decode", "prefill", "mrag",
-                                  "cacheblend", "dense", "nondiv"])
+                                  "cacheblend", "dense", "nondiv", "int8"])
 def test_sharded_parity_4dev(case):
     """4-device sharded serving numerically matches the 1-device path."""
     out = _run([sys.executable, WORKER, case])
