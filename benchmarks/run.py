@@ -30,8 +30,8 @@ def main() -> None:
                             fig9_main_comparison, fig10_sensitivity,
                             fig_cluster_throughput, fig_decode_paged,
                             fig_fault_tolerance, fig_fleet_recovery,
-                            fig_prefill_paged, fig_sharded_serving,
-                            roofline_table)
+                            fig_prefill_paged, fig_session_resume,
+                            fig_sharded_serving, roofline_table)
     suite = {
         "fig3": fig3_prefix_vs_fullreuse.main,
         "fig4": fig4_attention_sparsity.main,
@@ -46,6 +46,7 @@ def main() -> None:
         "cluster_throughput": fig_cluster_throughput.main,
         "fault_tolerance": fig_fault_tolerance.main,
         "fleet_recovery": fig_fleet_recovery.main,
+        "session_resume": fig_session_resume.main,
         "sharded_serving": fig_sharded_serving.main,
         "roofline": roofline_table.main,
     }

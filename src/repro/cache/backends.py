@@ -144,6 +144,8 @@ class BlockMetadata:
     key: Optional[str] = None          # content-hash block key (see content_key)
     ident: Optional[str] = None        # scope digest — network/spool address
     scope_user: Optional[str] = None   # scope's user half (spool rehydration)
+    salt: Optional[str] = None         # per-session cache salt mixed into the
+    #                                    key + ident digests (session blocks)
     nbytes: int = 0                    # stored bytes once known (survives spool)
     dtype: Optional[str] = None
     shape: Optional[Tuple[int, ...]] = None
@@ -156,14 +158,18 @@ class BlockMetadata:
     expires: float = float("inf")
 
 
-def content_key(payload: KVPayload, scope) -> str:
+def content_key(payload: KVPayload, scope, salt: Optional[str] = None) -> str:
     """Content-hash block key: ``sha1(stored arrays)[:32]-sha1(scope)[:8]``.
 
     Hashes the *stored* arrays (int8 + scales when quantized) so a disk or
     network reader can re-verify exactly the bytes it loaded.  The scope
     salt keeps user isolation: identical content under different scopes
     yields different keys (no cross-user dedup, hence no cross-user
-    observe/delete channel).
+    observe/delete channel).  ``salt`` — the per-session ``cache_salt`` —
+    additionally mixes into the scope half, so two sessions freezing
+    byte-identical KV under the *same* user scope still get distinct keys;
+    ``salt=None`` (every non-session block) leaves the digest exactly as
+    before.
     """
     h = hashlib.sha1()
     for a in payload.stored_arrays():
@@ -171,17 +177,26 @@ def content_key(payload: KVPayload, scope) -> str:
         h.update(str(a.dtype).encode())
         h.update(str(a.shape).encode())
         h.update(a.tobytes())
-    return f"{h.hexdigest()[:32]}-{scope_digest(scope)[:8]}"
+    return f"{h.hexdigest()[:32]}-{scope_digest(scope, salt)[:8]}"
 
 
-def scope_digest(scope) -> str:
+def scope_digest(scope, salt: Optional[str] = None) -> str:
     """Stable digest of a library scope key (``(user_id, media_id)``).
 
     Used as the spool filename and the network block address (``ident``).
     A stable hash, not ``hash()``: PYTHONHASHSEED randomization would
     orphan spool files across restarts and break cross-host addressing.
+    ``salt`` (per-session ``cache_salt``) folds into the digest behind a
+    NUL separator, making a session block's network address unguessable
+    without the salt — a peer ``GET /blocks/<ident>`` computed from the
+    right scope but the wrong salt misses.  ``salt=None`` keeps the
+    legacy digest bit-for-bit, so existing spool files and peers stay
+    addressable.
     """
-    return hashlib.sha1(repr(scope).encode()).hexdigest()[:24]
+    h = hashlib.sha1(repr(scope).encode())
+    if salt:
+        h.update(b"\x00" + str(salt).encode())
+    return h.hexdigest()[:24]
 
 
 def verify_payload(payload: KVPayload, key: str) -> bool:
@@ -426,6 +441,7 @@ class DiskBackend(StorageBackend):
                 "user_id": meta.scope_user,
                 "key": meta.key,
                 "ident": meta.ident,
+                "salt": meta.salt,
                 "nbytes": meta.nbytes,
                 "dtype": meta.dtype,
                 "shape": list(meta.shape) if meta.shape else None,

@@ -284,6 +284,13 @@ class KVLibrary:
         # paged pool's link_write_q8 zero-copy path)
         self._dequants = 0
         self._direct_links = 0
+        # session-store census (serving/sessions.py): freeze/thaw/fork
+        # events land here via note_session, while the live CoW gauges
+        # (cow_copies / pages_shared) are pulled from registered pool
+        # sources at stats() time — the pool counts them, the library
+        # reports them, mirroring the per-tier counter plumbing
+        self._session_ctr = {"freezes": 0, "thaws": 0, "forks": 0}
+        self._session_sources: List[Callable[[], Dict[str, int]]] = []
         # cold-start warm recovery: rescan the spool dir and re-index the
         # surviving blocks at the disk tier.  Opt-in — the default spool
         # dir is shared by many ephemeral libraries, and silently adopting
@@ -376,29 +383,66 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         with self._clock:
             self._direct_links += n
 
+    def note_session(self, **events: int) -> None:
+        """Session-store event census (``freezes``/``thaws``/``forks``) —
+        incremented by :class:`repro.serving.sessions.SessionStore` so the
+        counters surface wherever the library's stats do (cluster
+        ``report()``, fleet heartbeats)."""
+        with self._clock:
+            for name, n in events.items():
+                self._session_ctr[name] = self._session_ctr.get(name, 0) + n
+
+    def add_session_source(self, fn: Callable[[], Dict[str, int]]) -> None:
+        """Register a live-gauge provider for ``stats()["sessions"]`` —
+        engines register their pool's ``cow_copies``/``pages_shared`` here;
+        multiple sources (cluster replicas) sum per key."""
+        with self._clock:
+            self._session_sources.append(fn)
+
     # -- keys ----------------------------------------------------------------
     def _key(self, user_id: str, media_id: str):
         return ("*", media_id) if self.shared else (user_id, media_id)
 
     # -- API (workflow step ①: upload → precompute → store) -------------------
-    def put(self, user_id: str, media_id: str, k: np.ndarray, v: np.ndarray,
-            *, ttl: Optional[float] = None) -> Entry:
+    def put(self, user_id: str, media_id: str, k: Optional[np.ndarray] = None,
+            v: Optional[np.ndarray] = None, *, ttl: Optional[float] = None,
+            salt: Optional[str] = None, raw: bool = False,
+            qk: Optional[QuantizedKV] = None,
+            qv: Optional[QuantizedKV] = None) -> Entry:
         """Store one media KV block (replacing any previous block under the
         same scope).  Locking: hashing/quantization run outside the lock;
         the map swap + rebalance inside it; invalidation listeners fire
         after release.  The returned entry is NOT pinned — re-``get`` it
-        with ``pin=True`` before reading arrays across threads."""
+        with ``pin=True`` before reading arrays across threads.
+
+        ``salt`` — per-session ``cache_salt`` mixed into both the content
+        key and the network/spool ident, so session blocks are
+        unaddressable without the handle that carries it.  ``qk``/``qv``
+        store an **already-quantized** payload verbatim (the session
+        store's bit-exact int8 snapshots) instead of the fp ``k``/``v``
+        path; the library's own ``quantize`` pass is skipped for them.
+        ``raw=True`` skips that pass for an fp payload too — a frozen
+        fp-pool session must round-trip bit-exactly even through a
+        ``quantize=True`` library."""
         now = time.time()
-        e = Entry(media_id=media_id, k=np.asarray(k), v=np.asarray(v),
-                  tier=TIER_HBM, created=now, last_used=now,
-                  expires=now + (ttl if ttl is not None else self.default_ttl))
-        if self.quantize:
-            e.payload.qk = quantize_kv(e.k)
-            e.payload.qv = quantize_kv(e.v)
-            e.payload.k = e.payload.v = None
+        if qk is not None:
+            e = Entry(media_id=media_id, qk=qk, qv=qv, tier=TIER_HBM,
+                      created=now, last_used=now,
+                      expires=now + (ttl if ttl is not None
+                                     else self.default_ttl))
+        else:
+            e = Entry(media_id=media_id, k=np.asarray(k), v=np.asarray(v),
+                      tier=TIER_HBM, created=now, last_used=now,
+                      expires=now + (ttl if ttl is not None
+                                     else self.default_ttl))
+            if self.quantize and not raw:
+                e.payload.qk = quantize_kv(e.k)
+                e.payload.qv = quantize_kv(e.v)
+                e.payload.k = e.payload.v = None
         key = self._key(user_id, media_id)
-        e.meta.key = content_key(e.payload, key)
-        e.meta.ident = scope_digest(key)
+        e.meta.key = content_key(e.payload, key, salt)
+        e.meta.ident = scope_digest(key, salt)
+        e.meta.salt = salt
         e.meta.scope_user = key[0]
         e.meta.dtype, e.meta.shape = e.payload.dtype, e.payload.shape
         e._owner = self
@@ -417,7 +461,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         return e
 
     def register_remote(self, user_id: str, media_id: str, *,
-                        nbytes: int = 0,
+                        nbytes: int = 0, salt: Optional[str] = None,
                         ttl: Optional[float] = None) -> Optional[Entry]:
         """Register a block known to live on a peer without fetching it:
         creates a payload-less entry at the **network tier**, so the
@@ -432,7 +476,8 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
                   last_used=now,
                   expires=now + (ttl if ttl is not None else self.default_ttl),
                   _nbytes=nbytes)
-        e.meta.ident = scope_digest(key)
+        e.meta.ident = scope_digest(key, salt)
+        e.meta.salt = salt
         e.meta.scope_user = key[0]
         e._owner = self
         with self._lock:
@@ -443,7 +488,7 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         return e
 
     def get(self, user_id: str, media_id: str, *, replica=None,
-            pin: bool = False) -> Optional[Entry]:
+            pin: bool = False, salt: Optional[str] = None) -> Optional[Entry]:
         """Lookup honouring user scoping and expiry (step ③).
 
         The library lock covers only the lookup; the (potentially slow)
@@ -459,6 +504,10 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         ``pin``: bump the entry's pin count so ``_rebalance`` cannot spool
         its arrays out from under the caller; the caller (normally a
         :class:`~repro.cache.transfer.PrefetchHandle`) must ``unpin``.
+        ``salt``: per-session ``cache_salt`` — a lookup whose salt does not
+        match the stored block's is a **miss**, locally and on the wire
+        (the salted ident addresses the network probe), so one session's
+        snapshot can never be served to another.
         """
         key = self._key(user_id, media_id)
         with self._lock:
@@ -466,11 +515,13 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             if e is not None and time.time() > e.expires:
                 self._evict(key)
                 e = None
+            if e is not None and e.meta.salt != salt:
+                e = None        # wrong-salt probe: isolation beats the scope
             if e is not None:
                 e.last_used = time.time()
                 hit_tier = e.tier
         if e is None:
-            e = self._network_admit(user_id, media_id)
+            e = self._network_admit(user_id, media_id, salt=salt)
             if e is None:
                 with self._clock:
                     self._misses += 1
@@ -574,15 +625,18 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         if e.meta.key is not None:
             self.memory.put(e.meta.key, e.payload, e.meta)
 
-    def _network_admit(self, user_id: str, media_id: str) -> Optional[Entry]:
+    def _network_admit(self, user_id: str, media_id: str,
+                       salt: Optional[str] = None) -> Optional[Entry]:
         """Scope miss → ask the peers.  A hit creates a local host-tier
         entry carrying the peer's content key and remaining TTL; a miss
         (404 / timeout after one retry / checksum failure) returns None
-        and costs at most ``2 × timeout_s × peers``."""
+        and costs at most ``2 × timeout_s × peers``.  ``salt`` folds into
+        the wire address, so a wrong-salt session probe 404s on every
+        peer."""
         if self.network is None:
             return None
         key = self._key(user_id, media_id)
-        ident = scope_digest(key)
+        ident = scope_digest(key, salt)
         p, hdrs = self.network.get_with_headers(ident)
         if p is None:
             return None
@@ -595,8 +649,10 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
                   last_used=now, expires=now + ttl)
         e.payload.k, e.payload.v, e.payload.qk, e.payload.qv = \
             p.k, p.v, p.qk, p.qv
-        e.meta.key = hdrs.get("X-Block-Key") or content_key(e.payload, key)
+        e.meta.key = hdrs.get("X-Block-Key") or content_key(e.payload, key,
+                                                            salt)
         e.meta.ident = ident
+        e.meta.salt = salt
         e.meta.scope_user = key[0]
         e.meta.dtype, e.meta.shape = e.payload.dtype, e.payload.shape
         e._owner = self
@@ -665,13 +721,17 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         return counts
 
     def peek_tier(self, user_id: str, media_id: str, *,
-                  replica=None) -> Optional[str]:
+                  replica=None, salt: Optional[str] = None) -> Optional[str]:
         """Current tier of a block without touching LRU state or fetching.
         ``replica=`` gives that replica's view (HBM only if IT holds the
-        block).  Lock: one lookup under the library lock."""
+        block).  ``salt`` follows :meth:`get`'s isolation rule: a probe
+        whose salt does not match the stored one sees a miss.  Lock: one
+        lookup under the library lock."""
         with self._lock:
             e = self._entries.get(self._key(user_id, media_id))
             if e is None or time.time() > e.expires:
+                return None
+            if e.meta.salt != salt:
                 return None
             if replica is None:
                 return e.tier
@@ -688,6 +748,23 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
         """Remove a block from every tier (idempotent)."""
         with self._lock:
             self._evict(self._key(user_id, media_id))
+
+    def spool_now(self, user_id: str, media_id: str) -> bool:
+        """Demote one entry straight to the disk tier, bypassing capacity
+        pressure — the session store's durability hook (a frozen session
+        must survive ``kill -9`` + rehydration) and the idle-eviction
+        sweep's demotion path (``EngineConfig.freeze_idle_s``).  Returns
+        False when the entry is missing, already off-memory, pinned, or
+        the disk tier refuses the write (the entry then stays resident,
+        exactly like a ``_rebalance`` demotion failure)."""
+        with self._lock:
+            key = self._key(user_id, media_id)
+            e = self._entries.get(key)
+            if e is None:
+                return False
+            if e.payload.k is None and e.payload.qk is None:
+                return e.tier == TIER_DISK      # already durable
+            return self._spool(key, e)
 
     def expire_now(self) -> int:
         """Delete expired entries; returns the count (Fig. 6 miss source)."""
@@ -750,7 +827,9 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
                       expires=expires, path=path,
                       _nbytes=int(meta.get("nbytes", 0)))
             e.meta.key = meta.get("key") or key_str
-            e.meta.ident = meta.get("ident") or scope_digest(scope)
+            e.meta.salt = meta.get("salt")
+            e.meta.ident = (meta.get("ident")
+                            or scope_digest(scope, e.meta.salt))
             e.meta.scope_user = meta["user_id"]
             e.meta.dtype = meta.get("dtype")
             shape = meta.get("shape")
@@ -884,10 +963,11 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
                 # content-hash key: stable digest, not hash() —
                 # PYTHONHASHSEED randomization would orphan spool files
                 # across restarts, and the scope salt keeps two users'
-                # identical media on distinct files
-                m.key = content_key(e.payload, key)
+                # identical media on distinct files (the session
+                # cache_salt rides along for frozen-session blocks)
+                m.key = content_key(e.payload, key, m.salt)
             if m.ident is None:
-                m.ident = scope_digest(key)
+                m.ident = scope_digest(key, m.salt)
                 self._by_ident.setdefault(m.ident, key)
             if m.scope_user is None:
                 m.scope_user = key[0]
@@ -974,6 +1054,19 @@ KVPeerServer`.  Idempotent-ish: replaces the current peer set.
             out["misses"] = self._misses
             out["dequants"] = self._dequants
             out["direct_links"] = self._direct_links
+            sessions = dict(self._session_ctr)
+            sources = list(self._session_sources)
+        # live CoW gauges from the registered pools (outside the counter
+        # lock — a source reads engine/pool attributes); replicas sum
+        sessions.setdefault("cow_copies", 0)
+        sessions.setdefault("pages_shared", 0)
+        for fn in sources:
+            try:
+                for name, n in fn().items():
+                    sessions[name] = sessions.get(name, 0) + int(n)
+            except Exception:
+                pass    # a dead source must never break stats
+        out["sessions"] = sessions
         for tier, backend in ((TIER_DISK, self.disk),
                               (TIER_NETWORK, self.network)):
             if backend is None or tier not in tiers:
@@ -1022,7 +1115,7 @@ class SimulatedLatencyLibrary(KVLibrary):
         self.get_log: list = []      # (media_id, t_start, t_end)
 
     def get(self, user_id: str, media_id: str, *, replica=None,
-            pin: bool = False) -> Optional[Entry]:
+            pin: bool = False, salt=None) -> Optional[Entry]:
         t0 = time.perf_counter()
         # replica-aware latency: media already HBM-warm on THIS replica
         # loads for free — the cache-affinity router's measurable edge
@@ -1030,6 +1123,7 @@ class SimulatedLatencyLibrary(KVLibrary):
         delay = self.tier_latency_s.get(tier, 0.0)
         if delay:
             time.sleep(delay)
-        e = super().get(user_id, media_id, replica=replica, pin=pin)
+        e = super().get(user_id, media_id, replica=replica, pin=pin,
+                        salt=salt)
         self.get_log.append((media_id, t0, time.perf_counter()))
         return e

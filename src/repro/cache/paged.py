@@ -139,6 +139,51 @@ def _reset_scales_impl(k_scale, v_scale, pages):
     return (k_scale.at[:, pages].set(0.0), v_scale.at[:, pages].set(0.0))
 
 
+def _cow_copy_impl(pool_k, pool_v, src, dst):
+    """Donated whole-page copy ``src[i] -> dst[i]`` — the copy-on-write
+    resolution for forked sessions.  All reads gather from the *input*
+    buffers before any scatter lands, so a batch of copies is order-free;
+    padding pairs repeat ``(src[0], dst[0])`` — duplicate writes of the
+    same value, safe under undefined scatter order."""
+    pool_k = pool_k.at[:, dst].set(pool_k[:, src])
+    pool_v = pool_v.at[:, dst].set(pool_v[:, src])
+    return pool_k, pool_v
+
+
+def _cow_copy_q_impl(pool_k, pool_v, k_scale, v_scale, src, dst):
+    """Int8-pool CoW copy: the per-page fp32 scale rows travel with the
+    page bytes, so the duplicate dequantizes to exactly the shared
+    original."""
+    pool_k = pool_k.at[:, dst].set(pool_k[:, src])
+    pool_v = pool_v.at[:, dst].set(pool_v[:, src])
+    k_scale = k_scale.at[:, dst].set(k_scale[:, src])
+    v_scale = v_scale.at[:, dst].set(v_scale[:, src])
+    return pool_k, pool_v, k_scale, v_scale
+
+
+def _adopt_pages_impl(pool_k, pool_v, pages, k_pages, v_pages):
+    """Donated whole-page restore for session thaw: ``k_pages``/``v_pages``
+    (L, n, ps, H, Dh) land verbatim on ``pages``.  Duplicate entries (the
+    scratch-page padding) all carry the caller's pad content for that page,
+    so the undefined scatter winner cannot matter for real pages."""
+    pool_k = pool_k.at[:, pages].set(k_pages.astype(pool_k.dtype))
+    pool_v = pool_v.at[:, pages].set(v_pages.astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+def _adopt_pages_q_impl(pool_k, pool_v, k_scale, v_scale, pages,
+                        qk_pages, k_rows, qv_pages, v_rows):
+    """Int8 thaw restore: raw int8 page bytes plus their per-page scale
+    rows are written back exactly as frozen — no dequantize→requantize
+    round trip, so a thawed int8 session is bit-identical to the pool
+    state at freeze time."""
+    pool_k = pool_k.at[:, pages].set(qk_pages)
+    pool_v = pool_v.at[:, pages].set(qv_pages)
+    k_scale = k_scale.at[:, pages].set(k_rows)
+    v_scale = v_scale.at[:, pages].set(v_rows)
+    return pool_k, pool_v, k_scale, v_scale
+
+
 # module-level (unsharded) jits — sharded pools build their own instance
 # jits with pinned out_shardings, so the constraint never leaks into these
 # shared compile caches
@@ -157,6 +202,14 @@ scatter_tokens_q = functools.partial(
     jax.jit, donate_argnums=(0, 1, 2, 3))(_scatter_tokens_q_impl)
 reset_scales = functools.partial(
     jax.jit, donate_argnums=(0, 1))(_reset_scales_impl)
+cow_copy = functools.partial(
+    jax.jit, donate_argnums=(0, 1))(_cow_copy_impl)
+cow_copy_q = functools.partial(
+    jax.jit, donate_argnums=(0, 1, 2, 3))(_cow_copy_q_impl)
+adopt_pages = functools.partial(
+    jax.jit, donate_argnums=(0, 1))(_adopt_pages_impl)
+adopt_pages_q = functools.partial(
+    jax.jit, donate_argnums=(0, 1, 2, 3))(_adopt_pages_q_impl)
 
 
 def _bucket_pow2(n: int) -> int:
@@ -221,6 +274,17 @@ class PagedKVPool:
             self._reset_jit = jax.jit(
                 _reset_scales_impl, donate_argnums=(0, 1),
                 out_shardings=(scale_sharding, scale_sharding))
+            self._cow_jit = jax.jit(
+                _cow_copy_impl, donate_argnums=(0, 1), out_shardings=out_sh)
+            self._cow_q_jit = jax.jit(
+                _cow_copy_q_impl, donate_argnums=(0, 1, 2, 3),
+                out_shardings=out_qsh)
+            self._adopt_jit = jax.jit(
+                _adopt_pages_impl, donate_argnums=(0, 1),
+                out_shardings=out_sh)
+            self._adopt_q_jit = jax.jit(
+                _adopt_pages_q_impl, donate_argnums=(0, 1, 2, 3),
+                out_shardings=out_qsh)
         else:
             self._link_jit = pool_link
             self._scatter_jit = scatter_tokens
@@ -228,8 +292,21 @@ class PagedKVPool:
             self._link_q8_jit = pool_link_q8
             self._scatter_q_jit = scatter_tokens_q
             self._reset_jit = reset_scales
+            self._cow_jit = cow_copy
+            self._cow_q_jit = cow_copy_q
+            self._adopt_jit = adopt_pages
+            self._adopt_q_jit = adopt_pages_q
         self._free: List[int] = list(range(cfg.num_pages - 1, -1, -1))
         self._owned: Dict[str, List[int]] = {}
+        # session CoW bookkeeping: a page's refcount is the number of owner
+        # lists it appears on (absent == free).  ``fork`` bumps it, ``free``
+        # decrements, and only a zero-ref page returns to the free stack;
+        # ``make_exclusive`` resolves a write into a shared page by copying
+        # it first.  ``cow_copies``/``pages_shared`` are the cumulative
+        # counters the session benchmarks and KVLibrary.stats() surface.
+        self._refs: Dict[int, int] = {}
+        self.cow_copies = 0
+        self.pages_shared = 0
 
     # -- allocation --------------------------------------------------------
     @property
@@ -246,11 +323,17 @@ class PagedKVPool:
         """Tokens the request's current page list can hold."""
         return self.owned_pages(req_id) * self.cfg.page_size
 
+    def page_ref(self, page: int) -> int:
+        """Current refcount of one page (0 == free / unknown)."""
+        return self._refs.get(page, 0)
+
     def alloc(self, req_id: str, n_tokens: int) -> Optional[np.ndarray]:
         need = self.pages_for(n_tokens)
         if need > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(need)]
+        for p in pages:
+            self._refs[p] = 1
         self._owned.setdefault(req_id, []).extend(pages)
         return np.asarray(self._owned[req_id], np.int32)
 
@@ -261,23 +344,103 @@ class PagedKVPool:
         if need > len(self._free):
             return None
         for _ in range(max(need, 0)):
-            self._owned.setdefault(req_id, []).append(self._free.pop())
+            p = self._free.pop()
+            self._refs[p] = 1
+            self._owned.setdefault(req_id, []).append(p)
         return np.asarray(self._owned[req_id], np.int32)
 
     def free(self, req_id: str) -> None:
-        """Return a request's pages.  Idempotent: a second ``free`` (or one
-        for an unknown request) is a no-op, never a double-release.  On an
-        int8 pool the freed pages' scale rows are zeroed (one donated jit,
-        pow2-bucketed page count) so the next tenant's running amax starts
-        fresh instead of inheriting a stale large scale."""
+        """Drop a request's hold on its pages.  Idempotent: a second
+        ``free`` (or one for an unknown request) is a no-op, never a
+        double-release.  A page shared with a forked sibling (refcount
+        > 1) merely loses one reference; only the last hold returns it to
+        the free stack.  On an int8 pool the *released* pages' scale rows
+        are zeroed (one donated jit, pow2-bucketed page count) so the next
+        tenant's running amax starts fresh instead of inheriting a stale
+        large scale."""
         pages = self._owned.pop(req_id, [])
-        self._free.extend(pages)
-        if pages and self.quantized:
-            n = _bucket_pow2(len(pages))
-            padded = pages + [pages[0]] * (n - len(pages))
+        released = []
+        for p in pages:
+            r = self._refs.get(p, 1) - 1
+            if r <= 0:
+                self._refs.pop(p, None)
+                released.append(p)
+            else:
+                self._refs[p] = r
+        self._free.extend(released)
+        if released and self.quantized:
+            n = _bucket_pow2(len(released))
+            padded = released + [released[0]] * (n - len(released))
             arr = jnp.asarray(np.asarray(padded, np.int32))
             self.k_scale, self.v_scale = self._reset_jit(
                 self.k_scale, self.v_scale, arr)
+
+    # -- session fork / copy-on-write --------------------------------------
+    def fork(self, parent_req: str, child_reqs: List[str]) -> None:
+        """Register every child as a co-owner of the parent's page list.
+
+        Zero pages move and zero bytes copy: each child's page table is the
+        parent's, with every page's refcount bumped.  The first *write* a
+        child makes into a still-shared page goes through
+        :meth:`make_exclusive`, which duplicates just that page.  Children
+        must not already own pages (their tables would be clobbered)."""
+        pages = self._owned.get(parent_req)
+        if pages is None:
+            raise KeyError(f"fork: unknown parent request {parent_req!r}")
+        for child in child_reqs:
+            if child in self._owned:
+                raise ValueError(f"fork: child {child!r} already owns pages")
+            self._owned[child] = list(pages)
+            for p in pages:
+                self._refs[p] = self._refs.get(p, 0) + 1
+        self.pages_shared += len(pages) * len(child_reqs)
+
+    def make_exclusive(self, req_id: str, first_token: int,
+                       n_tokens: int = 1) -> Optional[np.ndarray]:
+        """Guarantee the pages covering ``[first_token, first_token +
+        n_tokens)`` are exclusively owned before a write lands in them.
+
+        Shared pages (refcount > 1) are duplicated through one donated
+        ``cow_copy`` jit (page bytes, plus the scale rows on an int8 pool)
+        and swapped into this request's table; the sibling keeps the
+        original.  Returns the request's (possibly updated) page array, or
+        ``None`` when the pool cannot supply the copies — the caller treats
+        that exactly like an ``extend`` failure.  A request with nothing
+        shared in range pays two dict probes per covered page and no
+        device work."""
+        pages = self._owned.get(req_id)
+        if pages is None:
+            return None
+        ps = self.cfg.page_size
+        lo = first_token // ps
+        hi = min((first_token + max(n_tokens, 1) - 1) // ps, len(pages) - 1)
+        shared = [i for i in range(lo, hi + 1)
+                  if self._refs.get(pages[i], 1) > 1]
+        if not shared:
+            return np.asarray(pages, np.int32)
+        if len(shared) > len(self._free):
+            return None
+        src, dst = [], []
+        for i in shared:
+            old = pages[i]
+            new = self._free.pop()
+            src.append(old)
+            dst.append(new)
+            self._refs[old] -= 1
+            self._refs[new] = 1
+            pages[i] = new
+        n = _bucket_pow2(len(src))
+        src_arr = jnp.asarray(np.asarray(
+            src + [src[0]] * (n - len(src)), np.int32))
+        dst_arr = jnp.asarray(np.asarray(
+            dst + [dst[0]] * (n - len(dst)), np.int32))
+        if self.quantized:
+            self.k, self.v, self.k_scale, self.v_scale = self._cow_q_jit(
+                self.k, self.v, self.k_scale, self.v_scale, src_arr, dst_arr)
+        else:
+            self.k, self.v = self._cow_jit(self.k, self.v, src_arr, dst_arr)
+        self.cow_copies += len(src)
+        return np.asarray(pages, np.int32)
 
     # -- data movement -----------------------------------------------------
     def link_write(self, pages, offs, k_seg, v_seg, delta, *, theta: float,
@@ -338,3 +501,89 @@ class PagedKVPool:
             k = k.astype(jnp.float32) * self.k_scale[:, pages][..., None]
             v = v.astype(jnp.float32) * self.v_scale[:, pages][..., None]
         return k, v
+
+    # -- session freeze / thaw ---------------------------------------------
+    def export_session(self, page_table: np.ndarray, n_tokens: int) -> dict:
+        """Snapshot a request's live KV for the session store.
+
+        fp pools return ``{"k", "v"}`` trimmed to ``n_tokens`` (stale
+        bytes past the live length must never leave the pool — they can
+        belong to a previous tenant).  Int8 pools return the *raw* page
+        bytes ``{"qk", "qv"}`` (L, npages·ps, H, Dh) with the tail beyond
+        ``n_tokens`` zeroed, plus ``{"k_scale", "v_scale"}`` per-page rows
+        (L, npages, H) — re-adopting those via :meth:`adopt_session`
+        restores the pool bit-identically, so a thawed int8 session
+        decodes exactly like one that was never frozen."""
+        ps = self.cfg.page_size
+        npages = self.pages_for(n_tokens)
+        pages = np.asarray(page_table)[:npages]
+        if not self.quantized:
+            k, v = self.gather(page_table, n_tokens)
+            return {"k": np.asarray(k), "v": np.asarray(v)}
+        L = self.cfg.num_layers
+        qk = np.array(self.k[:, pages])          # (L, npages, ps, H, Dh)
+        qv = np.array(self.v[:, pages])
+        qk = qk.reshape(L, npages * ps, *qk.shape[3:])
+        qv = qv.reshape(L, npages * ps, *qv.shape[3:])
+        qk[:, n_tokens:] = 0
+        qv[:, n_tokens:] = 0
+        return {"qk": qk, "qv": qv,
+                "k_scale": np.asarray(self.k_scale[:, pages]),
+                "v_scale": np.asarray(self.v_scale[:, pages])}
+
+    def adopt_session(self, page_table: np.ndarray, snap: dict,
+                      scratch_page: int) -> None:
+        """Write an :meth:`export_session` snapshot back into this
+        request's pages through one donated jit (whole-page restore; the
+        page count pads to its pow2 bucket with writes to the scratch
+        page, which absorbs garbage by design).  Int8 snapshots restore
+        raw bytes + scale rows — no dequantize→requantize round trip."""
+        ps = self.cfg.page_size
+        if self.quantized:
+            qk, qv = snap["qk"], snap["qv"]
+            npages = qk.shape[1] // ps
+            pages = list(np.asarray(page_table)[:npages])
+            n = _bucket_pow2(npages)
+            pad = n - npages
+            idx = jnp.asarray(np.asarray(pages + [scratch_page] * pad,
+                                         np.int32))
+            def _pages(a):   # (L, npages*ps, H, Dh) -> padded (L, n, ps, ...)
+                a = np.asarray(a).reshape(a.shape[0], npages, ps, *a.shape[2:])
+                if pad:
+                    a = np.concatenate(
+                        [a, np.zeros((a.shape[0], pad) + a.shape[2:],
+                                     a.dtype)], axis=1)
+                return jnp.asarray(a)
+            def _rows(s):    # (L, npages, H) -> padded (L, n, H)
+                s = np.asarray(s, np.float32)
+                if pad:
+                    s = np.concatenate(
+                        [s, np.zeros((s.shape[0], pad, s.shape[2]),
+                                     np.float32)], axis=1)
+                return jnp.asarray(s)
+            (self.k, self.v,
+             self.k_scale, self.v_scale) = self._adopt_q_jit(
+                self.k, self.v, self.k_scale, self.v_scale, idx,
+                _pages(qk), _rows(snap["k_scale"]),
+                _pages(qv), _rows(snap["v_scale"]))
+            return
+        k, v = np.asarray(snap["k"]), np.asarray(snap["v"])
+        n_tokens = k.shape[1]
+        npages = self.pages_for(n_tokens)
+        pages = list(np.asarray(page_table)[:npages])
+        n = _bucket_pow2(npages)
+        pad_pages = n - npages
+        pad_tok = n * ps - n_tokens
+        if pad_tok:
+            k = np.concatenate(
+                [k, np.zeros((k.shape[0], pad_tok) + k.shape[2:],
+                             k.dtype)], axis=1)
+            v = np.concatenate(
+                [v, np.zeros((v.shape[0], pad_tok) + v.shape[2:],
+                             v.dtype)], axis=1)
+        idx = jnp.asarray(np.asarray(pages + [scratch_page] * pad_pages,
+                                     np.int32))
+        shp = (k.shape[0], n, ps) + k.shape[2:]
+        self.k, self.v = self._adopt_jit(
+            self.k, self.v, idx, jnp.asarray(k.reshape(shp)),
+            jnp.asarray(v.reshape(shp)))

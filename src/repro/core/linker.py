@@ -346,3 +346,33 @@ def reselect_paged(model: Model, prompt: Prompt, link: PagedLinkResult,
         sel_media_embeds=sel_media_embeds, sel_media_mask=sel_media_mask,
         n_reused=int(link.total - sel.sum()),
         n_recomputed=int(sel.sum()))
+
+
+def session_suffix_link(tokens, n_ctx: int, d_model: int) -> PagedLinkResult:
+    """Link result for a thawed session's new-turn suffix.
+
+    A frozen session's KV is already position-baked (it was written at the
+    live decode positions, not canonical position 0), so thaw adopts the
+    snapshot pages verbatim — no ``rope_relink``, no scatter, and the whole
+    prefix counts as reused.  What remains is the new turn's suffix: plain
+    text tokens at positions ``n_ctx .. n_ctx+S-1``, all selected, all
+    forced (there is nothing in the library to reuse for them).  This
+    builds the :class:`PagedLinkResult` that hands that suffix to the
+    normal paged selective prefill (``core/paged_prefill``).
+    """
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    s = int(toks.shape[0])
+    total = n_ctx + s
+    forced = np.zeros(total, bool)
+    forced[n_ctx:] = True
+    return PagedLinkResult(
+        sel_idx=np.arange(n_ctx, total, dtype=np.int64),
+        sel_tokens=toks,
+        sel_media_embeds=np.zeros((s, d_model), np.float32),
+        sel_media_mask=np.zeros(s, bool),
+        n_reused=n_ctx,
+        n_recomputed=s,
+        misses=[],
+        total=total,
+        forced=forced,
+    )

@@ -33,6 +33,12 @@ Control protocol (one resource per verb, JSON or npz-blob bodies):
     POST /submit    -> 200 JSON  (body: request blob; 503 while draining)
     POST /upload    -> 200 JSON  (body: upload blob — precompute + store)
     GET  /results   -> 200 JSON  (terminal requests not yet delivered)
+    POST /freeze    -> 200 JSON  (body: {req_id, spool} — snapshot a
+                                  running session; returns its handle)
+    POST /thaw      -> 200 JSON  (body: {handle, suffix?, max_new_tokens?}
+                                  — resume a frozen session HERE; a missing
+                                  snapshot is pulled from a peer)
+    GET  /sessions  -> 200 JSON  (frozen session handles on this host)
     POST /drain     -> 200       (stop admission, finish in-flight)
     POST /shutdown  -> 200       (exit after the current step)
 
@@ -118,7 +124,9 @@ def encode_request(req) -> bytes:
               "policy_kwargs": req.policy_kwargs,
               "max_new_tokens": int(req.max_new_tokens),
               "priority": int(req.priority), "seed": int(req.seed),
-              "deadline_s": req.deadline_s}
+              "deadline_s": req.deadline_s,
+              "session_id": req.session_id,
+              "freeze_after": req.freeze_after}
     return pack_blob(header, arrays)
 
 
@@ -141,7 +149,9 @@ def decode_request(data: bytes):
                   policy_kwargs=dict(header.get("policy_kwargs") or {}),
                   priority=header.get("priority", 0),
                   seed=header.get("seed", 0),
-                  deadline_s=header.get("deadline_s"))
+                  deadline_s=header.get("deadline_s"),
+                  session_id=header.get("session_id"),
+                  freeze_after=header.get("freeze_after"))
     req.req_id = header["req_id"]     # identity survives the hop
     return req
 
@@ -189,15 +199,20 @@ class _HostState:
         self.snapshot: dict = {}        # last engine load/done published
 
 
-def _result_row(r, host_id: int) -> dict:
+def _result_row(r, host_id: int, session: Optional[dict] = None) -> dict:
     from repro.serving.request import State
     state = {State.DONE: "done", State.FAILED: "failed",
              State.DEADLINE: "deadline"}.get(r.state, r.state.value)
-    return {"req_id": r.req_id, "state": state, "host": host_id,
-            "tokens": [int(t) for t in r.output_tokens],
-            "ttft": r.ttft if r.t_first_token else None,
-            "n_reused": int(r.prefill_stats.get("n_reused", 0)),
-            "error": r.error}
+    row = {"req_id": r.req_id, "state": state, "host": host_id,
+           "tokens": [int(t) for t in r.output_tokens],
+           "ttft": r.ttft if r.t_first_token else None,
+           "n_reused": int(r.prefill_stats.get("n_reused", 0)),
+           "error": r.error}
+    if session is not None:
+        # a FROZEN request is terminal *on this host*; the handle rides
+        # the result row so the supervisor can thaw it anywhere
+        row["session"] = session
+    return row
 
 
 class _CtrlHandler(BaseHTTPRequestHandler):
@@ -235,9 +250,18 @@ class _CtrlHandler(BaseHTTPRequestHandler):
                 "steps": st.steps, "load": snap.get("load", {}),
                 "media": lib.ident_tiers(),
                 "rehydrate": lib.rehydrate_stats,
+                "sessions": lib.stats().get("sessions", {}),
                 "done": snap.get("done", 0), "accepted": accepted,
             }
             self._json(payload)
+        elif self.path == "/sessions":
+            # frozen session handles held by this host's engine (any host
+            # can thaw them — the snapshot lives in the tiered library and
+            # travels over the peer block protocol)
+            with st.lock:
+                handles = {sid: h.to_json()
+                           for sid, h in st.engine.sessions.handles.items()}
+            self._json({"sessions": handles})
         elif self.path == "/results":
             rows = []
             with st.qlock:
@@ -288,6 +312,51 @@ class _CtrlHandler(BaseHTTPRequestHandler):
                                  ttl=float(header.get("ttl", float("inf"))),
                                  dynamic=bool(header.get("dynamic")))
             self._json({"media_id": header["media_id"]})
+        elif self.path == "/freeze":
+            # body: {"req_id": ..., "spool": bool} → the handle JSON.
+            # Always spooled by default: a fleet freeze exists to survive
+            # the host, so the snapshot must reach the durable disk tier.
+            try:
+                body = json.loads(self._body().decode() or "{}")
+                req_id = body["req_id"]
+            except Exception as exc:
+                self._json({"error": f"bad freeze body: {exc}"}, status=400)
+                return
+            with st.lock:
+                try:
+                    handle = st.engine.freeze(
+                        req_id, spool=bool(body.get("spool", True)))
+                except (KeyError, ValueError, RuntimeError) as exc:
+                    self._json({"error": str(exc)}, status=409)
+                    return
+            self._json({"handle": handle.to_json()})
+        elif self.path == "/thaw":
+            # body: {"handle": {...}, "suffix": [...], "max_new_tokens": n}
+            # Resume-anywhere: if this host lacks the snapshot blocks, the
+            # library's network tier pulls them from a peer.
+            from repro.serving.sessions import SessionHandle
+            try:
+                body = json.loads(self._body().decode() or "{}")
+                handle = SessionHandle.from_json(body["handle"])
+            except Exception as exc:
+                self._json({"error": f"bad thaw body: {exc}"}, status=400)
+                return
+            if st.draining.is_set():
+                self._json({"error": "draining"}, status=503)
+                return
+            mnt = body.get("max_new_tokens")
+            with st.lock:
+                try:
+                    req = st.engine.thaw(
+                        handle, body.get("suffix") or None,
+                        max_new_tokens=int(mnt) if mnt is not None else None)
+                except Exception as exc:
+                    self._json({"error": str(exc)}, status=409)
+                    return
+            with st.qlock:
+                st.seen.add(req.req_id)
+            self._json({"req_id": req.req_id,
+                        "session_id": req.session_id})
         elif self.path == "/drain":
             st.draining.set()
             self._json({"draining": True})
@@ -333,7 +402,8 @@ def host_main(args) -> int:
                                          retries=0) for p in peers])
     engine = MPICEngine(model, params,
                         EngineConfig(max_seq_len=args.max_seq_len,
-                                     decode_slots=args.slots),
+                                     decode_slots=args.slots,
+                                     freeze_idle_s=args.freeze_idle_s),
                         static_library=lib)
     peer_server = KVPeerServer(lib, port=args.block_port)
 
@@ -355,6 +425,11 @@ def host_main(args) -> int:
         Called with ``st.lock`` held; takes ``st.qlock`` briefly."""
         rows = [_result_row(r, st.host_id)
                 for r in (engine.finished + engine.failed + engine.expired)]
+        for r in engine.frozen:
+            h = engine.sessions.handles.get(r.session_id)
+            rows.append(_result_row(
+                r, st.host_id,
+                session=h.to_json() if h is not None else None))
         load = engine.load_info()
         with st.qlock:
             for row in rows:
@@ -452,6 +527,7 @@ class _Inflight:
     host: Optional[int] = None      # host currently serving it
     t_submit: float = field(default_factory=time.perf_counter)
     resubmits: int = 0
+    session: bool = False           # thawed session (no wire blob to replay)
 
 
 class FleetSupervisor:
@@ -467,6 +543,7 @@ class FleetSupervisor:
                  max_seq_len: int = 256, peer_timeout_s: float = 0.5,
                  linger_s: float = 20.0, hbm_bytes: int = 0,
                  host_bytes: int = 0, start_grace_s: float = 180.0,
+                 freeze_idle_s: float = 0.0,
                  env: Optional[dict] = None):
         from repro.serving.router import make_router
         assert hosts >= 1
@@ -486,6 +563,7 @@ class FleetSupervisor:
         self.hbm_bytes = hbm_bytes
         self.host_bytes = host_bytes
         self.start_grace_s = start_grace_s
+        self.freeze_idle_s = freeze_idle_s
         self._env = env
         self.hosts: List[FleetHost] = []
         for i in range(hosts):
@@ -517,7 +595,8 @@ class FleetSupervisor:
                "--peer-timeout-s", str(self.peer_timeout_s),
                "--linger-s", str(self.linger_s),
                "--hbm-bytes", str(self.hbm_bytes),
-               "--host-bytes", str(self.host_bytes)]
+               "--host-bytes", str(self.host_bytes),
+               "--freeze-idle-s", str(self.freeze_idle_s)]
         env = dict(os.environ if self._env is None else self._env)
         src = os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
@@ -645,13 +724,26 @@ class FleetSupervisor:
             except subprocess.TimeoutExpired:
                 pass
         hid = host.spec.host_id
+        lost_sessions = []
         for req_id, rec in self.inflight.items():
             if rec.host == hid and req_id not in self.results:
+                if rec.session:
+                    # a thawed session has no wire blob to replay; its
+                    # snapshot is still in the library (spooled on freeze),
+                    # so the caller re-thaws from the handle instead
+                    self.results[req_id] = {
+                        "req_id": req_id, "state": "failed", "host": hid,
+                        "tokens": [], "ttft": None, "n_reused": 0,
+                        "error": "host died mid-resume; re-thaw the handle"}
+                    lost_sessions.append(req_id)
+                    continue
                 rec.host = None
                 rec.resubmits += 1
                 self.requeued += 1
                 if req_id not in self.pending:
                     self.pending.append(req_id)
+        for req_id in lost_sessions:
+            self.inflight.pop(req_id, None)
         if self.auto_restart:
             host.restarts += 1
             self._spawn(host)       # rejoins via the heartbeat loop
@@ -722,6 +814,54 @@ class FleetSupervisor:
         assert resp is not None and "error" not in resp, \
             f"upload of {media_id} to host {target.spec.host_id} failed"
         return target.spec.host_id
+
+    # -- session control ----------------------------------------------------
+    def freeze(self, host_id: int, req_id: str, *,
+               spool: bool = True) -> dict:
+        """Freeze a request running on ``host_id``; returns the handle
+        JSON (``SessionHandle.from_json``-able).  Spooled by default so
+        the snapshot survives the host process."""
+        body = json.dumps({"req_id": req_id, "spool": spool}).encode()
+        resp = self._http("POST", self._host(host_id), "/freeze",
+                          data=body, timeout=30.0)
+        if resp is None or "error" in resp:
+            raise RuntimeError(
+                f"freeze of {req_id!r} on host {host_id} failed: "
+                f"{(resp or {}).get('error', 'transport error')}")
+        return resp["handle"]
+
+    def thaw(self, host_id: int, handle, *, suffix=None,
+             max_new_tokens: Optional[int] = None) -> str:
+        """Resume a frozen session on ``host_id`` (any host will do —
+        a host that lacks the snapshot blocks pulls them over the peer
+        protocol).  Returns the resumed ``req_id``; the result arrives
+        through the normal :meth:`poll` path."""
+        hj = handle if isinstance(handle, dict) else handle.to_json()
+        body = json.dumps({
+            "handle": hj,
+            "suffix": [int(t) for t in (suffix or [])],
+            "max_new_tokens": max_new_tokens}).encode()
+        resp = self._http("POST", self._host(host_id), "/thaw",
+                          data=body, timeout=120.0)
+        if resp is None or "error" in resp:
+            raise RuntimeError(
+                f"thaw of {hj.get('session_id')!r} on host {host_id} "
+                f"failed: {(resp or {}).get('error', 'transport error')}")
+        req_id = resp["req_id"]
+        self.inflight[req_id] = _Inflight(data=b"", req=None,
+                                          host=host_id, session=True)
+        return req_id
+
+    def session_handles(self) -> Dict[str, dict]:
+        """Fleet-wide ``session_id -> handle JSON`` map (live hosts)."""
+        out: Dict[str, dict] = {}
+        for h in self.hosts:
+            if h.state not in ("up", "draining"):
+                continue
+            resp = self._http("GET", h, "/sessions", timeout=5.0)
+            if resp is not None:
+                out.update(resp.get("sessions", {}))
+        return out
 
     # -- result collection --------------------------------------------------
     def poll(self) -> int:
@@ -829,11 +969,19 @@ class FleetSupervisor:
             "router": self.router_name,
             "completed": len(self.results),
             "failed": sum(1 for r in self.results.values()
-                          if r["state"] != "done"),
+                          if r["state"] not in ("done", "frozen")),
+            "frozen": sum(1 for r in self.results.values()
+                          if r["state"] == "frozen"),
             "deaths": self.deaths,
             "restarts": sum(h.restarts for h in self.hosts),
             "requeued": self.requeued,
         }
+        sess: Dict[str, float] = {}
+        for h in self.hosts:
+            for k, v in ((h.health or {}).get("sessions") or {}).items():
+                sess[k] = sess.get(k, 0) + v
+        if sess:
+            out["sessions"] = sess
         if lat:
             out["mean_latency_s"] = float(np.mean(lat))
             out["p95_latency_s"] = float(lat[int(0.95 * (len(lat) - 1))])
@@ -850,7 +998,8 @@ def run_fleet(*, hosts: int = 2, requests: int = 8,
               max_new_tokens: int = 8, mpic_k: int = 8,
               router: str = "affinity",
               deadline_s: Optional[float] = None,
-              media_len: int = 24, timeout_s: float = 300.0) -> dict:
+              media_len: int = 24, timeout_s: float = 300.0,
+              freeze_idle_s: float = 0.0) -> dict:
     """End-to-end fleet demo: spawn hosts, upload media, serve a synthetic
     request wave cross-process, drain, and return the report (used by
     ``serve.py --fleet N`` and the CLI below)."""
@@ -859,7 +1008,8 @@ def run_fleet(*, hosts: int = 2, requests: int = 8,
     from repro.serving.request import Request
 
     cfg = get_smoke_config(arch)
-    fleet = FleetSupervisor(hosts, arch=arch, router=router)
+    fleet = FleetSupervisor(hosts, arch=arch, router=router,
+                            freeze_idle_s=freeze_idle_s)
     try:
         print(f"starting {hosts} engine host(s)…", flush=True)
         fleet.start()
@@ -925,6 +1075,10 @@ def main() -> int:
     ap.add_argument("--host-bytes", dest="host_bytes", type=int, default=0,
                     help=">0: host library host-RAM budget (small values "
                          "spool media KV to the per-host disk tier)")
+    ap.add_argument("--freeze-idle-s", dest="freeze_idle_s", type=float,
+                    default=0.0,
+                    help=">0: spool frozen session snapshots idle this "
+                         "many seconds to the disk tier")
     # demo-mode args
     ap.add_argument("--hosts", type=int, default=2)
     ap.add_argument("--requests", type=int, default=8)

@@ -77,6 +77,10 @@ def main():
                     help="sequential admission baseline")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help=">0: chunk long prefills across engine steps")
+    ap.add_argument("--freeze-idle-s", type=float, default=0.0,
+                    help=">0: frozen session snapshots idle this many "
+                         "seconds are spooled to the disk tier (freeze/"
+                         "thaw session store — see serving/sessions.py)")
     ap.add_argument("--mesh", default="none",
                     help="'none' (default), 'auto', or 'DxM' data×model "
                          "mesh for tensor-parallel serving (e.g. 1x4)")
@@ -121,7 +125,8 @@ def main():
                   arch=args.arch, policy=args.policy,
                   max_new_tokens=args.max_new_tokens,
                   mpic_k=args.mpic_k, router=args.router,
-                  deadline_s=args.deadline_s)
+                  deadline_s=args.deadline_s,
+                  freeze_idle_s=args.freeze_idle_s)
         return
     peers = [p.strip() for p in args.peers.split(",") if p.strip()]
     faults = None
@@ -136,7 +141,8 @@ def main():
     engine_cfg = EngineConfig(
         max_seq_len=args.max_seq_len, decode_slots=args.slots,
         paged=args.paged, pipelined=args.pipelined,
-        prefill_chunk_tokens=args.prefill_chunk)
+        prefill_chunk_tokens=args.prefill_chunk,
+        freeze_idle_s=args.freeze_idle_s)
     peer_server = None
     if args.replicas > 1:
         eng = MPICCluster(model, params, engine_cfg,

@@ -193,6 +193,64 @@ class MPICCluster:
         self._dispatch()
         return request
 
+    # ------------------------------------------------------------------
+    # session store: cluster-level freeze / thaw / fork.  The snapshot
+    # lands in the SHARED library, so a session frozen on replica A thaws
+    # on any replica (and — with peers configured — on any other host,
+    # which pulls the block over the network tier by its salted ident).
+    # ------------------------------------------------------------------
+    def freeze(self, req_id: str, *, spool: bool = False):
+        """Freeze a running request wherever it lives in the fleet."""
+        for e in self.engines:
+            if e.replica_id in self._quarantined:
+                continue
+            if any(r is not None and r.req_id == req_id
+                   for r in e.running):
+                return e.freeze(req_id, spool=spool)
+        raise KeyError(f"freeze: no replica is running {req_id!r}")
+
+    def _slot_capacity(self, need: int) -> MPICEngine:
+        """Healthy replica with the most free slots (≥ ``need``)."""
+        best, best_free = None, -1
+        for e in self.engines:
+            if e.replica_id in self._quarantined:
+                continue
+            free = sum(1 for r in e.running if r is None)
+            if free >= need and free > best_free:
+                best, best_free = e, free
+        if best is None:
+            raise RuntimeError(
+                f"no healthy replica has {need} free decode slot(s)")
+        return best
+
+    def thaw(self, handle, suffix_tokens=None, *,
+             max_new_tokens: Optional[int] = None) -> Request:
+        """Resume a frozen session on any replica with slot headroom —
+        resume-anywhere routing: the engine's thaw pulls the snapshot out
+        of the shared library (local tier hit, or a peer fetch)."""
+        eng = self._slot_capacity(1)
+        req = eng.thaw(handle, suffix_tokens,
+                       max_new_tokens=max_new_tokens)
+        req.replica = eng.replica_id
+        return req
+
+    def fork(self, handle, n: int, *,
+             max_new_tokens: Optional[int] = None) -> List[Request]:
+        """Fork ``n`` copy-on-write children on ONE replica (the children
+        share pool pages, and a pool spans exactly one replica)."""
+        eng = self._slot_capacity(n)
+        children = eng.fork(handle, n, max_new_tokens=max_new_tokens)
+        for r in children:
+            r.replica = eng.replica_id
+        return children
+
+    def session_handles(self) -> Dict[str, object]:
+        """Fleet-wide ``session_id -> SessionHandle`` map."""
+        out: Dict[str, object] = {}
+        for e in self.engines:
+            out.update(e.sessions.handles)
+        return out
+
     def _eligible(self) -> List[MPICEngine]:
         cap = self.cfg.max_queue_per_replica
         return [e for e in self.engines
@@ -389,6 +447,9 @@ class MPICCluster:
         # per-tier hit/promote/demote/fetch-latency counters (stats() only
         # includes the network tier when peers are configured)
         out["cache_tiers"] = out["library"].get("tiers", {})
+        # session census: freeze/thaw/fork events plus the pools' live
+        # cow_copies/pages_shared gauges (summed across replica sources)
+        out["sessions"] = out["library"].get("sessions", {})
         if self.peer_server is not None:
             out["peer_server"] = {"address": self.peer_server.address,
                                   **self.peer_server.stats()}

@@ -83,6 +83,7 @@ from repro.serving.scheduler import (
     ChunkedPrefillTask,
     PipelinedScheduler,
 )
+from repro.serving.sessions import SessionHandle, SessionStore
 from repro.serving.sharding import ServingSharding
 
 
@@ -111,6 +112,9 @@ class EngineConfig:
     paged_prefill: bool = True      # mpic/cacheblend prefill straight into
                                     # pool pages (bucketed, donated jit)
     prefill_bucket_min: int = 16    # smallest selection shape bucket
+    # -- session store (serving/sessions.py) -------------------------------
+    freeze_idle_s: float = 0.0      # >0: frozen sessions idle this long
+                                    # are demoted to the disk tier each step
 
 
 # -- jit'd, donated cache-mutation helpers ----------------------------------
@@ -208,6 +212,7 @@ class MPICEngine:
         self.finished: List[Request] = []
         self.failed: List[Request] = []     # prefill raised (see _abort_prefill)
         self.expired: List[Request] = []    # deadline_s elapsed (DEADLINE)
+        self.frozen: List[Request] = []     # FROZEN via sessions.freeze()
         self._prefill_tasks: Dict[int, ChunkedPrefillTask] = {}
         self._rngs: Dict[str, np.random.Generator] = {}
 
@@ -311,6 +316,17 @@ class MPICEngine:
                 self._splice_jit = _dense_splice
                 self._link_jit = _dense_link
 
+        # session store: freeze/thaw/fork live decode state (paged only —
+        # the thaw/adopt path is page-shaped).  The pool's live CoW gauges
+        # register with the shared library so cluster report()/fleet
+        # heartbeats surface them beside the freeze/thaw/fork census.
+        self.sessions = SessionStore(self)
+        if self._use_paged:
+            pool = self.pool
+            self.static_lib.add_session_source(
+                lambda: {"cow_copies": pool.cow_copies,
+                         "pages_shared": pool.pages_shared})
+
     @property
     def waiting(self):
         """The scheduler's priority queue (len/bool/iter like the old deque)."""
@@ -375,6 +391,31 @@ class MPICEngine:
             self._advance_prefills()
             self._admit()
             self._decode()
+        if self.cfg.freeze_idle_s > 0:
+            self.sessions.sweep_idle(self.cfg.freeze_idle_s)
+
+    # -- session store delegates (serving/sessions.py) ---------------------
+    def freeze(self, req_id: str, *, spool: bool = False) -> SessionHandle:
+        """Freeze a RUNNING request's live KV into the library and free
+        its slot — see :meth:`repro.serving.sessions.SessionStore.freeze`."""
+        with self._shard_ctx():
+            return self.sessions.freeze(req_id, spool=spool)
+
+    def thaw(self, handle: SessionHandle, suffix_tokens=None, *,
+             max_new_tokens: Optional[int] = None) -> Request:
+        """Resume a frozen session into a free slot (optionally with the
+        next turn's suffix) — see :meth:`SessionStore.thaw`."""
+        with self._shard_ctx():
+            return self.sessions.thaw(handle, suffix_tokens,
+                                      max_new_tokens=max_new_tokens)
+
+    def fork(self, handle: SessionHandle, n: int, *,
+             max_new_tokens: Optional[int] = None) -> List[Request]:
+        """Thaw one snapshot into ``n`` copy-on-write children — see
+        :meth:`SessionStore.fork`."""
+        with self._shard_ctx():
+            return self.sessions.fork(handle, n,
+                                      max_new_tokens=max_new_tokens)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         steps = 0
@@ -715,6 +756,13 @@ class MPICEngine:
                     pages = self.pool.extend(req.req_id, length, off)
                     if pages is None:           # pool full: stop linking
                         break
+                    # CoW guard: an MRAG link scatters into [off, off+len)
+                    # — duplicate any page still shared with a forked
+                    # sibling before the donated write lands
+                    pages = self.pool.make_exclusive(req.req_id, off,
+                                                     length)
+                    if pages is None:
+                        break
                     self._set_page_row(req.slot, pages)
                     ps = self.cfg.page_size
                     t = off + np.arange(length)
@@ -806,6 +854,16 @@ class MPICEngine:
             nxt = self._select_token(r, logits[r.slot])
             r.output_tokens.append(nxt)
             r.cur_len += 1
+            if (r.freeze_after is not None
+                    and len(r.output_tokens) >= r.freeze_after
+                    and self._use_paged):
+                # deterministic mid-decode freeze point (fleet resume
+                # smoke): snapshot NOW, before this token is fed — the
+                # thawed session re-emits it, so resume parity composes as
+                # frozen[:-1] + thawed.  Spooled immediately: the point of
+                # an automated freeze is surviving whatever comes next.
+                self.sessions.freeze(r.req_id, spool=True)
+                continue
             if len(r.output_tokens) >= r.max_new_tokens or \
                     r.cur_len + 1 >= self.cfg.max_seq_len:
                 self._finish(r)
@@ -849,10 +907,21 @@ class MPICEngine:
                     live.remove(r)
                     continue
                 self._set_page_row(r.slot, pages)
+            row = self._page_tables[r.slot]
+            if self.pool.page_ref(int(row[r.cur_len // ps])) > 1:
+                # copy-on-write: this step writes into a page shared with
+                # a forked sibling — duplicate it first (one donated copy)
+                pages = self.pool.make_exclusive(r.req_id, r.cur_len)
+                if pages is None:
+                    r.prefill_stats["truncated"] = True
+                    self._finish(r)
+                    live.remove(r)
+                    continue
+                self._set_page_row(r.slot, pages)
+                row = self._page_tables[r.slot]
             tokens[r.slot, 0] = r.output_tokens[-1]
             positions[r.slot, 0] = r.cur_len
             lengths[r.slot] = r.cur_len + 1
-            row = self._page_tables[r.slot]
             wp[r.slot] = row[r.cur_len // ps]
             wo[r.slot] = r.cur_len % ps
         if not live:

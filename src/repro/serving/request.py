@@ -21,6 +21,7 @@ class State(enum.Enum):
     DONE = "done"
     FAILED = "failed"       # prefill raised; slot freed, request terminal
     DEADLINE = "deadline"   # deadline_s elapsed; reaped, resources freed
+    FROZEN = "frozen"       # decode snapshotted into the library; slot freed
 
 
 @dataclasses.dataclass(eq=False)
@@ -37,6 +38,12 @@ class Request:
     # wall-clock budget from arrival; None = no deadline.  Reaped by the
     # engine at admission and between steps (terminal DEADLINE state).
     deadline_s: Optional[float] = None
+    # session store (serving/sessions): the session this request belongs to
+    # (set by thaw/fork; freeze stamps it), and an optional deterministic
+    # freeze point — after emitting this many output tokens the engine
+    # freezes the request instead of decoding further (fleet smoke tests).
+    session_id: Optional[str] = None
+    freeze_after: Optional[int] = None
 
     req_id: str = dataclasses.field(
         default_factory=lambda: f"req{next(_ids)}")

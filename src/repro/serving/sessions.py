@@ -1,0 +1,416 @@
+"""Session KV store — freeze / thaw / fork of live decode state.
+
+MPIC's position-independent relink makes *session* KV (not just media KV)
+cheap to persist: a decode slot's pages are already position-baked at the
+request's live positions, so a snapshot adopts back verbatim — no
+``rope_relink``, no recompute — and the new turn's suffix rides the normal
+paged selective prefill.  This module turns that observation into three
+first-class engine operations:
+
+``freeze(req_id) -> SessionHandle``
+    Snapshot a RUNNING request's pages into the :class:`KVLibrary` as a
+    normal tiered entry.  The block then rides everything the library
+    already does — memory→disk→network tiers, the spool wire format, int8
+    residency, crash rehydration, and the fleet peer protocol — so a
+    frozen session survives a host kill and thaws anywhere.  The entry is
+    keyed under a per-session ``cache_salt`` (mixed into both the content
+    key and the wire ident by ``cache/backends.scope_digest``), so one
+    session's snapshot is unaddressable without the handle.
+
+``thaw(handle, suffix_tokens=None) -> Request``
+    Re-admit a frozen session into a free decode slot: allocate pages,
+    restore the snapshot through the pool's donated adopt jit (int8
+    snapshots restore raw bytes + scale rows — bit-identical to the pool
+    at freeze time), restore the sampling generator state, and either
+    resume decode directly (no suffix) or run the new turn's suffix
+    through the :class:`~repro.core.paged_prefill.PagedPrefiller` via
+    :func:`~repro.core.linker.session_suffix_link`.  Greedy resume is
+    token-identical to a session that was never frozen.
+
+``fork(handle, n) -> [Request, ...]``
+    Thaw one snapshot into N children that *share* the parent's pages via
+    pool refcounts: zero pages are copied at fork time, and a child's
+    first divergent write duplicates only the page it touches
+    (:meth:`PagedKVPool.make_exclusive` — copy-on-write).  This is the
+    agentic tree-search shape: N speculative branches from one prefix at
+    the cost of one.
+
+The freeze/thaw/fork event census lands in the library
+(``KVLibrary.note_session`` → ``stats()["sessions"]``) beside the pool's
+live ``cow_copies``/``pages_shared`` gauges, so the cluster report and
+fleet heartbeats surface session activity with no extra plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.cache.quant import QuantizedKV
+from repro.core.linker import session_suffix_link
+from repro.core.segments import Prompt, text_segment
+from repro.serving.request import Request, State
+
+SESSION_MEDIA_PREFIX = "__session__::"
+
+
+def _new_salt() -> str:
+    return os.urandom(8).hex()
+
+
+@dataclasses.dataclass
+class SessionHandle:
+    """Everything needed to resume a frozen session — JSON-safe, so the
+    fleet control plane can hand it across hosts.  The KV itself is NOT
+    here: it lives in the library under ``(user_id, media_id)`` +
+    ``cache_salt``, and a host that lacks the block pulls it over the
+    peer protocol on the first thaw ``get``."""
+    session_id: str
+    user_id: str
+    media_id: str
+    cache_salt: str
+    n_ctx: int                      # tokens resident in the snapshot KV
+    output_tokens: List[int]        # full output at freeze time
+    next_token: int                 # == output_tokens[-1]; not yet in KV
+    seed: int
+    rng_state: Optional[dict]       # np Generator state (None when greedy)
+    pool_dtype: str
+    page_size: int
+    max_new_tokens: int             # the frozen request's original budget
+    frozen_at: float = 0.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SessionHandle":
+        d = dict(d)
+        d["output_tokens"] = [int(t) for t in d.get("output_tokens", [])]
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)
+                      if f.name in d})
+
+    @property
+    def remaining_tokens(self) -> int:
+        """Default thaw budget: the tokens the frozen request had left,
+        plus one — the thawed request re-emits ``next_token`` as its
+        first output (it was sampled but never fed), so
+        ``frozen[:-1] + thawed == uninterrupted`` at equal budgets."""
+        return max(1, self.max_new_tokens - len(self.output_tokens) + 1)
+
+
+class SessionStore:
+    """Freeze / thaw / fork against one engine's pool + static library.
+
+    Owned by :class:`~repro.serving.engine.MPICEngine` (``engine.sessions``);
+    the engine exposes thin ``freeze``/``thaw``/``fork`` delegates.  All
+    snapshot state lives in the library — this object only tracks handles
+    and per-session salts, so a restarted host resumes sessions purely
+    from rehydrated spool files plus handles sent over the control plane.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.handles: Dict[str, SessionHandle] = {}
+        self._salts: Dict[str, str] = {}
+        self._spooled: set = set()      # sids already demoted by the sweep
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def _lib(self):
+        return self.engine.static_lib
+
+    def _require_paged(self):
+        if not self.engine._use_paged:
+            raise RuntimeError(
+                "session freeze/thaw requires the paged KV pool "
+                "(EngineConfig.paged=True on an attention arch)")
+
+    def get(self, session_id: str) -> Optional[SessionHandle]:
+        return self.handles.get(session_id)
+
+    # -- freeze ------------------------------------------------------------
+    def freeze(self, req_id: str, *, spool: bool = False) -> SessionHandle:
+        """Snapshot a RUNNING request into the library and free its slot.
+
+        The request transitions to ``State.FROZEN`` with its partial
+        output kept; its pages, sampling generator, and slot are released
+        (a frozen session costs zero pool pages).  ``spool=True``
+        additionally demotes the snapshot straight to the disk tier
+        (``KVLibrary.spool_now``) — the durability choice for a fleet
+        host that may be killed before the idle sweep runs.
+        """
+        self._require_paged()
+        eng = self.engine
+        req = next((r for r in eng.running
+                    if r is not None and r.req_id == req_id), None)
+        if req is None:
+            raise KeyError(f"freeze: no running request {req_id!r}")
+        if req.state is not State.RUNNING:
+            raise ValueError(
+                f"freeze: request {req_id!r} is {req.state.value}, "
+                "only decoding (RUNNING) requests can freeze")
+
+        sid = req.session_id or f"sess-{os.urandom(6).hex()}"
+        salt = self._salts.setdefault(sid, _new_salt())
+        media_id = SESSION_MEDIA_PREFIX + sid
+        user_id = req.prompt.user_id
+        n_ctx = req.cur_len
+        pool = eng.pool
+
+        snap = pool.export_session(eng._page_tables[req.slot], n_ctx)
+        rng = eng._rngs.get(req.req_id)
+        rng_state = rng.bit_generator.state if rng is not None else None
+
+        if pool.quantized:
+            ps = pool.cfg.page_size
+            # pool scales are one fp32 row per (layer, page, kv_head);
+            # the spool wire format wants (L, nblocks, H, Dh) — broadcast
+            # the row across Dh (exact) with block_tokens = page_size, and
+            # thaw recovers the rows via scale[..., 0]
+            def _wire(q, rows):
+                scale = np.ascontiguousarray(
+                    np.broadcast_to(rows[..., None],
+                                    rows.shape + (pool.cfg.head_dim,)))
+                return QuantizedKV(q=q, scale=scale, block_tokens=ps)
+            self._lib.put(user_id, media_id, salt=salt,
+                          qk=_wire(snap["qk"], snap["k_scale"]),
+                          qv=_wire(snap["qv"], snap["v_scale"]))
+        else:
+            self._lib.put(user_id, media_id, snap["k"], snap["v"],
+                          salt=salt, raw=True)
+
+        handle = SessionHandle(
+            session_id=sid, user_id=user_id, media_id=media_id,
+            cache_salt=salt, n_ctx=n_ctx,
+            output_tokens=list(req.output_tokens),
+            next_token=int(req.output_tokens[-1]),
+            seed=req.seed, rng_state=rng_state,
+            pool_dtype=pool.cfg.dtype, page_size=pool.cfg.page_size,
+            max_new_tokens=req.max_new_tokens, frozen_at=time.time())
+
+        eng._release_slot(req)
+        req.state = State.FROZEN
+        req.session_id = sid
+        eng.frozen.append(req)
+        self.handles[sid] = handle
+        self._spooled.discard(sid)
+        self._lib.note_session(freezes=1)
+        if spool:
+            if self._lib.spool_now(user_id, media_id):
+                self._spooled.add(sid)
+        return handle
+
+    # -- thaw --------------------------------------------------------------
+    def _fetch_snapshot(self, handle: SessionHandle) -> dict:
+        """Pull the snapshot back out of the library (any tier — a local
+        miss goes to the peers via the salted ident) and rebuild the
+        pool-shaped snapshot dict."""
+        e = self._lib.get(handle.user_id, handle.media_id,
+                          salt=handle.cache_salt, pin=True)
+        if e is None:
+            raise LookupError(
+                f"thaw: session snapshot {handle.session_id!r} not found "
+                "in any tier (expired, deleted, or wrong salt)")
+        try:
+            if e.payload.qk is not None:
+                qk, qv = e.payload.qk, e.payload.qv
+                return {"qk": np.asarray(qk.q), "qv": np.asarray(qv.q),
+                        "k_scale": np.asarray(qk.scale[..., 0]),
+                        "v_scale": np.asarray(qv.scale[..., 0])}
+            return {"k": np.asarray(e.payload.k),
+                    "v": np.asarray(e.payload.v)}
+        finally:
+            self._lib.unpin(e)
+
+    def _check_pool(self, handle: SessionHandle):
+        pool = self.engine.pool
+        if (handle.pool_dtype != pool.cfg.dtype
+                or handle.page_size != pool.cfg.page_size):
+            raise ValueError(
+                f"thaw: snapshot was frozen on a {handle.pool_dtype!r}/"
+                f"page={handle.page_size} pool; this engine runs "
+                f"{pool.cfg.dtype!r}/page={pool.cfg.page_size} — resume "
+                "requires an identically configured pool")
+        return pool
+
+    def _admit_slot(self, req: Request, n_tokens: int) -> int:
+        """Place ``req`` in a free slot with pages for ``n_tokens``."""
+        eng = self.engine
+        slot = eng._free_slot()
+        if slot < 0:
+            raise RuntimeError("thaw: no free decode slot")
+        pages = eng.pool.alloc(req.req_id, n_tokens)
+        if pages is None:
+            raise RuntimeError("thaw: paged pool cannot hold the session")
+        req.slot = slot
+        eng.running[slot] = req
+        eng._set_page_row(slot, pages)
+        return slot
+
+    def _restore_rng(self, req: Request, handle: SessionHandle) -> None:
+        if handle.rng_state is not None:
+            rng = np.random.default_rng(handle.seed)
+            rng.bit_generator.state = handle.rng_state
+            self.engine._rngs[req.req_id] = rng
+
+    def thaw(self, handle: SessionHandle,
+             suffix_tokens: Optional[List[int]] = None, *,
+             max_new_tokens: Optional[int] = None) -> Request:
+        """Resume a frozen session in this engine.
+
+        Without a suffix the request re-enters decode exactly where it
+        froze: output restarts at ``[next_token]`` and the first decode
+        step feeds it at position ``n_ctx`` — greedy resume is
+        token-identical to never freezing
+        (``frozen.output_tokens[:-1] + thawed.output_tokens``).  With
+        ``suffix_tokens`` (the next user turn), the pending ``next_token``
+        plus the suffix run through the paged selective prefill at
+        positions ``n_ctx..`` and the response starts after the suffix —
+        thaw-TTFT is one bucketed prefill over the *suffix only*, never a
+        full-context recompute.
+        """
+        self._require_paged()
+        eng = self.engine
+        pool = self._check_pool(handle)
+        snap = self._fetch_snapshot(handle)
+        self._salts.setdefault(handle.session_id, handle.cache_salt)
+        # adopt the handle: a host that thaws a session it did not freeze
+        # (resume-anywhere) must still report it via GET /sessions — after
+        # a failover the freezer's in-memory registry is gone
+        self.handles.setdefault(handle.session_id, handle)
+
+        suffix = list(suffix_tokens or [])
+        eff = [handle.next_token] + suffix
+        total = handle.n_ctx + len(eff) if suffix else handle.n_ctx
+        assert total + 1 < eng.cfg.max_seq_len, \
+            "thawed session exceeds slot kv region"
+
+        budget = (max_new_tokens if max_new_tokens is not None
+                  else handle.remaining_tokens)
+        prompt = Prompt([text_segment(eff)] if suffix else [],
+                        user_id=handle.user_id)
+        req = Request(prompt=prompt, max_new_tokens=budget,
+                      seed=handle.seed, session_id=handle.session_id)
+        # globally unique id: the counter-based default collides across
+        # processes (a fleet host thawing a session restarts its counter)
+        req.req_id = (f"{handle.session_id}:thaw:"
+                      f"{os.urandom(4).hex()}")
+        self._admit_slot(req, total + 1)
+        pool.adopt_session(eng._page_tables[req.slot], snap,
+                           eng._scratch_page)
+        self._restore_rng(req, handle)
+
+        now = time.perf_counter()
+        req.t_admitted = now
+        if suffix:
+            if eng._prefiller is None:
+                raise RuntimeError(
+                    "thaw with a suffix requires the paged prefill path "
+                    "(EngineConfig.paged_prefill=True)")
+            link = session_suffix_link(eff, handle.n_ctx,
+                                       eng.model.cfg.d_model)
+            logits = eng._prefiller.prefill(eng.params, link,
+                                            eng._page_tables[req.slot])
+            first = eng._select_token(req, np.asarray(logits, np.float32))
+            req.output_tokens = [first]
+            req.cur_len = total
+            req.prefill_stats = {"thawed": True, "n_reused": link.n_reused,
+                                 "n_recomputed": link.n_recomputed}
+        else:
+            req.output_tokens = [handle.next_token]
+            req.cur_len = handle.n_ctx
+            req.prefill_stats = {"thawed": True, "n_reused": handle.n_ctx,
+                                 "n_recomputed": 0}
+        req.state = State.RUNNING
+        req.t_first_token = time.perf_counter()
+        self._lib.note_session(thaws=1)
+        return req
+
+    # -- fork --------------------------------------------------------------
+    def fork(self, handle: SessionHandle, n: int, *,
+             max_new_tokens: Optional[int] = None) -> List[Request]:
+        """Thaw one snapshot into ``n`` children sharing the same pages.
+
+        The snapshot is materialized into pool pages ONCE (under a
+        temporary owner), every child registers as a co-owner via page
+        refcounts, and the temporary hold is dropped — so a fork of N
+        children allocates zero pages beyond the single parent footprint.
+        The first write a child makes into a still-shared page triggers
+        one copy-on-write page duplication in the decode step
+        (``pool.make_exclusive``); until then all N children read the
+        same bytes.  Each child gets a distinct seed (``handle.seed + i``)
+        so sampled branches diverge; greedy children stay identical until
+        their inputs do.  Counts ``forks=n`` in the session census.
+        """
+        self._require_paged()
+        if n < 1:
+            raise ValueError("fork: need n >= 1 children")
+        eng = self.engine
+        pool = self._check_pool(handle)
+        free_slots = sum(1 for r in eng.running if r is None)
+        if free_slots < n:
+            raise RuntimeError(
+                f"fork: {n} children need {n} free slots, have {free_slots}")
+        snap = self._fetch_snapshot(handle)
+
+        n_tokens = handle.n_ctx + 1
+        tmp = f"__fork__::{handle.session_id}::{os.urandom(3).hex()}"
+        pages = pool.alloc(tmp, n_tokens)
+        if pages is None:
+            raise RuntimeError("fork: paged pool cannot hold the session")
+        pool.adopt_session(pages, snap, eng._scratch_page)
+
+        budget = (max_new_tokens if max_new_tokens is not None
+                  else handle.remaining_tokens)
+        children: List[Request] = []
+        for i in range(n):
+            sid = f"{handle.session_id}.{i}"
+            req = Request(prompt=Prompt([], user_id=handle.user_id),
+                          max_new_tokens=budget, seed=handle.seed + i,
+                          session_id=sid)
+            req.req_id = f"{sid}:fork:{os.urandom(4).hex()}"
+            children.append(req)
+        pool.fork(tmp, [r.req_id for r in children])
+        pool.free(tmp)      # children keep the pages alive (ref = n)
+
+        now = time.perf_counter()
+        for req in children:
+            slot = self.engine._free_slot()
+            assert slot >= 0, "checked free_slots above"
+            req.slot = slot
+            eng.running[slot] = req
+            eng._set_page_row(slot, np.asarray(pool._owned[req.req_id],
+                                               np.int32))
+            req.output_tokens = [handle.next_token]
+            req.cur_len = handle.n_ctx
+            req.state = State.RUNNING
+            req.t_admitted = req.t_first_token = now
+            req.prefill_stats = {"forked_from": handle.session_id,
+                                 "n_reused": handle.n_ctx}
+        self._lib.note_session(forks=n)
+        return children
+
+    # -- idle eviction -----------------------------------------------------
+    def sweep_idle(self, max_idle_s: float) -> int:
+        """Demote frozen snapshots idle longer than ``max_idle_s`` to the
+        disk tier (``KVLibrary.spool_now``) — the
+        ``EngineConfig.freeze_idle_s`` hook the engine runs every step.
+        Thawing a swept session transparently reads the spool file (or a
+        peer) back; returns the number of snapshots demoted this call."""
+        now = time.time()
+        demoted = 0
+        for sid, h in self.handles.items():
+            if sid in self._spooled or now - h.frozen_at <= max_idle_s:
+                continue
+            if self._lib.spool_now(h.user_id, h.media_id):
+                self._spooled.add(sid)
+                demoted += 1
+        return demoted
+
+    def stats(self) -> dict:
+        """Live handle census (the event counters live in the library)."""
+        return {"frozen_handles": len(self.handles),
+                "spooled_handles": len(self._spooled)}

@@ -119,6 +119,62 @@ class TestBackendContract:
         assert backend.contains(ka)
 
 
+def test_session_salt_isolates_identical_kv(tmp_path):
+    """Two sessions freezing byte-identical KV must land under DISTINCT
+    keys (the per-session ``cache_salt`` is part of both the content key
+    and the wire ident), and neither the local get path nor a peer's
+    block protocol can cross the salt boundary."""
+    from repro.cache.backends import scope_digest
+
+    p = _payload(12)
+    ka = content_key(p, ("u", "sess"), salt="salt-a")
+    kb = content_key(p, ("u", "sess"), salt="salt-b")
+    assert len({ka, kb, content_key(p, ("u", "sess"))}) == 3
+    assert scope_digest(("u", "sess"), "salt-a") \
+        != scope_digest(("u", "sess"), "salt-b")
+    # no salt → the legacy digest, bit-identical (media keys unchanged)
+    assert scope_digest(("u", "sess"), None) == scope_digest(("u", "sess"))
+
+    src = KVLibrary(spool_dir=str(tmp_path / "src"))
+    k = np.random.default_rng(5).standard_normal((1, 8, 2, 8)) \
+        .astype(np.float32)
+    ea = src.put("u", "sess-a", k, k + 1, salt="salt-a")
+    eb = src.put("u", "sess-b", k, k + 1, salt="salt-b")
+    assert ea.meta.key != eb.meta.key          # same bytes, distinct keys
+    assert src.get("u", "sess-a", salt="wrong") is None   # local miss
+    assert src.get("u", "sess-a") is None                 # unsalted miss
+    assert src.get("u", "sess-a", salt="salt-a") is not None
+
+    server = KVPeerServer(src)
+    try:
+        dst = KVLibrary(spool_dir=str(tmp_path / "dst"),
+                        peers=[server.address])
+        # wrong scope over the wire: the salted ident IS the address, so
+        # a peer probing with the wrong salt misses outright
+        assert dst.get("u", "sess-a", salt="salt-b") is None
+        assert dst.get("u", "sess-a") is None
+        got = dst.get("u", "sess-a", salt="salt-a")
+        assert got is not None
+        np.testing.assert_array_equal(got.k, k)
+    finally:
+        server.close()
+
+
+def test_session_salt_survives_spool_rehydration(tmp_path):
+    """The salt rides the spool sidecar: a restarted library rehydrates
+    a salted entry and still enforces the salt boundary."""
+    lib = KVLibrary(spool_dir=str(tmp_path))
+    k = np.full((1, 8, 2, 8), 3.0, np.float32)
+    lib.put("u", "sess", k, k, salt="s1")
+    assert lib.spool_now("u", "sess")
+    lib2 = KVLibrary(spool_dir=str(tmp_path), rehydrate=True)
+    assert lib2.rehydrate_stats["rehydrated"] == 1
+    assert lib2.get("u", "sess") is None           # unsalted: still a miss
+    got = lib2.get("u", "sess", salt="s1")
+    assert got is not None
+    np.testing.assert_array_equal(got.k, k)
+
+
 def test_wire_format_roundtrip():
     p = _payload(7)
     got = payload_from_bytes(payload_to_bytes(p))

@@ -32,7 +32,8 @@ def test_serve_cli_help_smoke():
     # the network-tier and fault-tolerance flags the README/ARCHITECTURE
     # document must exist
     for flag in ("--peers", "--serve-blocks", "--replicas", "--router",
-                 "--deadline-s", "--fault-plan", "--fault-seed", "--fleet"):
+                 "--deadline-s", "--fault-plan", "--fault-seed", "--fleet",
+                 "--freeze-idle-s"):
         assert flag in proc.stdout, f"{flag} missing from serve --help"
 
 
@@ -126,9 +127,47 @@ def test_architecture_doc_covers_deployment_topology(arch_text):
     # the control-plane endpoints in the diagram are the ones served
     src = inspect.getsource(fleet)
     for ep in ("/health", "/submit", "/upload", "/results", "/drain",
-               "/shutdown"):
+               "/shutdown", "/freeze", "/thaw", "/sessions"):
         assert f'"{ep}"' in src, f"fleet ctrl endpoint {ep} gone"
         assert ep in arch_text, f"endpoint {ep} missing from ARCHITECTURE.md"
+
+
+def test_architecture_doc_covers_session_lifecycle(arch_text):
+    """The 'Session lifecycle' section must keep naming the implemented
+    freeze/thaw/fork surface: the state machine, the CoW rules, the
+    salted key space, the idle sweep, and the fleet resume plumbing."""
+    assert "## Session lifecycle" in arch_text
+    import inspect
+
+    from repro.cache.paged import PagedKVPool
+    from repro.serving import EngineConfig, MPICEngine
+    from repro.serving.sessions import SessionHandle, SessionStore
+
+    # the documented surface exists...
+    for name in ("freeze", "thaw", "fork"):
+        assert hasattr(SessionStore, name) and hasattr(MPICEngine, name)
+    assert "spool" in inspect.signature(SessionStore.freeze).parameters
+    p = inspect.signature(SessionStore.thaw).parameters
+    assert "suffix_tokens" in p and "max_new_tokens" in p
+    assert "n" in inspect.signature(SessionStore.fork).parameters
+    assert hasattr(SessionStore, "sweep_idle")
+    assert hasattr(PagedKVPool, "make_exclusive")
+    assert "freeze_idle_s" in inspect.signature(EngineConfig).parameters
+    for f in ("session_id", "cache_salt", "n_ctx", "next_token",
+              "pool_dtype"):
+        assert f in {x.name for x in
+                     __import__("dataclasses").fields(SessionHandle)}
+    # ...and the doc names every piece of it
+    for claim in ("SessionStore", "SessionHandle", "State.FROZEN",
+                  "cache_salt", "make_exclusive", "cow_copies",
+                  "pages_shared", "spool_now", "sweep_idle",
+                  "freeze_idle_s", "--freeze-idle-s", "next_token",
+                  "freeze_after", "n_reused", "LookupError",
+                  "fig_session_resume"):
+        assert claim in arch_text, f"{claim!r} missing from ARCHITECTURE.md"
+    for ctr in ("freezes", "thaws", "forks"):
+        assert f"`{ctr}`" in arch_text, \
+            f"session counter {ctr!r} missing from ARCHITECTURE.md"
 
 
 def test_architecture_doc_covers_quantized_pool(arch_text):

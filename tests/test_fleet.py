@@ -143,6 +143,82 @@ def test_fleet_smoke_kill_one_host_drain_completes(tmp_path):
         fleet.stop()
 
 
+@pytest.mark.slow
+@pytest.mark.timeout(560)
+def test_fleet_freeze_on_a_kill_a_thaw_on_b(tmp_path):
+    """Session resume-anywhere across a host death: a session frozen
+    (and spooled) on host A survives ``kill -9`` of A — the restarted A
+    rehydrates the snapshot from its spool dir, and a thaw on host B
+    pulls it over the peer block protocol.  The resumed output must be
+    token-identical to a session that was never interrupted."""
+    import time
+
+    r = np.random.default_rng(7)
+    toks = r.integers(8, 200, 12)
+
+    def mk(**kw):
+        return Request(prompt=Prompt([text_segment(toks)], user_id="u1"),
+                       max_new_tokens=8, policy="full_recompute", seed=5,
+                       **kw)
+
+    fleet = FleetSupervisor(2, base_dir=str(tmp_path), slots=2,
+                            heartbeat_s=0.2, miss_threshold=3,
+                            linger_s=30.0)
+    try:
+        fleet.start()
+        # unkilled baseline on host B
+        base = mk()
+        fleet.submit(base, host=1)
+        fleet.run_until_done(timeout_s=240)
+        base_toks = fleet.results[base.req_id]["tokens"]
+
+        # freeze_after on host A: the host freezes + spools mid-decode
+        # and reports a terminal "frozen" row carrying the handle
+        fz = mk(freeze_after=4)
+        fleet.submit(fz, host=0)
+        fleet.run_until_done(timeout_s=240)
+        row = fleet.results[fz.req_id]
+        assert row["state"] == "frozen", row
+        handle = row["session"]
+        assert handle and handle["session_id"].startswith("sess-")
+        assert handle["cache_salt"] and handle["n_ctx"] == 15
+        # the freeze counter aggregates while A is still alive (its
+        # in-process counters die with it below; the snapshot does not)
+        fleet.heartbeat()
+        assert fleet.report().get("sessions", {}).get("freezes", 0) >= 1
+
+        # kill -9 host A; the supervisor detects the death and respawns
+        # it with the same spool dir — the snapshot rehydrates from disk
+        fleet.kill_host(0)
+        deadline = time.monotonic() + 240
+        while fleet.deaths == 0 and time.monotonic() < deadline:
+            fleet.pump()
+            time.sleep(0.05)
+        assert fleet.deaths == 1, "the murder was never detected"
+        fleet.wait_healthy([0], timeout_s=240)
+        stats = (fleet._host(0).health or {}).get("rehydrate", {})
+        assert stats.get("rehydrated", 0) > 0, stats
+
+        # resume on host B: it never held the snapshot — the thaw's
+        # library get falls through to the network tier and pulls the
+        # block from the restarted A
+        rid = fleet.thaw(1, handle)
+        fleet.run_until_done(timeout_s=240)
+        th = fleet.results[rid]
+        assert th["state"] == "done" and th["host"] == 1, th
+        assert row["tokens"][:-1] + th["tokens"] == base_toks
+
+        # fleet-wide session visibility + aggregated counters
+        assert handle["session_id"] in fleet.session_handles()
+        fleet.heartbeat()
+        rep = fleet.report()
+        assert rep["frozen"] == 1
+        assert rep.get("sessions", {}).get("thaws", 0) >= 1
+        fleet.drain(timeout_s=120)
+    finally:
+        fleet.stop()
+
+
 @pytest.mark.timeout(300)
 def test_fleet_single_host_serves_and_drains(tmp_path):
     """1-host fleet: the degenerate topology must still serve + drain
